@@ -1,0 +1,75 @@
+//! Data-placement ablation (paper §IV-C2, Table IV): virtual groups +
+//! local data hubs on the GAGE workload, placement on vs off across
+//! cache sizes.
+//!
+//! ```sh
+//! cargo run --release --example placement_study
+//! ```
+
+use obsd::cache::policy::PolicyKind;
+use obsd::coordinator::{run, SimConfig};
+use obsd::prefetch::Strategy;
+use obsd::trace::{generator, presets};
+use obsd::util::table::Table;
+
+fn main() {
+    let mut preset = presets::gage();
+    preset.duration_days = 7.0;
+    let trace = generator::generate(&preset);
+    println!(
+        "GAGE workload: {} users / {} requests over {:.0} days\n",
+        trace.users.len(),
+        trace.requests.len(),
+        trace.duration / 86_400.0
+    );
+
+    let mut t = Table::new("Data placement strategy ablation (HPM, LRU)").header(&[
+        "Cache/DTN",
+        "Peer thrpt W/O DP",
+        "Peer thrpt W/ DP",
+        "Peer improv.",
+        "Total thrpt W/O DP",
+        "Total thrpt W/ DP",
+        "Replicated",
+        "Groups engaged",
+    ]);
+    for gb in [0.25f64, 0.5, 1.0, 2.0] {
+        let size = (gb * (1u64 << 30) as f64) as u64;
+        let mk = |placement: bool| {
+            run(
+                &trace,
+                &SimConfig {
+                    strategy: Strategy::Hpm,
+                    policy: PolicyKind::Lru,
+                    cache_bytes: size,
+                    placement,
+                    ..Default::default()
+                },
+            )
+        };
+        let wo = mk(false);
+        let w = mk(true);
+        let peer_wo = obsd::util::bytes_per_sec_to_mbps(wo.peer_throughput.mean());
+        let peer_w = obsd::util::bytes_per_sec_to_mbps(w.peer_throughput.mean());
+        t.row(vec![
+            format!("{gb} GB"),
+            format!("{peer_wo:.1} Mbps"),
+            format!("{peer_w:.1} Mbps"),
+            if peer_wo > 0.0 {
+                format!("{:+.1}%", (peer_w / peer_wo - 1.0) * 100.0)
+            } else {
+                "n/a".into()
+            },
+            format!("{:.1} Mbps", wo.throughput_mbps()),
+            format!("{:.1} Mbps", w.throughput_mbps()),
+            obsd::util::fmt_bytes(w.placement_bytes),
+            format!("{}", (w.placement_bytes > 0.0) as u8),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "The hub replication concentrates each virtual group's hot data on\n\
+         the best-connected DTN (eq. 2, θ_p=0.6 θ_u=0.2 θ_f=0.2), which lifts\n\
+         peer-retrieval throughput — the effect the paper quantifies in Table IV."
+    );
+}

@@ -1,0 +1,77 @@
+//! Quickstart: generate a small synthetic observatory trace, run the
+//! push-based delivery framework against the No-Cache baseline, and
+//! print the headline metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use obsd::cache::policy::PolicyKind;
+use obsd::coordinator::{run, SimConfig};
+use obsd::prefetch::Strategy;
+use obsd::trace::{generator, presets};
+
+fn main() {
+    // 1. A small OOI-like trace: ~40 users, one day of requests.
+    let preset = presets::tiny();
+    let trace = generator::generate(&preset);
+    println!(
+        "trace: {} streams, {} users, {} requests over {:.1} h",
+        trace.streams.len(),
+        trace.users.len(),
+        trace.requests.len(),
+        trace.duration / 3600.0
+    );
+
+    // 2. Run the baseline and the framework.
+    let base_cfg = SimConfig {
+        strategy: Strategy::NoCache,
+        ..Default::default()
+    };
+    let hpm_cfg = SimConfig {
+        strategy: Strategy::Hpm,
+        policy: PolicyKind::Lru,
+        cache_bytes: 2 << 30, // 2 GB per client DTN
+        ..Default::default()
+    };
+    let base = run(&trace, &base_cfg);
+    let hpm = run(&trace, &hpm_cfg);
+
+    // 3. Compare.
+    println!("\n                         No Cache        HPM framework");
+    println!(
+        "throughput (Mbps)    {:>12.2} {:>17.2}",
+        base.throughput_mbps(),
+        hpm.throughput_mbps()
+    );
+    println!(
+        "queue latency (s)    {:>12.4} {:>17.4}",
+        base.latency_secs(),
+        hpm.latency_secs()
+    );
+    println!(
+        "origin requests      {:>12.1}% {:>16.1}%",
+        base.origin_fraction() * 100.0,
+        hpm.origin_fraction() * 100.0
+    );
+    println!(
+        "origin traffic       {:>12} {:>17}",
+        obsd::util::fmt_bytes(base.origin_bytes),
+        obsd::util::fmt_bytes(hpm.origin_bytes)
+    );
+    let (c, p) = hpm.local_fractions();
+    println!(
+        "\nHPM served {:.1}% of requests from the user's local DTN
+  ({:.1}% previously cached + {:.1}% proactively pre-fetched/streamed),
+  with pre-fetch recall {:.2}.",
+        (c + p) * 100.0,
+        c * 100.0,
+        p * 100.0,
+        hpm.recall
+    );
+    println!(
+        "speedup vs current delivery: {:.0}x throughput, {:.1}% origin-traffic reduction",
+        hpm.throughput_mbps() / base.throughput_mbps().max(1e-9),
+        hpm.traffic_reduction_vs(base.origin_bytes) * 100.0
+    );
+}

@@ -1,0 +1,134 @@
+"""AOT bridge: lower the Layer-2 JAX models to HLO text artifacts.
+
+Runs once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles on the PJRT CPU
+client.  HLO *text* — NOT ``.serialize()`` — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Also emits ``manifest.json`` describing every artifact's inputs/outputs
+and the baked batch constants so the Rust side can assert compatibility
+at load time instead of failing mid-simulation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"dtype": dtype, "shape": list(shape)}
+
+
+def build_specs():
+    """Model registry: entry fn, example shapes, manifest metadata."""
+    f32 = jnp.float32
+    return {
+        "predictor": {
+            "fn": model.predictor_entry,
+            "args": [jax.ShapeDtypeStruct((model.PRED_BATCH, model.PRED_WINDOW), f32)],
+            "inputs": [_spec((model.PRED_BATCH, model.PRED_WINDOW))],
+            "outputs": [
+                _spec((model.PRED_BATCH,)),
+                _spec((model.PRED_BATCH, model.AR_ORDER)),
+                _spec((model.PRED_BATCH,)),
+            ],
+            "consts": {
+                "batch": model.PRED_BATCH,
+                "window": model.PRED_WINDOW,
+                "order": model.AR_ORDER,
+            },
+        },
+        "kmeans": {
+            "fn": model.kmeans_entry,
+            "args": [
+                jax.ShapeDtypeStruct((model.KM_POINTS, model.KM_DIM), f32),
+                jax.ShapeDtypeStruct((model.KM_POINTS,), f32),
+                jax.ShapeDtypeStruct((model.KM_CLUSTERS, model.KM_DIM), f32),
+            ],
+            "inputs": [
+                _spec((model.KM_POINTS, model.KM_DIM)),
+                _spec((model.KM_POINTS,)),
+                _spec((model.KM_CLUSTERS, model.KM_DIM)),
+            ],
+            "outputs": [
+                _spec((model.KM_CLUSTERS, model.KM_DIM)),
+                _spec((model.KM_POINTS,), "s32"),
+                _spec(()),
+            ],
+            "consts": {
+                "points": model.KM_POINTS,
+                "dim": model.KM_DIM,
+                "clusters": model.KM_CLUSTERS,
+            },
+        },
+        "stream_stats": {
+            "fn": model.stream_entry,
+            "args": [jax.ShapeDtypeStruct((model.STREAM_BATCH, model.STREAM_WINDOW), f32)],
+            "inputs": [_spec((model.STREAM_BATCH, model.STREAM_WINDOW))],
+            "outputs": [_spec((model.STREAM_BATCH, 3))],
+            "consts": {
+                "batch": model.STREAM_BATCH,
+                "window": model.STREAM_WINDOW,
+                "alpha": model.STREAM_ALPHA,
+            },
+        },
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out",
+        default="../artifacts/model.hlo.txt",
+        help="path of the stamp artifact; siblings are written next to it",
+    )
+    args = parser.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": MANIFEST_VERSION, "models": {}}
+    for name, spec in build_specs().items():
+        lowered = jax.jit(spec["fn"]).lower(*spec["args"])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["models"][name] = {
+            "file": fname,
+            "inputs": spec["inputs"],
+            "outputs": spec["outputs"],
+            "consts": spec["consts"],
+        }
+        print(f"aot: wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Stamp file so make's dependency tracking has a single target.
+    with open(os.path.abspath(args.out), "w") as f:
+        f.write("// stamp: see manifest.json for per-model artifacts\n")
+    print(f"aot: wrote manifest.json in {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

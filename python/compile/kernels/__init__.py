@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels for the observatory data-delivery framework.
+
+Three kernels back the framework's prediction hot paths:
+
+* :mod:`autocorr`  — batched mean-centered autocorrelation (Yule-Walker
+  front-end for the history-based ARIMA predictor, paper §IV-A2).
+* :mod:`pdist`     — tiled squared-Euclidean distance matrix (K-Means
+  assignment for virtual-group clustering, paper §IV-C2).
+* :mod:`ewma`      — batched EWMA / jitter statistics over request
+  inter-arrival windows (streaming mechanism cadence, paper §IV-B).
+
+All kernels are lowered with ``interpret=True`` so the resulting HLO runs
+on the CPU PJRT client used by the Rust runtime; see DESIGN.md
+§Hardware-Adaptation for the TPU mapping rationale.
+
+:mod:`ref` holds the pure-``jnp`` oracles used by the pytest suite.
+"""
+
+from .autocorr import batched_autocorr
+from .pdist import pairwise_sqdist
+from .ewma import ewma_stats
+
+__all__ = ["batched_autocorr", "pairwise_sqdist", "ewma_stats"]

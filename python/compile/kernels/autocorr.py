@@ -1,0 +1,74 @@
+"""Batched mean-centered autocorrelation Pallas kernel.
+
+This is the Yule-Walker front-end of the history-based predictor
+(paper §IV-A2): for every user's window of ``n`` recent inter-arrival
+gaps we need the first ``p+1`` autocorrelation lags of the (differenced)
+series.  On TPU this is the natural batched formulation of the paper's
+per-user ARIMA fit — one device call covers a whole fleet of program
+users instead of one statsmodels fit per user.
+
+Kernel layout (see DESIGN.md §Hardware-Adaptation):
+
+* grid over batch-row blocks; each block holds ``block_b`` full rows in
+  VMEM (``block_b * n * 4`` bytes, ≤ 4 MiB for every shipped shape);
+* the ``p+1`` lags are unrolled statically, each lag a VPU
+  multiply-reduce over contiguous slices — no gathers, no transposes;
+* mean-centering is fused into the block (one pass, rank-preserving).
+
+Outputs the *biased* estimator ``r[b,k] = (1/n)·Σ_t x̃[b,t]·x̃[b,t+k]``
+(biased keeps the Toeplitz system positive-definite, which the
+Levinson-Durbin recursion in Layer 2 relies on).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _autocorr_kernel(x_ref, o_ref, *, n: int, num_lags: int):
+    """Compute ``num_lags`` autocorrelation lags for one row block."""
+    x = x_ref[...]  # [block_b, n]
+    mean = jnp.mean(x, axis=1, keepdims=True)
+    xc = x - mean
+    inv_n = 1.0 / n
+    # Static unroll over lags: each lag is a contiguous-slice product,
+    # which the VPU vectorizes without any data movement.
+    for k in range(num_lags):
+        if k == 0:
+            prod = xc * xc
+        else:
+            prod = xc[:, : n - k] * xc[:, k:]
+        o_ref[:, k] = jnp.sum(prod, axis=1) * inv_n
+
+
+@functools.partial(jax.jit, static_argnames=("num_lags", "block_b"))
+def batched_autocorr(x: jax.Array, *, num_lags: int, block_b: int = 8) -> jax.Array:
+    """Batched autocorrelation ``r[b, k]`` for ``k in [0, num_lags)``.
+
+    Args:
+        x: ``f32[B, N]`` batch of series (rows are independent users).
+        num_lags: number of lags to emit (``p + 1`` for an AR(p) fit).
+        block_b: rows per VMEM block; must divide ``B``.
+
+    Returns:
+        ``f32[B, num_lags]`` biased autocorrelation estimates.
+    """
+    b, n = x.shape
+    if num_lags > n:
+        raise ValueError(f"num_lags={num_lags} exceeds series length {n}")
+    if b % block_b != 0:
+        # Fall back to a single block covering the (padded) batch.
+        block_b = b
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_autocorr_kernel, n=n, num_lags=num_lags),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, num_lags), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, num_lags), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x)

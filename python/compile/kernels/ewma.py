@@ -1,0 +1,65 @@
+"""Batched EWMA / jitter statistics Pallas kernel.
+
+The streaming mechanism (paper §IV-B) turns high-frequency *real-time*
+requests into server-side push subscriptions.  To pace pushes it needs,
+per subscribed user, a smoothed estimate of the request inter-arrival
+gap (EWMA), the implied request rate, and the jitter (std-dev of gaps).
+One kernel call covers a whole batch of subscription windows.
+
+The EWMA recurrence is sequential in the window dimension, so the kernel
+carries it with a ``lax.fori_loop`` over columns while the batch
+dimension stays fully vectorized — the classic scan-over-time /
+vector-over-batch TPU layout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ewma_kernel(x_ref, o_ref, *, w: int, alpha: float):
+    x = x_ref[...]  # [block_b, w]
+
+    def body(t, e):
+        return alpha * x[:, t] + (1.0 - alpha) * e
+
+    ewma = jax.lax.fori_loop(1, w, body, x[:, 0])
+    mean = jnp.mean(x, axis=1)
+    var = jnp.mean((x - mean[:, None]) ** 2, axis=1)
+    jitter = jnp.sqrt(var)
+    rate = 1.0 / jnp.maximum(mean, 1e-9)
+    o_ref[:, 0] = ewma
+    o_ref[:, 1] = rate
+    o_ref[:, 2] = jitter
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "block_b"))
+def ewma_stats(x: jax.Array, *, alpha: float = 0.3, block_b: int = 16) -> jax.Array:
+    """Per-row EWMA, rate and jitter of inter-arrival windows.
+
+    Args:
+        x: ``f32[B, W]`` batch of inter-arrival-gap windows (seconds).
+        alpha: EWMA smoothing factor in ``(0, 1]``.
+        block_b: rows per VMEM block; must divide ``B``.
+
+    Returns:
+        ``f32[B, 3]`` columns ``(ewma_gap, rate, jitter)``.
+    """
+    b, w = x.shape
+    if not 0.0 < alpha <= 1.0:
+        raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+    if b % block_b != 0:
+        block_b = b
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_ewma_kernel, w=w, alpha=alpha),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 3), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x)

@@ -1,0 +1,69 @@
+"""Tiled squared-Euclidean pairwise-distance Pallas kernel.
+
+K-Means assignment for virtual-group clustering (paper §IV-C2): every
+request-feature point must be compared against every candidate group
+centroid.  The kernel uses the matmul decomposition
+
+    d²(p, c) = ‖p‖² + ‖c‖² − 2·p·cᵀ
+
+so the dominant cost is a ``[block_n, D] × [D, K]`` contraction that maps
+onto the MXU systolic array (bf16-friendly), instead of the gather-heavy
+per-pair loop a CPU implementation would use.  The centroid block is
+small (``K×D``) and stays resident in VMEM across the whole grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pdist_kernel(p_ref, c_ref, o_ref):
+    p = p_ref[...]  # [block_n, d]
+    c = c_ref[...]  # [k, d]
+    pn = jnp.sum(p * p, axis=1, keepdims=True)  # [block_n, 1]
+    cn = jnp.sum(c * c, axis=1)[None, :]  # [1, k]
+    # MXU-shaped contraction; accumulate in f32 regardless of input dtype.
+    cross = jax.lax.dot_general(
+        p,
+        c,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # Clamp tiny negatives produced by cancellation.
+    o_ref[...] = jnp.maximum(pn + cn - 2.0 * cross, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def pairwise_sqdist(points: jax.Array, centroids: jax.Array, *, block_n: int = 128) -> jax.Array:
+    """Squared Euclidean distances between points and centroids.
+
+    Args:
+        points: ``f32[N, D]`` feature points (one per user / request group).
+        centroids: ``f32[K, D]`` cluster centroids.
+        block_n: point rows per VMEM block; must divide ``N``.
+
+    Returns:
+        ``f32[N, K]`` with ``out[i, j] = ‖points[i] − centroids[j]‖²``.
+    """
+    n, d = points.shape
+    k, d2 = centroids.shape
+    if d != d2:
+        raise ValueError(f"dimension mismatch: points D={d}, centroids D={d2}")
+    if n % block_n != 0:
+        block_n = n
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _pdist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # centroids VMEM-resident
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(points, centroids)

@@ -1,0 +1,43 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Every kernel in this package has an oracle here with the same contract;
+the pytest suite (and hypothesis sweeps) assert ``allclose`` between the
+two across shapes and dtypes.  These are also the implementations the
+Layer-2 model falls back to in unit tests that bypass Pallas.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batched_autocorr_ref(x: jax.Array, *, num_lags: int) -> jax.Array:
+    """Biased mean-centered autocorrelation, ``f32[B, num_lags]``."""
+    _, n = x.shape
+    xc = x - jnp.mean(x, axis=1, keepdims=True)
+    cols = []
+    for k in range(num_lags):
+        if k == 0:
+            cols.append(jnp.sum(xc * xc, axis=1) / n)
+        else:
+            cols.append(jnp.sum(xc[:, : n - k] * xc[:, k:], axis=1) / n)
+    return jnp.stack(cols, axis=1)
+
+
+def pairwise_sqdist_ref(points: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Direct ``‖p−c‖²`` expansion, ``f32[N, K]``."""
+    diff = points[:, None, :] - centroids[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def ewma_stats_ref(x: jax.Array, *, alpha: float = 0.3) -> jax.Array:
+    """Sequential EWMA + rate + jitter, ``f32[B, 3]``."""
+    _, w = x.shape
+    e = x[:, 0]
+    for t in range(1, w):
+        e = alpha * x[:, t] + (1.0 - alpha) * e
+    mean = jnp.mean(x, axis=1)
+    jitter = jnp.sqrt(jnp.mean((x - mean[:, None]) ** 2, axis=1))
+    rate = 1.0 / jnp.maximum(mean, 1e-9)
+    return jnp.stack([e, rate, jitter], axis=1)

@@ -1,0 +1,151 @@
+"""Layer-2 JAX models for the push-based data delivery framework.
+
+Three AOT-compiled computations, each calling a Layer-1 Pallas kernel:
+
+* :func:`ar_predictor` — the paper's history-based ARIMA predictor
+  (§IV-A2) recast as a *batched* Yule-Walker AR(p) fit on the
+  first-differenced inter-arrival series (i.e. ARIMA(p,1,0)).  One device
+  call forecasts the next request gap for a whole fleet of program users.
+* :func:`kmeans_step` — one Lloyd iteration for virtual-group clustering
+  (§IV-C2): Pallas pairwise distances → weighted assignment → masked
+  centroid update with an empty-cluster guard.
+* :func:`stream_stats` — batched EWMA/rate/jitter over subscription
+  windows for the streaming mechanism (§IV-B).
+
+Shapes are fixed at AOT time (see :mod:`compile.aot`); the Rust runtime
+pads partial batches.  Everything here is traced once at build time and
+never imported on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import batched_autocorr, ewma_stats, pairwise_sqdist
+
+# Shipped AOT shapes — keep in sync with aot.MANIFEST and the Rust runtime.
+PRED_BATCH = 64  # program users per predictor call
+PRED_WINDOW = 60  # paper's n = 60 most recent points
+AR_ORDER = 8  # AR(p) order p
+
+KM_POINTS = 1024  # max users per clustering call
+KM_DIM = 4  # (geo_x, geo_y, interest, frequency)
+KM_CLUSTERS = 16  # virtual-group candidates
+
+STREAM_BATCH = 64  # subscriptions per stats call
+STREAM_WINDOW = 32  # inter-arrival gaps per subscription
+STREAM_ALPHA = 0.3  # EWMA smoothing
+
+_RIDGE = 1e-5  # Toeplitz nugget for constant / near-constant series
+
+
+def levinson_durbin(r: jax.Array, order: int) -> tuple[jax.Array, jax.Array]:
+    """Batched Levinson-Durbin recursion.
+
+    Solves the Yule-Walker system ``T(r)·phi = r[1:order+1]`` for every
+    batch row.  ``order`` is small and static, so the recursion is
+    unrolled at trace time (pure VPU element-wise work, batched over B).
+
+    Args:
+        r: ``f32[B, order+1]`` autocorrelation lags (lag 0 first).
+        order: AR order ``p``.
+
+    Returns:
+        ``(phi f32[B, order], sigma2 f32[B])`` — AR coefficients and the
+        innovation variance.
+    """
+    b = r.shape[0]
+    # Ridge keeps the recursion stable for constant series (r0 == 0).
+    e = r[:, 0] + _RIDGE
+    a: list[jax.Array] = []  # a[j] : f32[B], coefficient j+1
+    for m in range(1, order + 1):
+        acc = r[:, m]
+        for j in range(1, m):
+            acc = acc - a[j - 1] * r[:, m - j]
+        k = acc / e
+        new_a = [a[j - 1] - k * a[m - j - 1] for j in range(1, m)]
+        new_a.append(k)
+        a = new_a
+        e = e * (1.0 - k * k)
+    phi = jnp.stack(a, axis=1) if a else jnp.zeros((b, 0), r.dtype)
+    return phi, e
+
+
+def ar_predictor(x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Forecast the next inter-arrival gap for a batch of users.
+
+    Implements the paper's "predict ``ts_{i+1}``" step: given each user's
+    ``n`` most recent request gaps, fit AR(p) on the first-differenced
+    series via the Pallas autocorrelation kernel + Levinson-Durbin, then
+    forecast one step ahead.
+
+    Args:
+        x: ``f32[B, N]`` inter-arrival gaps, oldest first (seconds).
+
+    Returns:
+        ``(next_gap f32[B], phi f32[B, P], sigma2 f32[B])``.
+    """
+    # ARIMA d=1: difference the gap series.
+    dx = x[:, 1:] - x[:, :-1]  # [B, N-1]
+    r = batched_autocorr(dx, num_lags=AR_ORDER + 1)  # [B, P+1]  (Pallas)
+    phi, sigma2 = levinson_durbin(r, AR_ORDER)
+    # One-step forecast of the next difference: most recent lags first.
+    recent = dx[:, -1 : -(AR_ORDER + 1) : -1]  # [B, P], dx[-1], dx[-2], ...
+    dnext = jnp.sum(phi * recent, axis=1)
+    next_gap = jnp.maximum(x[:, -1] + dnext, 1e-3)
+    return next_gap, phi, sigma2
+
+
+def kmeans_step(
+    points: jax.Array, weights: jax.Array, centroids: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One weighted Lloyd iteration for virtual-group clustering.
+
+    Args:
+        points: ``f32[N, D]`` user features ``(geo_x, geo_y, interest, freq)``.
+        weights: ``f32[N]`` sample weights; 0 marks padding rows.
+        centroids: ``f32[K, D]`` current centroids.
+
+    Returns:
+        ``(new_centroids f32[K, D], assign i32[N], inertia f32[])``.
+    """
+    d2 = pairwise_sqdist(points, centroids)  # [N, K]  (Pallas)
+    assign = jnp.argmin(d2, axis=1)
+    onehot = jax.nn.one_hot(assign, centroids.shape[0], dtype=points.dtype)
+    wo = onehot * weights[:, None]  # [N, K]
+    counts = jnp.sum(wo, axis=0)  # [K]
+    sums = wo.T @ points  # [K, D]
+    # Empty-cluster guard: keep the previous centroid.
+    new_centroids = jnp.where(
+        counts[:, None] > 0.0, sums / jnp.maximum(counts[:, None], 1e-9), centroids
+    )
+    inertia = jnp.sum(weights * jnp.min(d2, axis=1))
+    return new_centroids, assign.astype(jnp.int32), inertia
+
+
+def stream_stats(x: jax.Array) -> jax.Array:
+    """Batched EWMA/rate/jitter for streaming subscriptions.
+
+    Args:
+        x: ``f32[B, W]`` inter-arrival windows (seconds).
+
+    Returns:
+        ``f32[B, 3]`` columns ``(ewma_gap, rate, jitter)``.
+    """
+    return ewma_stats(x, alpha=STREAM_ALPHA)
+
+
+def predictor_entry(x):
+    """AOT entry point: returns a flat tuple (see aot.py)."""
+    return ar_predictor(x)
+
+
+def kmeans_entry(points, weights, centroids):
+    """AOT entry point: returns a flat tuple (see aot.py)."""
+    return kmeans_step(points, weights, centroids)
+
+
+def stream_entry(x):
+    """AOT entry point: returns a 1-tuple (see aot.py)."""
+    return (stream_stats(x),)

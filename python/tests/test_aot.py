@@ -1,0 +1,102 @@
+"""AOT pipeline tests: lowering produces parseable HLO text + manifest.
+
+These guard the interchange contract with the Rust runtime: HLO *text*
+(not serialized proto), ``return_tuple=True`` roots, and manifest shape
+metadata that matches the lowered computations.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def specs():
+    return aot.build_specs()
+
+
+class TestLowering:
+    def test_all_models_lower_to_hlo_text(self, specs):
+        for name, spec in specs.items():
+            lowered = jax.jit(spec["fn"]).lower(*spec["args"])
+            text = aot.to_hlo_text(lowered)
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_predictor_hlo_mentions_shapes(self, specs):
+        spec = specs["predictor"]
+        text = aot.to_hlo_text(jax.jit(spec["fn"]).lower(*spec["args"]))
+        assert f"f32[{model.PRED_BATCH},{model.PRED_WINDOW}]" in text
+
+    def test_no_custom_calls_in_hlo(self, specs):
+        """interpret=True must have erased every Pallas/Mosaic custom-call;
+        otherwise the CPU PJRT client in Rust cannot execute the artifact."""
+        for name, spec in specs.items():
+            text = aot.to_hlo_text(jax.jit(spec["fn"]).lower(*spec["args"]))
+            assert "custom-call" not in text.lower(), name
+
+
+class TestManifest:
+    def test_manifest_matches_specs(self, specs, tmp_path):
+        import subprocess
+        import sys
+
+        out = tmp_path / "model.hlo.txt"
+        env = dict(os.environ)
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", str(out)],
+            check=True,
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            env=env,
+        )
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["version"] == aot.MANIFEST_VERSION
+        assert set(manifest["models"]) == set(specs)
+        for name, entry in manifest["models"].items():
+            assert (tmp_path / entry["file"]).exists()
+            assert entry["inputs"] == specs[name]["inputs"]
+            assert entry["outputs"] == specs[name]["outputs"]
+        # Stamp artifact exists for make dependency tracking.
+        assert out.exists()
+
+    def test_manifest_consts_cover_runtime_needs(self, specs):
+        c = specs["predictor"]["consts"]
+        assert c == {
+            "batch": model.PRED_BATCH,
+            "window": model.PRED_WINDOW,
+            "order": model.AR_ORDER,
+        }
+        assert specs["kmeans"]["consts"]["clusters"] == model.KM_CLUSTERS
+
+
+class TestNumericalParityWithExecution:
+    """Execute the jitted entry fns on the example shapes — the same
+    numbers the Rust runtime will see through PJRT."""
+
+    def test_predictor_entry_executes(self):
+        x = jnp.full((model.PRED_BATCH, model.PRED_WINDOW), 1800.0, jnp.float32)
+        gap, phi, sigma2 = model.predictor_entry(x)
+        np.testing.assert_allclose(gap, 1800.0, rtol=1e-3)
+
+    def test_kmeans_entry_executes(self):
+        rng = np.random.RandomState(0)
+        pts = jnp.asarray(rng.rand(model.KM_POINTS, model.KM_DIM).astype(np.float32))
+        w = jnp.ones((model.KM_POINTS,), jnp.float32)
+        c = pts[: model.KM_CLUSTERS]
+        nc, assign, inertia = model.kmeans_entry(pts, w, c)
+        assert nc.shape == (model.KM_CLUSTERS, model.KM_DIM)
+        assert assign.dtype == jnp.int32
+        assert float(inertia) >= 0.0
+
+    def test_stream_entry_executes(self):
+        x = jnp.full((model.STREAM_BATCH, model.STREAM_WINDOW), 60.0, jnp.float32)
+        (out,) = model.stream_entry(x)
+        np.testing.assert_allclose(out[:, 1], 1.0 / 60.0, rtol=1e-5)

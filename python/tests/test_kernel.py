@@ -1,0 +1,181 @@
+"""Kernel vs pure-jnp oracle — the CORE correctness signal for Layer 1.
+
+Every Pallas kernel is checked against its ``ref.py`` oracle, both on
+fixed representative shapes and under hypothesis-driven shape/value
+sweeps (the hypothesis sweeps are the contract the Rust runtime relies
+on: any [B, N] within the lowered envelope must agree with the oracle).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import batched_autocorr, ewma_stats, pairwise_sqdist
+from compile.kernels.ref import (
+    batched_autocorr_ref,
+    ewma_stats_ref,
+    pairwise_sqdist_ref,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(shape, seed=0, lo=-5.0, hi=5.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# autocorr
+# ---------------------------------------------------------------------------
+
+
+class TestAutocorr:
+    @pytest.mark.parametrize("b,n,lags", [(1, 8, 2), (8, 59, 9), (64, 59, 9), (16, 128, 5)])
+    def test_matches_ref(self, b, n, lags):
+        x = rand((b, n), seed=b * 1000 + n)
+        got = batched_autocorr(x, num_lags=lags)
+        want = batched_autocorr_ref(x, num_lags=lags)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_lag0_is_variance(self):
+        x = rand((4, 100), seed=7)
+        r = batched_autocorr(x, num_lags=1)
+        var = jnp.var(x, axis=1)
+        np.testing.assert_allclose(r[:, 0], var, rtol=1e-5, atol=1e-6)
+
+    def test_constant_series_zero(self):
+        x = jnp.full((4, 32), 3.25, jnp.float32)
+        r = batched_autocorr(x, num_lags=4)
+        np.testing.assert_allclose(r, np.zeros((4, 4)), atol=1e-6)
+
+    def test_mean_invariance(self):
+        """Autocorrelation is invariant to a constant shift (mean-centered)."""
+        x = rand((4, 64), seed=3)
+        r1 = batched_autocorr(x, num_lags=5)
+        r2 = batched_autocorr(x + 1000.0, num_lags=5)
+        np.testing.assert_allclose(r1, r2, rtol=1e-3, atol=1e-2)
+
+    def test_block_split_invariance(self):
+        """Result must not depend on the batch blocking factor."""
+        x = rand((16, 40), seed=11)
+        a = batched_autocorr(x, num_lags=4, block_b=4)
+        b = batched_autocorr(x, num_lags=4, block_b=16)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_rejects_excess_lags(self):
+        with pytest.raises(ValueError, match="num_lags"):
+            batched_autocorr(rand((2, 4)), num_lags=5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 12),
+        n=st.integers(4, 80),
+        lags=st.integers(1, 4),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, b, n, lags, seed):
+        x = rand((b, n), seed=seed)
+        got = batched_autocorr(x, num_lags=min(lags, n))
+        want = batched_autocorr_ref(x, num_lags=min(lags, n))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pdist
+# ---------------------------------------------------------------------------
+
+
+class TestPairwiseSqdist:
+    @pytest.mark.parametrize("n,k,d", [(1, 1, 1), (128, 16, 4), (1024, 16, 4), (64, 3, 7)])
+    def test_matches_ref(self, n, k, d):
+        p = rand((n, d), seed=n + k)
+        c = rand((k, d), seed=n * k + d)
+        got = pairwise_sqdist(p, c)
+        want = pairwise_sqdist_ref(p, c)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_distance_on_identical(self):
+        p = rand((8, 4), seed=1)
+        d2 = pairwise_sqdist(p, p[:3])
+        for i in range(3):
+            assert d2[i, i] == pytest.approx(0.0, abs=1e-4)
+
+    def test_non_negative(self):
+        # Large magnitudes stress the ‖p‖²+‖c‖²−2pc cancellation.
+        p = rand((32, 4), seed=2, lo=900.0, hi=1000.0)
+        c = rand((8, 4), seed=3, lo=900.0, hi=1000.0)
+        assert bool(jnp.all(pairwise_sqdist(p, c) >= 0.0))
+
+    def test_dimension_mismatch_raises(self):
+        with pytest.raises(ValueError, match="dimension mismatch"):
+            pairwise_sqdist(rand((4, 3)), rand((2, 4)))
+
+    def test_block_split_invariance(self):
+        p = rand((64, 4), seed=5)
+        c = rand((8, 4), seed=6)
+        a = pairwise_sqdist(p, c, block_n=16)
+        b = pairwise_sqdist(p, c, block_n=64)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 64),
+        k=st.integers(1, 12),
+        d=st.integers(1, 8),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, n, k, d, seed):
+        p = rand((n, d), seed=seed)
+        c = rand((k, d), seed=seed + 1)
+        got = pairwise_sqdist(p, c)
+        want = pairwise_sqdist_ref(p, c)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ewma
+# ---------------------------------------------------------------------------
+
+
+class TestEwmaStats:
+    @pytest.mark.parametrize("b,w", [(1, 2), (16, 32), (64, 32), (7, 100)])
+    def test_matches_ref(self, b, w):
+        x = rand((b, w), seed=b + w, lo=0.1, hi=10.0)
+        got = ewma_stats(x, alpha=0.3)
+        want = ewma_stats_ref(x, alpha=0.3)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_constant_window(self):
+        """Constant gaps: ewma == gap, rate == 1/gap, jitter == 0."""
+        x = jnp.full((4, 16), 2.0, jnp.float32)
+        out = ewma_stats(x, alpha=0.5)
+        np.testing.assert_allclose(out[:, 0], 2.0, rtol=1e-6)
+        np.testing.assert_allclose(out[:, 1], 0.5, rtol=1e-6)
+        np.testing.assert_allclose(out[:, 2], 0.0, atol=1e-6)
+
+    def test_alpha_one_tracks_last(self):
+        x = rand((4, 8), seed=9, lo=0.5, hi=3.0)
+        out = ewma_stats(x, alpha=1.0)
+        np.testing.assert_allclose(out[:, 0], x[:, -1], rtol=1e-6)
+
+    def test_invalid_alpha_raises(self):
+        with pytest.raises(ValueError, match="alpha"):
+            ewma_stats(rand((2, 4)), alpha=0.0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 16),
+        w=st.integers(2, 48),
+        alpha=st.floats(0.05, 1.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, b, w, alpha, seed):
+        x = rand((b, w), seed=seed, lo=0.01, hi=100.0)
+        got = ewma_stats(x, alpha=float(alpha))
+        want = ewma_stats_ref(x, alpha=float(alpha))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

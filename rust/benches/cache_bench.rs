@@ -1,0 +1,73 @@
+//! Cache-layer micro-benchmarks: eviction-policy operation costs and
+//! the distributed cache network hot path.  These are the per-event
+//! costs that bound the simulator's requests/second (DESIGN.md §6 L3).
+
+use obsd::cache::network::CacheNetwork;
+use obsd::cache::policy::PolicyKind;
+use obsd::cache::store::DtnCache;
+use obsd::cache::{ChunkKey, Origin};
+use obsd::trace::StreamId;
+use obsd::util::bench::Bencher;
+use obsd::util::rng::Rng;
+
+fn key(i: u64) -> ChunkKey {
+    ChunkKey {
+        stream: StreamId((i % 97) as u32),
+        chunk: i,
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== cache_bench ==");
+
+    for policy in PolicyKind::ALL {
+        // Mixed insert/access workload under eviction pressure.
+        let mut cache = DtnCache::new(64 << 20, policy);
+        let mut rng = Rng::new(1);
+        let mut i = 0u64;
+        b.bench_throughput(
+            &format!("store/{}/mixed-ops", policy.name()),
+            1.0,
+            "op",
+            || {
+                i += 1;
+                if rng.chance(0.4) {
+                    cache.insert(
+                        key(i),
+                        (rng.below(1 << 20) + 1024) as u64,
+                        Origin::Demand,
+                        i as f64,
+                    );
+                } else {
+                    cache.access(&key(rng.below(1000) as u64 + i.saturating_sub(500)));
+                }
+                cache.used_bytes()
+            },
+        );
+    }
+
+    // Pure hit path (the common case on the simulator hot loop).
+    let mut cache = DtnCache::new(1 << 30, PolicyKind::Lru);
+    for i in 0..10_000u64 {
+        cache.insert(key(i), 4096, Origin::Demand, i as f64);
+    }
+    let mut rng = Rng::new(2);
+    b.bench_throughput("store/LRU/hit", 1.0, "op", || {
+        cache.access(&key(rng.below(10_000) as u64))
+    });
+
+    // Distributed network with registry maintenance.
+    let mut net = CacheNetwork::new(7, 32 << 20, PolicyKind::Lru);
+    let mut rng = Rng::new(3);
+    let mut i = 0u64;
+    b.bench_throughput("network/insert+registry", 1.0, "op", || {
+        i += 1;
+        let node = 1 + rng.below(6);
+        net.insert(node, key(i), 65_536, Origin::Demand, i as f64);
+        net.peers_with(1, &key(i.saturating_sub(3)))
+    });
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_cache.json", b.to_json()).ok();
+}

@@ -1,0 +1,30 @@
+//! End-to-end experiment benchmarks: wall-clock for regenerating each
+//! paper table/figure at reduced scale.  One entry per experiment id,
+//! so `cargo bench` exercises every harness in DESIGN.md §4.
+
+use obsd::experiments::{run_experiment, ExpOptions, ALL_IDS};
+use obsd::util::bench::Bencher;
+use std::time::Duration;
+
+fn main() {
+    // Each experiment is seconds-scale; use single-shot timing rather
+    // than the microbench calibration loop.
+    let mut b = Bencher::new();
+    b.warmup = Duration::from_millis(1);
+    b.measure = Duration::from_millis(1);
+    b.min_samples = 1;
+    println!("== experiments_bench (reduced scale) ==");
+    let opts = ExpOptions {
+        scale: 0.3,
+        days_factor: 0.4,
+        out_dir: None,
+        seed: None,
+    };
+    for id in ALL_IDS {
+        b.bench(&format!("experiment/{id}"), || {
+            run_experiment(id, &opts).unwrap().len()
+        });
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_experiments.json", b.to_json()).ok();
+}

@@ -1,0 +1,97 @@
+//! Prediction-path benchmarks: the ARIMA forecaster (pure Rust and,
+//! when artifacts exist, the AOT/PJRT path), FP-Growth mining, and the
+//! HPM observe hot path (DESIGN.md §6 L1/L2 structure costs as seen
+//! from Layer 3).
+
+use obsd::prefetch::arima::{GapPredictor, RustArima};
+use obsd::prefetch::fpgrowth;
+use obsd::prefetch::hybrid::Hpm;
+use obsd::prefetch::PrefetchModel;
+use obsd::trace::{generator, presets, Request, StreamId, TimeRange, UserId};
+use obsd::util::bench::Bencher;
+use obsd::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== prefetch_bench ==");
+
+    // Single-window AR(8) forecast (per-series cost).
+    let mut rng = Rng::new(1);
+    let window: Vec<f64> = (0..60).map(|_| rng.gauss(3600.0, 40.0)).collect();
+    b.bench("arima/predict-1", || {
+        obsd::prefetch::arima::predict_next_gap(&window)
+    });
+
+    // Batched 64-window forecast, pure Rust.
+    let windows: Vec<Vec<f64>> = (0..64)
+        .map(|_| (0..60).map(|_| rng.gauss(1800.0, 30.0)).collect())
+        .collect();
+    let mut rust = RustArima::new();
+    b.bench_throughput("arima/rust-batch-64", 64.0, "series", || {
+        rust.predict_gaps(&windows)
+    });
+
+    // Batched forecast through the AOT artifact on PJRT.
+    if obsd::runtime::artifacts_available() {
+        let engine = obsd::runtime::Engine::load_default().unwrap();
+        b.bench_throughput("arima/pjrt-batch-64", 64.0, "series", || {
+            engine.predict_gaps_batch(&windows).unwrap()
+        });
+        let pts: Vec<[f32; 4]> = (0..1024)
+            .map(|_| {
+                [
+                    rng.range(0.0, 10.0) as f32,
+                    rng.range(0.0, 10.0) as f32,
+                    rng.range(0.0, 10.0) as f32,
+                    1.0,
+                ]
+            })
+            .collect();
+        let w = vec![1.0f32; 1024];
+        let c: Vec<[f32; 4]> = (0..16)
+            .map(|_| {
+                [
+                    rng.range(0.0, 10.0) as f32,
+                    rng.range(0.0, 10.0) as f32,
+                    rng.range(0.0, 10.0) as f32,
+                    1.0,
+                ]
+            })
+            .collect();
+        b.bench_throughput("kmeans/pjrt-step-1024", 1024.0, "points", || {
+            engine.kmeans_step(&pts, &w, &c).unwrap()
+        });
+    } else {
+        eprintln!("(artifacts missing: skipping PJRT benches — run `make artifacts`)");
+    }
+
+    // FP-Growth over synthetic human sessions.
+    let mut rng = Rng::new(5);
+    let txs: Vec<Vec<u32>> = (0..2000)
+        .map(|_| {
+            let n = rng.int_range(2, 8);
+            (0..n).map(|_| rng.zipf(200, 1.2) as u32).collect()
+        })
+        .collect();
+    b.bench("fpgrowth/mine-2000tx", || fpgrowth::mine(&txs, 10));
+
+    // HPM observe (the per-request model cost in the coordinator).
+    let trace = generator::generate(&presets::tiny());
+    let mut hpm = Hpm::new(Box::new(RustArima::new()));
+    let mut i = 0u64;
+    b.bench_throughput("hpm/observe", 1.0, "req", || {
+        i += 1;
+        let user = (i % 40) as u32;
+        let t = (i as f64) * 37.0;
+        let req = Request {
+            user: UserId(user),
+            ts: t,
+            stream: StreamId((i % trace.streams.len() as u64) as u32),
+            range: TimeRange::new((t - 600.0).max(0.0), t.max(1.0)),
+        };
+        hpm.observe(&req, &trace)
+    });
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_prefetch.json", b.to_json()).ok();
+}

@@ -1,0 +1,74 @@
+//! Network-simulator benchmarks: event queue churn, fluid-flow
+//! start/complete cycles and full-simulation event rates — the L3
+//! throughput target is ≥ 1 M simulated requests/minute (DESIGN.md §6).
+
+use obsd::cache::policy::PolicyKind;
+use obsd::coordinator::{run, SimConfig};
+use obsd::prefetch::Strategy;
+use obsd::simnet::{EventQueue, FlowSim, Pipe};
+use obsd::trace::{generator, presets};
+use obsd::util::bench::Bencher;
+use obsd::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== simnet_bench ==");
+
+    // Event queue push/pop churn.
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut rng = Rng::new(1);
+    let mut t = 0.0;
+    for i in 0..1000 {
+        q.push(rng.range(0.0, 1000.0), i);
+    }
+    b.bench_throughput("eventqueue/push-pop", 1.0, "ev", || {
+        t += 0.1;
+        q.push(t + rng.range(0.0, 100.0), 0);
+        q.pop()
+    });
+
+    // Fluid-flow fair-share replanning under churn.
+    let mut sim = FlowSim::new();
+    let mut rng = Rng::new(2);
+    let mut now = 0.0;
+    b.bench_throughput("flowsim/start+complete", 1.0, "flow", || {
+        now += 0.01;
+        sim.start(
+            now,
+            rng.range(1e3, 1e7),
+            Pipe::Link {
+                id: rng.below(8),
+                capacity: 1e9,
+            },
+        );
+        if sim.active() > 32 {
+            if let Some((tc, id)) = sim.next_completion() {
+                now = now.max(tc);
+                sim.complete(id, now);
+            }
+        }
+        sim.active()
+    });
+
+    // End-to-end simulated-request rate per strategy (tiny trace).
+    let mut cfg_t = presets::tiny();
+    cfg_t.duration_days = 2.0;
+    let trace = generator::generate(&cfg_t);
+    for strategy in [Strategy::CacheOnly, Strategy::Hpm] {
+        let cfg = SimConfig {
+            strategy,
+            policy: PolicyKind::Lru,
+            cache_bytes: 2 << 30,
+            ..Default::default()
+        };
+        b.bench_throughput(
+            &format!("endtoend/{}", strategy.name().replace(' ', "")),
+            trace.requests.len() as f64,
+            "req",
+            || run(&trace, &cfg).requests_total,
+        );
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_simnet.json", b.to_json()).ok();
+}

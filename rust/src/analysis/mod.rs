@@ -1,0 +1,368 @@
+//! Trace analytics reproducing the paper's §III study (Fig. 2-4,
+//! Tables I-II): user/request classification shares, per-continent
+//! distribution, request-type volume mix, and the fresh/duplicate
+//! breakdown of overlapping requests.
+
+use std::collections::HashMap;
+
+use crate::trace::classifier::{classify_requests, classify_trace, ProgramClass, UserClass};
+use crate::trace::{Continent, Request, Trace, UserId};
+
+/// Fig. 2 row: one continent's user share, volume share and WAN rate.
+#[derive(Debug, Clone)]
+pub struct ContinentRow {
+    pub continent: Continent,
+    pub user_frac: f64,
+    pub volume_frac: f64,
+    pub wan_mbps: f64,
+}
+
+/// Per-continent user %, transfer-volume % and average WAN throughput
+/// (Fig. 2).  WAN rates come from the preset profile (they are an
+/// input to the synthetic world, reported back like the paper measures
+/// them from transfer logs).
+pub fn fig2(trace: &Trace) -> Vec<ContinentRow> {
+    let preset = crate::trace::presets::by_name(&trace.observatory)
+        .unwrap_or_else(crate::trace::presets::gage);
+    let mut users = [0usize; 6];
+    for u in &trace.users {
+        users[u.continent.index()] += 1;
+    }
+    let mut volume = [0.0f64; 6];
+    for r in &trace.requests {
+        volume[trace.user(r.user).continent.index()] += r.bytes(&trace.streams);
+    }
+    let total_users: usize = users.iter().sum();
+    let total_volume: f64 = volume.iter().sum();
+    Continent::ALL
+        .iter()
+        .map(|c| {
+            let i = c.index();
+            ContinentRow {
+                continent: *c,
+                user_frac: users[i] as f64 / total_users.max(1) as f64,
+                volume_frac: volume[i] / total_volume.max(1.0),
+                wan_mbps: preset
+                    .continents
+                    .iter()
+                    .find(|p| p.continent == *c)
+                    .map(|p| p.wan_mbps)
+                    .unwrap_or(0.0),
+            }
+        })
+        .collect()
+}
+
+/// Table I: share of human/program *users* and of transfer volume.
+#[derive(Debug, Clone, Copy)]
+pub struct Table1 {
+    pub human_user_frac: f64,
+    pub program_user_frac: f64,
+    pub human_volume_frac: f64,
+    pub program_volume_frac: f64,
+}
+
+pub fn table1(trace: &Trace) -> Table1 {
+    let classes = classify_trace(trace);
+    let mut hu = 0usize;
+    let mut pu = 0usize;
+    for u in &trace.users {
+        match classes.get(&u.id) {
+            Some(UserClass::Program(_)) => pu += 1,
+            _ => hu += 1,
+        }
+    }
+    let mut hu_vol = 0.0;
+    let mut pu_vol = 0.0;
+    for r in &trace.requests {
+        let b = r.bytes(&trace.streams);
+        match classes.get(&r.user) {
+            Some(UserClass::Program(_)) => pu_vol += b,
+            _ => hu_vol += b,
+        }
+    }
+    let n = (hu + pu).max(1) as f64;
+    let v = (hu_vol + pu_vol).max(1.0);
+    Table1 {
+        human_user_frac: hu as f64 / n,
+        program_user_frac: pu as f64 / n,
+        human_volume_frac: hu_vol / v,
+        program_volume_frac: pu_vol / v,
+    }
+}
+
+/// Table II: program-request volume mix + overlapping fresh/duplicate.
+#[derive(Debug, Clone, Copy)]
+pub struct Table2 {
+    /// Shares of *program* volume.
+    pub regular_frac: f64,
+    pub realtime_frac: f64,
+    pub overlapping_frac: f64,
+    /// Within overlapping transfers: the share that had not been part
+    /// of the previous request (fresh) vs re-transferred (duplicate).
+    pub fresh_frac: f64,
+    pub duplicate_frac: f64,
+}
+
+pub fn table2(trace: &Trace) -> Table2 {
+    let classes = classify_requests(trace);
+    let mut vol = [0.0f64; 3]; // regular, realtime, overlapping
+    // Per (user, stream) last range for overlap accounting.
+    let mut last_range: HashMap<(UserId, u32), (f64, f64)> = HashMap::new();
+    let mut fresh = 0.0;
+    let mut dup = 0.0;
+    for (r, class) in trace.requests.iter().zip(&classes) {
+        let b = r.bytes(&trace.streams);
+        let idx = match class {
+            UserClass::Program(ProgramClass::Regular) => 0,
+            UserClass::Program(ProgramClass::Realtime) => 1,
+            UserClass::Program(ProgramClass::Overlapping) => 2,
+            UserClass::Human => {
+                continue;
+            }
+        };
+        vol[idx] += b;
+        if idx == 2 {
+            let key = (r.user, r.stream.0);
+            if let Some((ps, pe)) = last_range.get(&key) {
+                let overlap = (r.range.end.min(*pe) - r.range.start.max(*ps)).max(0.0);
+                let rate = trace.stream(r.stream).byte_rate;
+                dup += overlap * rate;
+                fresh += (r.range.duration() - overlap).max(0.0) * rate;
+            } else {
+                fresh += b;
+            }
+            last_range.insert(key, (r.range.start, r.range.end));
+        }
+    }
+    let total: f64 = vol.iter().sum::<f64>().max(1.0);
+    let od = (fresh + dup).max(1.0);
+    Table2 {
+        regular_frac: vol[0] / total,
+        realtime_frac: vol[1] / total,
+        overlapping_frac: vol[2] / total,
+        fresh_frac: fresh / od,
+        duplicate_frac: dup / od,
+    }
+}
+
+/// Fig. 3: exemplar request series (ts, range start, range end) for one
+/// user of each program class, for plotting.
+pub fn fig3(trace: &Trace) -> HashMap<&'static str, Vec<(f64, f64, f64)>> {
+    let classes = classify_trace(trace);
+    let mut out: HashMap<&'static str, Vec<(f64, f64, f64)>> = HashMap::new();
+    for (label, class) in [
+        ("regular", ProgramClass::Regular),
+        ("realtime", ProgramClass::Realtime),
+        ("overlapping", ProgramClass::Overlapping),
+    ] {
+        // The user of this class with the most requests (clean series).
+        let mut counts: HashMap<UserId, usize> = HashMap::new();
+        for r in &trace.requests {
+            if classes.get(&r.user) == Some(&UserClass::Program(class)) {
+                *counts.entry(r.user).or_insert(0) += 1;
+            }
+        }
+        let Some((&user, _)) = counts.iter().max_by_key(|(u, c)| (**c, u.0)) else {
+            continue;
+        };
+        let series: Vec<(f64, f64, f64)> = trace
+            .requests
+            .iter()
+            .filter(|r| r.user == user)
+            .take(200)
+            .map(|r| (r.ts, r.range.start, r.range.end))
+            .collect();
+        out.insert(label, series);
+    }
+    out
+}
+
+/// Fig. 4: (user, location index sorted by proximity, object id)
+/// scatter for the three busiest human users.
+pub fn fig4(trace: &Trace) -> Vec<(u32, usize, u32)> {
+    let classes = classify_trace(trace);
+    let mut counts: HashMap<UserId, usize> = HashMap::new();
+    for r in &trace.requests {
+        if matches!(classes.get(&r.user), Some(UserClass::Human) | None) {
+            *counts.entry(r.user).or_insert(0) += 1;
+        }
+    }
+    let mut busiest: Vec<(UserId, usize)> = counts.into_iter().collect();
+    busiest.sort_by_key(|(u, c)| (std::cmp::Reverse(*c), u.0));
+    busiest.truncate(3);
+
+    // Serialize site locations by proximity (x-major walk, like the
+    // paper's proximity sort).
+    let mut order: Vec<usize> = (0..trace.sites.len()).collect();
+    order.sort_by(|&a, &b| {
+        let sa = &trace.sites[a];
+        let sb = &trace.sites[b];
+        (sa.x, sa.y).partial_cmp(&(sb.x, sb.y)).unwrap()
+    });
+    let rank: HashMap<usize, usize> = order.iter().enumerate().map(|(i, &s)| (s, i)).collect();
+
+    let mut points = Vec::new();
+    for (uid, _) in busiest {
+        for r in trace.requests.iter().filter(|r| r.user == uid) {
+            let stream = trace.stream(r.stream);
+            points.push((uid.0, rank[&(stream.site.0 as usize)], stream.instrument_type));
+        }
+    }
+    points
+}
+
+/// Spatial-correlation summary for Fig. 4: fraction of consecutive
+/// same-session human request pairs within a proximity radius.
+pub fn spatial_correlation(trace: &Trace, radius: f64) -> f64 {
+    let mut near = 0usize;
+    let mut total = 0usize;
+    let mut last: HashMap<UserId, (f64, f64, f64)> = HashMap::new();
+    let classes = classify_trace(trace);
+    for r in &trace.requests {
+        if !matches!(classes.get(&r.user), Some(UserClass::Human) | None) {
+            continue;
+        }
+        let site = trace.site(trace.stream(r.stream).site);
+        if let Some((pt, px, py)) = last.insert(r.user, (r.ts, site.x, site.y)) {
+            if r.ts - pt <= 1800.0 {
+                total += 1;
+                let d = ((site.x - px).powi(2) + (site.y - py).powi(2)).sqrt();
+                if d <= radius {
+                    near += 1;
+                }
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        near as f64 / total as f64
+    }
+}
+
+/// Total requested bytes per ground-truth user kind (sanity checks).
+pub fn volume_by_user_kind(trace: &Trace) -> HashMap<crate::trace::UserKind, f64> {
+    let mut m = HashMap::new();
+    for r in &trace.requests {
+        *m.entry(trace.user(r.user).kind).or_insert(0.0) += r.bytes(&trace.streams);
+    }
+    m
+}
+
+/// All requests of one user, in order (test helper).
+pub fn requests_of(trace: &Trace, user: UserId) -> Vec<&Request> {
+    trace.requests.iter().filter(|r| r.user == user).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{generator, presets};
+
+    fn ooi_small() -> Trace {
+        let mut cfg = presets::ooi();
+        cfg.scale = 0.4;
+        cfg.duration_days = 4.0;
+        generator::generate(&cfg)
+    }
+
+    #[test]
+    fn fig2_shares_sum_to_one() {
+        let t = ooi_small();
+        let rows = fig2(&t);
+        assert_eq!(rows.len(), 6);
+        let u: f64 = rows.iter().map(|r| r.user_frac).sum();
+        let v: f64 = rows.iter().map(|r| r.volume_frac).sum();
+        assert!((u - 1.0).abs() < 1e-9);
+        assert!((v - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table1_recovers_preset_shares() {
+        let t = ooi_small();
+        let t1 = table1(&t);
+        // Table I targets: OOI HU 86.7% users, PU 90.1% volume.
+        assert!((t1.human_user_frac - 0.867).abs() < 0.12, "{t1:?}");
+        assert!((t1.program_volume_frac - 0.901).abs() < 0.12, "{t1:?}");
+        assert!((t1.human_user_frac + t1.program_user_frac - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table2_overlapping_dominant_for_ooi() {
+        let t = ooi_small();
+        let t2 = table2(&t);
+        assert!(
+            t2.overlapping_frac > t2.regular_frac,
+            "OOI should be overlapping-dominant: {t2:?}"
+        );
+        let sum = t2.regular_frac + t2.realtime_frac + t2.overlapping_frac;
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table2_duplicate_share_near_paper() {
+        let t = ooi_small();
+        let t2 = table2(&t);
+        // Paper: 90.4% duplicate for OOI overlapping transfers.
+        assert!(
+            (t2.duplicate_frac - 0.904).abs() < 0.1,
+            "duplicate {}",
+            t2.duplicate_frac
+        );
+        assert!((t2.fresh_frac + t2.duplicate_frac - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig3_yields_all_three_series() {
+        let t = ooi_small();
+        let series = fig3(&t);
+        for label in ["regular", "realtime", "overlapping"] {
+            let s = series.get(label).unwrap_or_else(|| panic!("missing {label}"));
+            assert!(s.len() >= 3, "{label}: {}", s.len());
+            // Time-ordered.
+            for w in s.windows(2) {
+                assert!(w[1].0 >= w[0].0);
+            }
+        }
+        // Overlapping exemplar: consecutive ranges overlap.
+        let ov = &series["overlapping"];
+        let mut overlaps = 0;
+        for w in ov.windows(2) {
+            if w[1].1 < w[0].2 {
+                overlaps += 1;
+            }
+        }
+        assert!(overlaps * 2 > ov.len(), "overlapping exemplar doesn't overlap");
+    }
+
+    #[test]
+    fn fig4_has_three_users() {
+        let t = ooi_small();
+        let pts = fig4(&t);
+        let users: std::collections::HashSet<u32> = pts.iter().map(|p| p.0).collect();
+        assert!(users.len() <= 3 && !users.is_empty());
+        assert!(pts.len() > 10);
+    }
+
+    #[test]
+    fn human_requests_spatially_correlated() {
+        let t = ooi_small();
+        let frac = spatial_correlation(&t, 30.0);
+        assert!(frac > 0.6, "spatial correlation {frac}");
+    }
+
+    #[test]
+    fn gage_regular_dominant() {
+        // Full user population (class counts quantize badly at small
+        // scale), shorter horizon for speed.
+        let mut cfg = presets::gage();
+        cfg.duration_days = 5.0;
+        let t = generator::generate(&cfg);
+        let t2 = table2(&t);
+        assert!(
+            t2.regular_frac > t2.overlapping_frac && t2.regular_frac > t2.realtime_frac,
+            "GAGE should be regular-dominant: {t2:?}"
+        );
+    }
+}

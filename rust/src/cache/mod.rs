@@ -1,0 +1,100 @@
+//! Distributed cache layer over the DTN network (paper §IV-C).
+//!
+//! Observatory data is spatial-temporal: a request names a stream and
+//! an observation-time range.  The cache therefore works on *chunks* —
+//! fixed observation-time slices of a stream — so overlapping requests
+//! (Fig. 3c) hit the chunks they share with earlier requests, exactly
+//! the redundancy §III-E quantifies.
+//!
+//! * [`policy`] — pluggable eviction policies (LRU, LFU, FIFO, SIZE,
+//!   GDSF) behind one trait.
+//! * [`store`] — a byte-capacity-bounded chunk cache for one DTN.
+//! * [`network`] — the interconnected cache network with peer lookup
+//!   and replica registry (client DTNs #2-#7 in Fig. 7).
+
+pub mod network;
+pub mod policy;
+pub mod store;
+
+use crate::trace::{StreamId, TimeRange};
+
+/// One cached unit: `chunk` covers observation time
+/// `[chunk·chunk_secs, (chunk+1)·chunk_secs)` of `stream`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChunkKey {
+    pub stream: StreamId,
+    pub chunk: u64,
+}
+
+/// How an entry got into a cache — used to split Fig. 13's "served from
+/// cached data" vs "served from pre-fetched data", and for recall.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Origin {
+    /// Cached as a side effect of serving a demand request.
+    Demand,
+    /// Proactively fetched by the pre-fetching engine.
+    Prefetch,
+    /// Pushed by the streaming mechanism (real-time subscriptions).
+    Stream,
+    /// Replicated to a local data hub by the placement strategy.
+    Replica,
+}
+
+/// Inclusive-exclusive chunk index range `[start, end)` covering an
+/// observation-time range.
+pub fn chunk_span(range: &TimeRange, chunk_secs: f64) -> std::ops::Range<u64> {
+    debug_assert!(chunk_secs > 0.0);
+    let start = (range.start / chunk_secs).floor().max(0.0) as u64;
+    let end = (range.end / chunk_secs).ceil().max(0.0) as u64;
+    start..end.max(start)
+}
+
+/// All chunk keys a request touches.
+pub fn chunks_for(stream: StreamId, range: &TimeRange, chunk_secs: f64) -> Vec<ChunkKey> {
+    chunk_span(range, chunk_secs)
+        .map(|chunk| ChunkKey { stream, chunk })
+        .collect()
+}
+
+/// Bytes held by one chunk of a stream with the given byte rate.
+pub fn chunk_bytes(byte_rate: f64, chunk_secs: f64) -> u64 {
+    (byte_rate * chunk_secs).ceil().max(1.0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_span_covers_range() {
+        let r = TimeRange::new(50.0, 250.0);
+        let span = chunk_span(&r, 100.0);
+        assert_eq!(span, 0..3); // chunks [0,100), [100,200), [200,300)
+    }
+
+    #[test]
+    fn chunk_span_exact_boundaries() {
+        let r = TimeRange::new(100.0, 300.0);
+        assert_eq!(chunk_span(&r, 100.0), 1..3);
+    }
+
+    #[test]
+    fn chunk_span_tiny_range() {
+        let r = TimeRange::new(105.0, 106.0);
+        assert_eq!(chunk_span(&r, 100.0), 1..2);
+    }
+
+    #[test]
+    fn chunks_for_lists_keys() {
+        let keys = chunks_for(StreamId(3), &TimeRange::new(0.0, 250.0), 100.0);
+        assert_eq!(keys.len(), 3);
+        assert!(keys.iter().all(|k| k.stream == StreamId(3)));
+        assert_eq!(keys[2].chunk, 2);
+    }
+
+    #[test]
+    fn chunk_bytes_rounds_up() {
+        assert_eq!(chunk_bytes(1.5, 100.0), 150);
+        assert_eq!(chunk_bytes(0.001, 100.0), 1);
+    }
+}

@@ -1,0 +1,197 @@
+//! The interconnected cache network across client DTNs (paper §IV-C,
+//! Fig. 7): per-DTN stores plus a replica registry for peer lookup.
+//!
+//! When a client DTN misses locally, the framework searches peer DTNs
+//! and weighs the peer-transfer cost against fetching from the
+//! observatory (§IV-D).  The registry gives that lookup O(1) access to
+//! the set of DTNs holding each chunk.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cache::policy::PolicyKind;
+use crate::cache::store::DtnCache;
+use crate::cache::{ChunkKey, Origin};
+
+/// Cache layer spanning `n_nodes` DTNs; node 0 is the observatory-side
+/// server DTN (no client cache), nodes 1.. are client DTNs.
+pub struct CacheNetwork {
+    stores: Vec<DtnCache>,
+    /// chunk → set of client DTNs currently holding it.
+    registry: HashMap<ChunkKey, HashSet<usize>>,
+}
+
+impl CacheNetwork {
+    /// Build with uniform capacity/policy on every client DTN.
+    pub fn new(n_nodes: usize, capacity: u64, policy: PolicyKind) -> Self {
+        Self {
+            stores: (0..n_nodes).map(|_| DtnCache::new(capacity, policy)).collect(),
+            registry: HashMap::new(),
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.stores.len()
+    }
+
+    pub fn store(&self, node: usize) -> &DtnCache {
+        &self.stores[node]
+    }
+
+    /// Does `node` hold `key`?
+    pub fn contains(&self, node: usize, key: &ChunkKey) -> bool {
+        self.stores[node].contains(key)
+    }
+
+    /// Demand access at a node (marks used, updates policy).
+    pub fn access(&mut self, node: usize, key: &ChunkKey) -> Option<Origin> {
+        self.stores[node].access(key)
+    }
+
+    /// Insert at a node, maintaining the replica registry.
+    pub fn insert(&mut self, node: usize, key: ChunkKey, size: u64, origin: Origin, now: f64) {
+        let evicted = self.stores[node].insert(key, size, origin, now);
+        for (k, _) in evicted.keys {
+            if let Some(set) = self.registry.get_mut(&k) {
+                set.remove(&node);
+                if set.is_empty() {
+                    self.registry.remove(&k);
+                }
+            }
+        }
+        if self.stores[node].contains(&key) {
+            self.registry.entry(key).or_default().insert(node);
+        }
+    }
+
+    /// Remove at a node, maintaining the registry.
+    pub fn remove(&mut self, node: usize, key: &ChunkKey) {
+        if self.stores[node].remove(key).is_some() {
+            if let Some(set) = self.registry.get_mut(key) {
+                set.remove(&node);
+                if set.is_empty() {
+                    self.registry.remove(key);
+                }
+            }
+        }
+    }
+
+    /// Peers (excluding `node`) currently holding `key`, sorted by id
+    /// (deterministic regardless of hash order).
+    pub fn peers_with(&self, node: usize, key: &ChunkKey) -> Vec<usize> {
+        let mut peers: Vec<usize> = self
+            .registry
+            .get(key)
+            .map(|s| s.iter().copied().filter(|&n| n != node).collect())
+            .unwrap_or_default();
+        peers.sort_unstable();
+        peers
+    }
+
+    /// Aggregate recall across all client stores.
+    pub fn total_recall(&self) -> f64 {
+        let fetched: f64 = self.stores.iter().map(|s| s.prefetched_bytes).sum();
+        let used: f64 = self.stores.iter().map(|s| s.prefetched_bytes_used).sum();
+        if fetched == 0.0 {
+            0.0
+        } else {
+            used / fetched
+        }
+    }
+
+    /// Total bytes currently cached across the network.
+    pub fn total_used(&self) -> u64 {
+        self.stores.iter().map(|s| s.used_bytes()).sum()
+    }
+
+    /// Debug invariant: the registry matches store contents exactly.
+    #[cfg(test)]
+    pub fn check_registry(&self) {
+        for (key, nodes) in &self.registry {
+            for &n in nodes {
+                assert!(self.stores[n].contains(key), "registry stale for {key:?} @ {n}");
+            }
+            assert!(!nodes.is_empty());
+        }
+        for (n, store) in self.stores.iter().enumerate() {
+            for (key, _) in store.iter() {
+                assert!(
+                    self.registry.get(key).map(|s| s.contains(&n)).unwrap_or(false),
+                    "registry missing {key:?} @ {n}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::StreamId;
+
+    fn key(i: u64) -> ChunkKey {
+        ChunkKey {
+            stream: StreamId(0),
+            chunk: i,
+        }
+    }
+
+    #[test]
+    fn peer_lookup_finds_replicas() {
+        let mut net = CacheNetwork::new(7, 10_000, PolicyKind::Lru);
+        net.insert(2, key(1), 100, Origin::Demand, 0.0);
+        net.insert(5, key(1), 100, Origin::Replica, 0.0);
+        let mut peers = net.peers_with(3, &key(1));
+        peers.sort_unstable();
+        assert_eq!(peers, vec![2, 5]);
+        assert_eq!(net.peers_with(2, &key(1)), vec![5]);
+    }
+
+    #[test]
+    fn eviction_updates_registry() {
+        let mut net = CacheNetwork::new(3, 150, PolicyKind::Lru);
+        net.insert(1, key(1), 100, Origin::Demand, 0.0);
+        net.insert(1, key(2), 100, Origin::Demand, 1.0); // evicts key(1)
+        assert!(net.peers_with(0, &key(1)).is_empty());
+        assert_eq!(net.peers_with(0, &key(2)), vec![1]);
+        net.check_registry();
+    }
+
+    #[test]
+    fn remove_updates_registry() {
+        let mut net = CacheNetwork::new(3, 1000, PolicyKind::Lru);
+        net.insert(1, key(1), 100, Origin::Demand, 0.0);
+        net.remove(1, &key(1));
+        assert!(net.peers_with(0, &key(1)).is_empty());
+        net.check_registry();
+    }
+
+    #[test]
+    fn total_recall_aggregates() {
+        let mut net = CacheNetwork::new(3, 10_000, PolicyKind::Lru);
+        net.insert(1, key(1), 100, Origin::Prefetch, 0.0);
+        net.insert(2, key(2), 100, Origin::Prefetch, 0.0);
+        net.access(1, &key(1));
+        assert!((net.total_recall() - 0.5).abs() < 1e-9);
+    }
+
+    /// Property: registry and stores stay consistent under arbitrary
+    /// insert/remove/access interleavings.
+    #[test]
+    fn prop_registry_consistent() {
+        crate::util::prop::check("registry-consistent", |rng| {
+            let mut net = CacheNetwork::new(4, 500, PolicyKind::ALL[rng.below(5)]);
+            for step in 0..300 {
+                let node = rng.below(4);
+                let k = key(rng.below(24) as u64);
+                match rng.below(3) {
+                    0 => net.insert(node, k, (rng.below(300) + 1) as u64, Origin::Demand, step as f64),
+                    1 => net.remove(node, &k),
+                    _ => {
+                        net.access(node, &k);
+                    }
+                }
+            }
+            net.check_registry();
+        });
+    }
+}

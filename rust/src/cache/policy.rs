@@ -1,0 +1,496 @@
+//! Cache eviction policies (paper §II-C, §IV-C1).
+//!
+//! The paper's taxonomy (after Wong): recency-based (LRU), frequency-
+//! based (LFU), size-based (largest-first), and function-based (GDSF).
+//! FIFO is included as a control.  All policies implement
+//! [`EvictionPolicy`] so the DTN store and the experiment grid swap
+//! them freely; §V-B1 compares LRU and LFU across cache sizes.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+
+use crate::cache::ChunkKey;
+
+/// Eviction policy interface. The store calls `on_insert`/`on_access`
+/// as entries are used and `victim` when it needs space.
+pub trait EvictionPolicy: Send {
+    /// Entry inserted (not present before).
+    fn on_insert(&mut self, key: ChunkKey, size: u64);
+    /// Entry hit.
+    fn on_access(&mut self, key: ChunkKey);
+    /// Entry removed outside eviction (e.g. invalidation).
+    fn on_remove(&mut self, key: &ChunkKey);
+    /// Pick the next victim (must be a currently tracked key).
+    fn victim(&mut self) -> Option<ChunkKey>;
+    /// Policy display name.
+    fn name(&self) -> &'static str;
+}
+
+/// Policy selector used by configs and the experiment grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    Lru,
+    Lfu,
+    Fifo,
+    Size,
+    Gdsf,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 5] = [
+        PolicyKind::Lru,
+        PolicyKind::Lfu,
+        PolicyKind::Fifo,
+        PolicyKind::Size,
+        PolicyKind::Gdsf,
+    ];
+
+    pub fn build(&self) -> Box<dyn EvictionPolicy> {
+        match self {
+            PolicyKind::Lru => Box::new(Lru::default()),
+            PolicyKind::Lfu => Box::new(Lfu::default()),
+            PolicyKind::Fifo => Box::new(Fifo::default()),
+            PolicyKind::Size => Box::new(SizeBased::default()),
+            PolicyKind::Gdsf => Box::new(Gdsf::default()),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Some(PolicyKind::Lru),
+            "lfu" => Some(PolicyKind::Lfu),
+            "fifo" => Some(PolicyKind::Fifo),
+            "size" => Some(PolicyKind::Size),
+            "gdsf" => Some(PolicyKind::Gdsf),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Lru => "LRU",
+            PolicyKind::Lfu => "LFU",
+            PolicyKind::Fifo => "FIFO",
+            PolicyKind::Size => "SIZE",
+            PolicyKind::Gdsf => "GDSF",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LRU — least recently used (paper's default, §IV-C1)
+// ---------------------------------------------------------------------------
+
+/// LRU via a monotone access counter: `seq → key` ordering gives the
+/// least-recently-used entry in O(log n).
+#[derive(Debug, Default)]
+pub struct Lru {
+    seq: u64,
+    by_key: HashMap<ChunkKey, u64>,
+    by_seq: BTreeMap<u64, ChunkKey>,
+}
+
+impl Lru {
+    #[inline]
+    fn touch(&mut self, key: ChunkKey) {
+        self.seq += 1;
+        if let Some(old) = self.by_key.insert(key, self.seq) {
+            self.by_seq.remove(&old);
+        }
+        self.by_seq.insert(self.seq, key);
+    }
+}
+
+impl EvictionPolicy for Lru {
+    fn on_insert(&mut self, key: ChunkKey, _size: u64) {
+        self.touch(key);
+    }
+
+    fn on_access(&mut self, key: ChunkKey) {
+        self.touch(key);
+    }
+
+    fn on_remove(&mut self, key: &ChunkKey) {
+        if let Some(seq) = self.by_key.remove(key) {
+            self.by_seq.remove(&seq);
+        }
+    }
+
+    fn victim(&mut self) -> Option<ChunkKey> {
+        let (&seq, &key) = self.by_seq.iter().next()?;
+        self.by_seq.remove(&seq);
+        self.by_key.remove(&key);
+        Some(key)
+    }
+
+    fn name(&self) -> &'static str {
+        "LRU"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LFU — least frequently used
+// ---------------------------------------------------------------------------
+
+/// LFU with recency tiebreak: victim = (min frequency, then oldest).
+#[derive(Debug, Default)]
+pub struct Lfu {
+    seq: u64,
+    by_key: HashMap<ChunkKey, (u64, u64)>, // key → (freq, seq)
+    ordered: BTreeSet<(u64, u64, ChunkKey)>, // (freq, seq, key)
+}
+
+impl EvictionPolicy for Lfu {
+    fn on_insert(&mut self, key: ChunkKey, _size: u64) {
+        self.seq += 1;
+        if let Some((f, s)) = self.by_key.insert(key, (1, self.seq)) {
+            self.ordered.remove(&(f, s, key));
+        }
+        self.ordered.insert((1, self.seq, key));
+    }
+
+    fn on_access(&mut self, key: ChunkKey) {
+        self.seq += 1;
+        if let Some(&(f, s)) = self.by_key.get(&key) {
+            self.ordered.remove(&(f, s, key));
+            self.by_key.insert(key, (f + 1, self.seq));
+            self.ordered.insert((f + 1, self.seq, key));
+        }
+    }
+
+    fn on_remove(&mut self, key: &ChunkKey) {
+        if let Some((f, s)) = self.by_key.remove(key) {
+            self.ordered.remove(&(f, s, *key));
+        }
+    }
+
+    fn victim(&mut self) -> Option<ChunkKey> {
+        let &(f, s, key) = self.ordered.iter().next()?;
+        self.ordered.remove(&(f, s, key));
+        self.by_key.remove(&key);
+        Some(key)
+    }
+
+    fn name(&self) -> &'static str {
+        "LFU"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FIFO
+// ---------------------------------------------------------------------------
+
+/// First-in first-out (insertion order, accesses ignored).
+#[derive(Debug, Default)]
+pub struct Fifo {
+    queue: VecDeque<ChunkKey>,
+    live: HashMap<ChunkKey, ()>,
+}
+
+impl EvictionPolicy for Fifo {
+    fn on_insert(&mut self, key: ChunkKey, _size: u64) {
+        if self.live.insert(key, ()).is_none() {
+            self.queue.push_back(key);
+        }
+    }
+
+    fn on_access(&mut self, _key: ChunkKey) {}
+
+    fn on_remove(&mut self, key: &ChunkKey) {
+        self.live.remove(key);
+    }
+
+    fn victim(&mut self) -> Option<ChunkKey> {
+        while let Some(key) = self.queue.pop_front() {
+            if self.live.remove(&key).is_some() {
+                return Some(key);
+            }
+        }
+        None
+    }
+
+    fn name(&self) -> &'static str {
+        "FIFO"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIZE — evict largest first (Wong's size-based class)
+// ---------------------------------------------------------------------------
+
+/// Largest-object-first eviction; ties broken by insertion order.
+#[derive(Debug, Default)]
+pub struct SizeBased {
+    seq: u64,
+    by_key: HashMap<ChunkKey, (u64, u64)>, // key → (size, seq)
+    ordered: BTreeSet<(u64, u64, ChunkKey)>, // (size, seq, key), max = victim
+}
+
+impl EvictionPolicy for SizeBased {
+    fn on_insert(&mut self, key: ChunkKey, size: u64) {
+        self.seq += 1;
+        if let Some((sz, s)) = self.by_key.insert(key, (size, self.seq)) {
+            self.ordered.remove(&(sz, s, key));
+        }
+        self.ordered.insert((size, self.seq, key));
+    }
+
+    fn on_access(&mut self, _key: ChunkKey) {}
+
+    fn on_remove(&mut self, key: &ChunkKey) {
+        if let Some((sz, s)) = self.by_key.remove(key) {
+            self.ordered.remove(&(sz, s, *key));
+        }
+    }
+
+    fn victim(&mut self) -> Option<ChunkKey> {
+        let &(sz, s, key) = self.ordered.iter().next_back()?;
+        self.ordered.remove(&(sz, s, key));
+        self.by_key.remove(&key);
+        Some(key)
+    }
+
+    fn name(&self) -> &'static str {
+        "SIZE"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GDSF — GreedyDual-Size-Frequency (function-based class)
+// ---------------------------------------------------------------------------
+
+/// GDSF priority: `L + freq / size`; evict the minimum, then raise the
+/// clock `L` to the evicted priority (aging).  Priorities are stored as
+/// order-preserving bit patterns of the (non-negative) f64.
+#[derive(Debug, Default)]
+pub struct Gdsf {
+    clock: f64,
+    seq: u64,
+    by_key: HashMap<ChunkKey, (u64, u64, u64)>, // key → (prio_bits, seq, freq)
+    ordered: BTreeSet<(u64, u64, ChunkKey)>,    // (prio_bits, seq, key)
+    sizes: HashMap<ChunkKey, u64>,
+}
+
+impl Gdsf {
+    fn priority(&self, freq: u64, size: u64) -> u64 {
+        let p = self.clock + freq as f64 / size.max(1) as f64;
+        p.to_bits() // non-negative f64s order correctly by bit pattern
+    }
+
+    fn reinsert(&mut self, key: ChunkKey, freq: u64) {
+        self.seq += 1;
+        let size = *self.sizes.get(&key).unwrap_or(&1);
+        let bits = self.priority(freq, size);
+        if let Some((b, s, _)) = self.by_key.insert(key, (bits, self.seq, freq)) {
+            self.ordered.remove(&(b, s, key));
+        }
+        self.ordered.insert((bits, self.seq, key));
+    }
+}
+
+impl EvictionPolicy for Gdsf {
+    fn on_insert(&mut self, key: ChunkKey, size: u64) {
+        self.sizes.insert(key, size);
+        self.reinsert(key, 1);
+    }
+
+    fn on_access(&mut self, key: ChunkKey) {
+        if let Some(&(_, _, freq)) = self.by_key.get(&key) {
+            self.reinsert(key, freq + 1);
+        }
+    }
+
+    fn on_remove(&mut self, key: &ChunkKey) {
+        self.sizes.remove(key);
+        if let Some((b, s, _)) = self.by_key.remove(key) {
+            self.ordered.remove(&(b, s, *key));
+        }
+    }
+
+    fn victim(&mut self) -> Option<ChunkKey> {
+        let &(bits, s, key) = self.ordered.iter().next()?;
+        self.ordered.remove(&(bits, s, key));
+        self.by_key.remove(&key);
+        self.sizes.remove(&key);
+        self.clock = f64::from_bits(bits);
+        Some(key)
+    }
+
+    fn name(&self) -> &'static str {
+        "GDSF"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::StreamId;
+
+    fn key(i: u64) -> ChunkKey {
+        ChunkKey {
+            stream: StreamId((i % 7) as u32),
+            chunk: i,
+        }
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut p = Lru::default();
+        p.on_insert(key(1), 10);
+        p.on_insert(key(2), 10);
+        p.on_insert(key(3), 10);
+        p.on_access(key(1)); // 2 is now oldest
+        assert_eq!(p.victim(), Some(key(2)));
+        assert_eq!(p.victim(), Some(key(3)));
+        assert_eq!(p.victim(), Some(key(1)));
+        assert_eq!(p.victim(), None);
+    }
+
+    #[test]
+    fn lfu_evicts_least_frequent() {
+        let mut p = Lfu::default();
+        p.on_insert(key(1), 10);
+        p.on_insert(key(2), 10);
+        p.on_access(key(1));
+        p.on_access(key(1));
+        p.on_access(key(2));
+        p.on_insert(key(3), 10); // freq 1 → victim
+        assert_eq!(p.victim(), Some(key(3)));
+        assert_eq!(p.victim(), Some(key(2)));
+        assert_eq!(p.victim(), Some(key(1)));
+    }
+
+    #[test]
+    fn lfu_ties_break_by_recency() {
+        let mut p = Lfu::default();
+        p.on_insert(key(1), 10);
+        p.on_insert(key(2), 10);
+        // Both freq 1; key(1) inserted earlier → evicted first.
+        assert_eq!(p.victim(), Some(key(1)));
+    }
+
+    #[test]
+    fn fifo_ignores_access() {
+        let mut p = Fifo::default();
+        p.on_insert(key(1), 10);
+        p.on_insert(key(2), 10);
+        p.on_access(key(1));
+        assert_eq!(p.victim(), Some(key(1)));
+        assert_eq!(p.victim(), Some(key(2)));
+    }
+
+    #[test]
+    fn size_evicts_largest() {
+        let mut p = SizeBased::default();
+        p.on_insert(key(1), 10);
+        p.on_insert(key(2), 500);
+        p.on_insert(key(3), 50);
+        assert_eq!(p.victim(), Some(key(2)));
+        assert_eq!(p.victim(), Some(key(3)));
+        assert_eq!(p.victim(), Some(key(1)));
+    }
+
+    #[test]
+    fn gdsf_prefers_small_frequent() {
+        let mut p = Gdsf::default();
+        p.on_insert(key(1), 1000); // big, freq 1 → low priority
+        p.on_insert(key(2), 10); // small → high priority
+        p.on_access(key(2));
+        assert_eq!(p.victim(), Some(key(1)));
+    }
+
+    #[test]
+    fn gdsf_clock_ages_entries() {
+        let mut p = Gdsf::default();
+        p.on_insert(key(1), 10);
+        for _ in 0..5 {
+            p.on_access(key(1));
+        }
+        assert_eq!(p.victim(), Some(key(1))); // raises clock to 6/10
+        p.on_insert(key(2), 10); // priority = clock + 1/10 > old priorities
+        p.on_insert(key(3), 1); // much higher
+        assert_eq!(p.victim(), Some(key(2)));
+    }
+
+    #[test]
+    fn remove_then_victim_skips_removed() {
+        for kind in PolicyKind::ALL {
+            let mut p = kind.build();
+            p.on_insert(key(1), 10);
+            p.on_insert(key(2), 20);
+            p.on_remove(&key(1));
+            assert_eq!(p.victim(), Some(key(2)), "{}", kind.name());
+            assert_eq!(p.victim(), None, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn reinsert_after_eviction_works() {
+        for kind in PolicyKind::ALL {
+            let mut p = kind.build();
+            p.on_insert(key(1), 10);
+            assert_eq!(p.victim(), Some(key(1)));
+            p.on_insert(key(1), 10);
+            assert_eq!(p.victim(), Some(key(1)), "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn policy_kind_parse() {
+        assert_eq!(PolicyKind::parse("lru"), Some(PolicyKind::Lru));
+        assert_eq!(PolicyKind::parse("LFU"), Some(PolicyKind::Lfu));
+        assert_eq!(PolicyKind::parse("bogus"), None);
+    }
+
+    /// Property: over any operation sequence, victims are always keys
+    /// that were inserted and not yet removed/evicted.
+    #[test]
+    fn prop_victims_are_live() {
+        crate::util::prop::check("victims-are-live", |rng| {
+            let kind = PolicyKind::ALL[rng.below(5)];
+            let mut p = kind.build();
+            let mut live = std::collections::HashSet::new();
+            for _ in 0..200 {
+                match rng.below(4) {
+                    0 => {
+                        let k = key(rng.below(40) as u64);
+                        if !live.contains(&k) {
+                            p.on_insert(k, rng.below(1000) as u64 + 1);
+                            live.insert(k);
+                        }
+                    }
+                    1 => {
+                        let k = key(rng.below(40) as u64);
+                        if live.contains(&k) {
+                            p.on_access(k);
+                        }
+                    }
+                    2 => {
+                        let k = key(rng.below(40) as u64);
+                        if live.remove(&k) {
+                            p.on_remove(&k);
+                        }
+                    }
+                    _ => {
+                        if let Some(v) = p.victim() {
+                            assert!(
+                                live.remove(&v),
+                                "{} evicted non-live {v:?}",
+                                p.name()
+                            );
+                        } else {
+                            assert!(live.is_empty(), "{} returned None with live keys", p.name());
+                        }
+                    }
+                }
+            }
+            // Drain: every remaining live key must be evictable exactly once.
+            let mut drained = 0;
+            while let Some(v) = p.victim() {
+                assert!(live.remove(&v));
+                drained += 1;
+                assert!(drained <= 1000);
+            }
+            assert!(live.is_empty());
+        });
+    }
+}

@@ -1,0 +1,322 @@
+//! Byte-capacity-bounded chunk cache for one DTN (paper §IV-C).
+//!
+//! Tracks per-entry origin (demand / pre-fetch / stream / replica) so
+//! the metrics layer can attribute hits the way Fig. 13 does, and
+//! feeds eviction decisions to a pluggable [`EvictionPolicy`].
+
+use std::collections::HashMap;
+
+use crate::cache::policy::{EvictionPolicy, PolicyKind};
+use crate::cache::{ChunkKey, Origin};
+
+/// Cached chunk metadata.
+#[derive(Debug, Clone, Copy)]
+pub struct Entry {
+    pub size: u64,
+    pub origin: Origin,
+    /// Set once the entry has satisfied at least one demand request —
+    /// drives the pre-fetch recall metric.
+    pub used: bool,
+    /// Insertion time (simulated seconds).
+    pub inserted_at: f64,
+}
+
+/// Outcome of an eviction pass.
+#[derive(Debug, Default, Clone)]
+pub struct Evicted {
+    pub keys: Vec<(ChunkKey, Entry)>,
+}
+
+/// One DTN's cache.
+pub struct DtnCache {
+    capacity: u64,
+    used: u64,
+    entries: HashMap<ChunkKey, Entry>,
+    policy: Box<dyn EvictionPolicy>,
+    kind: PolicyKind,
+    /// Lifetime counters for recall accounting (survive eviction).
+    pub prefetched_bytes: f64,
+    pub prefetched_bytes_used: f64,
+}
+
+impl DtnCache {
+    pub fn new(capacity: u64, kind: PolicyKind) -> Self {
+        Self {
+            capacity,
+            used: 0,
+            entries: HashMap::new(),
+            policy: kind.build(),
+            kind,
+            prefetched_bytes: 0.0,
+            prefetched_bytes_used: 0.0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn policy_kind(&self) -> PolicyKind {
+        self.kind
+    }
+
+    pub fn fill_fraction(&self) -> f64 {
+        if self.capacity == 0 {
+            1.0
+        } else {
+            self.used as f64 / self.capacity as f64
+        }
+    }
+
+    pub fn contains(&self, key: &ChunkKey) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn entry(&self, key: &ChunkKey) -> Option<&Entry> {
+        self.entries.get(key)
+    }
+
+    /// Look up a chunk for a demand request. Marks the entry used and
+    /// notifies the policy.  Returns the entry's origin on hit.
+    pub fn access(&mut self, key: &ChunkKey) -> Option<Origin> {
+        let entry = self.entries.get_mut(key)?;
+        let origin = entry.origin;
+        if !entry.used && matches!(origin, Origin::Prefetch | Origin::Stream) {
+            self.prefetched_bytes_used += entry.size as f64;
+        }
+        entry.used = true;
+        self.policy.on_access(*key);
+        Some(origin)
+    }
+
+    /// Insert (or refresh) a chunk; evicts until it fits.  Oversized
+    /// chunks (> capacity) are rejected.  Returns the evicted entries.
+    pub fn insert(&mut self, key: ChunkKey, size: u64, origin: Origin, now: f64) -> Evicted {
+        let mut evicted = Evicted::default();
+        if size > self.capacity {
+            return evicted; // cannot ever fit; matches proxy-cache practice
+        }
+        if let Some(old) = self.entries.remove(&key) {
+            self.used -= old.size;
+            self.policy.on_remove(&key);
+            // Preserve "used" status on refresh; prefetch counters were
+            // already charged for the old entry.
+        }
+        while self.used + size > self.capacity {
+            match self.policy.victim() {
+                Some(victim) => {
+                    if let Some(e) = self.entries.remove(&victim) {
+                        self.used -= e.size;
+                        evicted.keys.push((victim, e));
+                    }
+                }
+                None => break, // policy empty; should imply used == 0
+            }
+        }
+        if matches!(origin, Origin::Prefetch | Origin::Stream) {
+            self.prefetched_bytes += size as f64;
+        }
+        self.entries.insert(
+            key,
+            Entry {
+                size,
+                origin,
+                used: false,
+                inserted_at: now,
+            },
+        );
+        self.policy.on_insert(key, size);
+        self.used += size;
+        evicted
+    }
+
+    /// Remove a specific chunk (invalidation / placement moves).
+    pub fn remove(&mut self, key: &ChunkKey) -> Option<Entry> {
+        let e = self.entries.remove(key)?;
+        self.used -= e.size;
+        self.policy.on_remove(key);
+        Some(e)
+    }
+
+    /// Pre-fetch recall so far: fraction of pre-fetched bytes that were
+    /// later demanded (paper §V-A5).
+    pub fn recall(&self) -> f64 {
+        if self.prefetched_bytes == 0.0 {
+            0.0
+        } else {
+            self.prefetched_bytes_used / self.prefetched_bytes
+        }
+    }
+
+    /// Iterate over live entries (for placement / replication scans).
+    pub fn iter(&self) -> impl Iterator<Item = (&ChunkKey, &Entry)> {
+        self.entries.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::StreamId;
+
+    fn key(i: u64) -> ChunkKey {
+        ChunkKey {
+            stream: StreamId(0),
+            chunk: i,
+        }
+    }
+
+    #[test]
+    fn insert_and_hit() {
+        let mut c = DtnCache::new(1000, PolicyKind::Lru);
+        c.insert(key(1), 100, Origin::Demand, 0.0);
+        assert!(c.contains(&key(1)));
+        assert_eq!(c.access(&key(1)), Some(Origin::Demand));
+        assert_eq!(c.access(&key(2)), None);
+        assert_eq!(c.used_bytes(), 100);
+    }
+
+    #[test]
+    fn capacity_enforced_with_eviction() {
+        let mut c = DtnCache::new(250, PolicyKind::Lru);
+        c.insert(key(1), 100, Origin::Demand, 0.0);
+        c.insert(key(2), 100, Origin::Demand, 1.0);
+        let ev = c.insert(key(3), 100, Origin::Demand, 2.0);
+        assert_eq!(ev.keys.len(), 1);
+        assert_eq!(ev.keys[0].0, key(1)); // LRU victim
+        assert!(c.used_bytes() <= 250);
+        assert!(!c.contains(&key(1)));
+        assert!(c.contains(&key(3)));
+    }
+
+    #[test]
+    fn oversized_rejected() {
+        let mut c = DtnCache::new(100, PolicyKind::Lru);
+        c.insert(key(1), 500, Origin::Demand, 0.0);
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn refresh_does_not_double_count() {
+        let mut c = DtnCache::new(1000, PolicyKind::Lru);
+        c.insert(key(1), 100, Origin::Demand, 0.0);
+        c.insert(key(1), 200, Origin::Demand, 1.0);
+        assert_eq!(c.used_bytes(), 200);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn recall_tracks_prefetch_usage() {
+        let mut c = DtnCache::new(10_000, PolicyKind::Lru);
+        c.insert(key(1), 100, Origin::Prefetch, 0.0);
+        c.insert(key(2), 300, Origin::Prefetch, 0.0);
+        assert_eq!(c.recall(), 0.0);
+        c.access(&key(1));
+        assert!((c.recall() - 0.25).abs() < 1e-9);
+        c.access(&key(1)); // repeat hits don't double count
+        assert!((c.recall() - 0.25).abs() < 1e-9);
+        c.access(&key(2));
+        assert!((c.recall() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn evicted_unused_prefetch_lowers_recall() {
+        let mut c = DtnCache::new(100, PolicyKind::Lru);
+        c.insert(key(1), 100, Origin::Prefetch, 0.0);
+        c.insert(key(2), 100, Origin::Prefetch, 1.0); // evicts key(1) unused
+        c.access(&key(2));
+        assert!((c.recall() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn demand_inserts_do_not_affect_recall() {
+        let mut c = DtnCache::new(1000, PolicyKind::Lru);
+        c.insert(key(1), 100, Origin::Demand, 0.0);
+        c.access(&key(1));
+        assert_eq!(c.recall(), 0.0);
+        assert_eq!(c.prefetched_bytes, 0.0);
+    }
+
+    #[test]
+    fn remove_releases_bytes() {
+        let mut c = DtnCache::new(1000, PolicyKind::Lfu);
+        c.insert(key(1), 400, Origin::Replica, 0.0);
+        let e = c.remove(&key(1)).unwrap();
+        assert_eq!(e.size, 400);
+        assert_eq!(c.used_bytes(), 0);
+        assert!(c.remove(&key(1)).is_none());
+    }
+
+    /// Property: under arbitrary workloads, for every policy, the store
+    /// never exceeds capacity and `used_bytes` equals the sum of live
+    /// entry sizes.
+    #[test]
+    fn prop_capacity_invariant() {
+        crate::util::prop::check("cache-capacity-invariant", |rng| {
+            let kind = PolicyKind::ALL[rng.below(5)];
+            let cap = (rng.below(5000) + 500) as u64;
+            let mut c = DtnCache::new(cap, kind);
+            for step in 0..300 {
+                let k = key(rng.below(64) as u64);
+                match rng.below(3) {
+                    0 => {
+                        let size = (rng.below(800) + 1) as u64;
+                        let origin = match rng.below(4) {
+                            0 => Origin::Demand,
+                            1 => Origin::Prefetch,
+                            2 => Origin::Stream,
+                            _ => Origin::Replica,
+                        };
+                        c.insert(k, size, origin, step as f64);
+                    }
+                    1 => {
+                        c.access(&k);
+                    }
+                    _ => {
+                        c.remove(&k);
+                    }
+                }
+                assert!(
+                    c.used_bytes() <= cap,
+                    "{}: used {} > cap {}",
+                    kind.name(),
+                    c.used_bytes(),
+                    cap
+                );
+                let sum: u64 = c.iter().map(|(_, e)| e.size).sum();
+                assert_eq!(sum, c.used_bytes(), "{}: byte accounting drift", kind.name());
+            }
+        });
+    }
+
+    /// Property: recall is always within [0, 1].
+    #[test]
+    fn prop_recall_bounded() {
+        crate::util::prop::check("recall-bounded", |rng| {
+            let mut c = DtnCache::new(2000, PolicyKind::Lru);
+            for step in 0..200 {
+                let k = key(rng.below(32) as u64);
+                if rng.chance(0.5) {
+                    c.insert(k, (rng.below(500) + 1) as u64, Origin::Prefetch, step as f64);
+                } else {
+                    c.access(&k);
+                }
+                let r = c.recall();
+                assert!((0.0..=1.0 + 1e-9).contains(&r), "recall {r}");
+            }
+        });
+    }
+}

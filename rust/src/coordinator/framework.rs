@@ -1,0 +1,914 @@
+//! End-to-end simulation of the push-based data delivery framework
+//! (paper §IV-D, Fig. 5, evaluated over the Fig. 7 VDC).
+//!
+//! Request path (framework strategies): a user's request arrives at
+//! their local client DTN; cached chunks are served locally at the
+//! 100 Gbps user edge; remaining chunks are searched at peer DTNs
+//! (preferring the group's local data hub) and fetched over the DMZ if
+//! the transfer cost beats the observatory; the rest queues at the
+//! observatory's ten service processes and ships over the DMZ to the
+//! user's DTN.  The **No Cache** baseline bypasses all of it: every
+//! request queues at the observatory and ships over the user's
+//! commodity WAN — today's delivery practice.
+//!
+//! The push engine schedules model-predicted pre-fetches
+//! (`fire_at = ts + 0.8·gap`), converts real-time series into streaming
+//! subscriptions, and periodically re-clusters virtual groups and
+//! replicates hot chunks to local data hubs.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cache::network::CacheNetwork;
+use crate::cache::policy::PolicyKind;
+use crate::cache::{chunk_bytes, chunks_for, ChunkKey, Origin};
+use crate::metrics::{RunMetrics, ServedBy};
+use crate::placement::kmeans::{ClusterBackend, RustKmeans};
+use crate::placement::Placement;
+use crate::prefetch::arima::{GapPredictor, RustArima};
+use crate::prefetch::hybrid::Hpm;
+use crate::prefetch::markov::MarkovModel;
+use crate::prefetch::mesh::MeshModel;
+use crate::prefetch::streaming::StreamRegistry;
+use crate::prefetch::{Action, Prediction, PrefetchModel, Strategy};
+use crate::simnet::topology::NetCondition;
+use crate::simnet::{EventQueue, FlowId, FlowSim, Pipe, Topology, SERVER};
+use crate::trace::{StreamId, Trace, UserId};
+
+/// Full configuration of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub strategy: Strategy,
+    pub policy: PolicyKind,
+    /// Per-client-DTN cache capacity in bytes.
+    pub cache_bytes: u64,
+    pub net: NetCondition,
+    /// 1.0 = regular, 4.0 = heavy (month→week), 0.5 = low (§V-A3).
+    pub traffic_factor: f64,
+    /// Data placement strategy on/off (Table IV ablation).
+    pub placement: bool,
+    /// Association-rule / model rebuild period (seconds).
+    pub rebuild_every: f64,
+    /// Virtual-group recluster period (seconds).
+    pub recluster_every: f64,
+    /// Max chunks replicated to hubs per recluster tick.
+    pub replicate_budget: usize,
+    /// Observatory service: fixed per-request overhead (seconds).
+    pub obs_overhead: f64,
+    /// Observatory service: storage read rate per process (bytes/s).
+    pub obs_io_bps: f64,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            strategy: Strategy::Hpm,
+            policy: PolicyKind::Lru,
+            cache_bytes: 128 << 30,
+            net: NetCondition::Best,
+            traffic_factor: 1.0,
+            placement: true,
+            rebuild_every: 6.0 * 3600.0,
+            recluster_every: 24.0 * 3600.0,
+            replicate_budget: 256,
+            obs_overhead: crate::coordinator::server::SERVICE_OVERHEAD,
+            obs_io_bps: crate::coordinator::server::SERVICE_IO_BPS,
+            seed: 0xD17A,
+        }
+    }
+}
+
+/// Discrete events of the coordinator loop (transfer completions are
+/// queried from the fluid-flow simulator, not queued).
+enum Event {
+    PrefetchFire(Prediction),
+    StreamPush { user: UserId, stream: StreamId },
+    ServiceDone { task: usize },
+    Rebuild,
+    Recluster,
+}
+
+/// Why a flow is in the air.
+enum FlowCtx {
+    /// Observatory → user's DTN (framework) or user WAN (NoCache),
+    /// serving part of demand request `req`.
+    Serve { req: usize, dest: usize, chunks: Vec<ChunkKey> },
+    /// Peer DTN → user's DTN, serving part of demand request `req`.
+    Peer { req: usize, dest: usize, chunks: Vec<ChunkKey> },
+    /// Observatory → DTN, model-predicted pre-fetch.
+    Prefetch { dest: usize, chunks: Vec<ChunkKey> },
+    /// Observatory → DTN, streaming push.
+    Push { dest: usize, chunks: Vec<ChunkKey> },
+    /// DTN → hub DTN, placement replication.
+    Replicate { dest: usize, chunks: Vec<ChunkKey> },
+}
+
+/// Per-demand-request progress.
+struct ReqState {
+    submitted: f64,
+    bytes: f64,
+    pending_parts: usize,
+    any_origin: bool,
+    any_peer: bool,
+    local_cache_bytes: f64,
+    local_prefetch_bytes: f64,
+    done: bool,
+}
+
+/// Observatory task payload: which request part to ship where.
+struct ObsTask {
+    req: usize,
+    dest: usize,
+    chunks: Vec<ChunkKey>,
+    bytes: f64,
+    /// NoCache ships over the user's commodity WAN instead of the DMZ.
+    wan_dtn: Option<usize>,
+}
+
+/// The assembled framework for one run.
+pub struct Framework<'t> {
+    pub cfg: SimConfig,
+    trace: &'t Trace,
+    topology: Topology,
+    caches: CacheNetwork,
+    obs: crate::coordinator::server::Observatory<usize>,
+    obs_tasks: Vec<ObsTask>,
+    model: Option<Box<dyn PrefetchModel>>,
+    placement: Placement,
+    registry: StreamRegistry,
+    flows: FlowSim,
+    flow_ctx: HashMap<FlowId, FlowCtx>,
+    events: EventQueue<Event>,
+    /// Cursor into the time-sorted trace requests (arrivals are merged
+    /// into the event loop directly instead of heaping ~10^6 entries).
+    next_arrival: usize,
+    req_states: Vec<ReqState>,
+    /// Chunks with an in-flight transfer toward a DTN (dedup).
+    inflight: HashSet<(usize, ChunkKey)>,
+    pub metrics: RunMetrics,
+    now: f64,
+}
+
+/// Build the pre-fetch model for a strategy.
+pub fn build_model(
+    strategy: Strategy,
+    predictor: Box<dyn GapPredictor>,
+) -> Option<Box<dyn PrefetchModel>> {
+    match strategy {
+        Strategy::NoCache | Strategy::CacheOnly => None,
+        Strategy::Md1 => Some(Box::new(MarkovModel::new())),
+        Strategy::Md2 => Some(Box::new(MeshModel::new(predictor))),
+        Strategy::Hpm => Some(Box::new(Hpm::new(predictor))),
+    }
+}
+
+/// Run one simulation with default (pure-Rust) prediction backends.
+pub fn run(trace: &Trace, cfg: &SimConfig) -> RunMetrics {
+    run_with_backends(
+        trace,
+        cfg,
+        Box::new(RustArima::new()),
+        Box::new(RustKmeans),
+    )
+}
+
+/// Run one simulation with explicit predictor / clustering backends
+/// (the AOT PJRT engine plugs in here — see `rust/tests/` and
+/// `examples/ooi_e2e.rs`).
+pub fn run_with_backends(
+    trace: &Trace,
+    cfg: &SimConfig,
+    predictor: Box<dyn GapPredictor>,
+    cluster: Box<dyn ClusterBackend>,
+) -> RunMetrics {
+    let wall_start = std::time::Instant::now();
+    let scaled;
+    let trace = if (cfg.traffic_factor - 1.0).abs() > 1e-9 {
+        scaled = trace.with_traffic_factor(cfg.traffic_factor);
+        &scaled
+    } else {
+        trace
+    };
+    let wan: [f64; 6] = continent_wan(trace);
+    let mut fw = Framework {
+        topology: Topology::vdc(cfg.net, &wan),
+        caches: CacheNetwork::new(
+            crate::simnet::topology::N_DTNS,
+            if cfg.strategy.uses_cache() { cfg.cache_bytes } else { 0 },
+            cfg.policy,
+        ),
+        obs: crate::coordinator::server::Observatory::with_params(
+            crate::coordinator::server::N_SERVICE_PROCESSES,
+            cfg.obs_overhead,
+            cfg.obs_io_bps,
+        ),
+        obs_tasks: Vec::new(),
+        model: build_model(cfg.strategy, predictor),
+        placement: Placement::new(cluster, 16, cfg.seed ^ 0x9E37),
+        registry: StreamRegistry::new(),
+        flows: FlowSim::new(),
+        flow_ctx: HashMap::new(),
+        events: EventQueue::new(),
+        next_arrival: 0,
+        req_states: Vec::with_capacity(trace.requests.len()),
+        inflight: HashSet::new(),
+        metrics: RunMetrics::new(),
+        now: 0.0,
+        cfg: cfg.clone(),
+        trace,
+    };
+    fw.run_loop();
+    let mut metrics = fw.metrics;
+    metrics.recall = fw.caches.total_recall();
+    metrics.wall_secs = wall_start.elapsed().as_secs_f64();
+    metrics
+}
+
+/// Average WAN Mbps per continent for this trace's preset (falls back
+/// to the GAGE Fig. 2 profile when the preset is unknown).
+fn continent_wan(trace: &Trace) -> [f64; 6] {
+    let preset = crate::trace::presets::by_name(&trace.observatory)
+        .unwrap_or_else(crate::trace::presets::gage);
+    let mut wan = [1.0; 6];
+    for c in &preset.continents {
+        wan[c.continent.index()] = c.wan_mbps;
+    }
+    wan
+}
+
+impl<'t> Framework<'t> {
+    fn run_loop(&mut self) {
+        // Request states (arrivals are merged from the sorted trace).
+        for r in self.trace.requests.iter() {
+            self.req_states.push(ReqState {
+                submitted: r.ts,
+                bytes: 0.0,
+                pending_parts: 0,
+                any_origin: false,
+                any_peer: false,
+                local_cache_bytes: 0.0,
+                local_prefetch_bytes: 0.0,
+                done: false,
+            });
+        }
+        if self.model.is_some() {
+            let mut t = self.cfg.rebuild_every;
+            while t < self.trace.duration {
+                self.events.push(t, Event::Rebuild);
+                t += self.cfg.rebuild_every;
+            }
+        }
+        if self.cfg.placement && self.cfg.strategy.uses_prefetch() {
+            let mut t = self.cfg.recluster_every;
+            while t < self.trace.duration {
+                self.events.push(t, Event::Recluster);
+                t += self.cfg.recluster_every;
+            }
+        }
+
+        // Main DES loop: three-way merge of (sorted arrivals, dynamic
+        // event queue, flow completions).
+        let horizon = self.trace.duration + 7.0 * 86_400.0;
+        loop {
+            let t_arr = self
+                .trace
+                .requests
+                .get(self.next_arrival)
+                .map(|r| r.ts)
+                .unwrap_or(f64::INFINITY);
+            let t_event = self.events.peek_time().unwrap_or(f64::INFINITY);
+            let t_flow = self.flows.next_completion();
+            let t_fl = t_flow.map(|(t, _)| t).unwrap_or(f64::INFINITY);
+
+            if t_arr.is_infinite() && t_event.is_infinite() && t_fl.is_infinite() {
+                break;
+            }
+            if t_fl <= t_arr && t_fl <= t_event {
+                let (tf, fid) = t_flow.unwrap();
+                self.now = tf.max(self.now);
+                self.on_flow_complete(fid);
+            } else if t_event <= t_arr {
+                let (t, ev) = self.events.pop().unwrap();
+                self.now = t.max(self.now);
+                self.on_event(ev);
+            } else {
+                let i = self.next_arrival;
+                self.next_arrival += 1;
+                self.now = t_arr.max(self.now);
+                self.on_arrival(i);
+            }
+            if self.now > horizon {
+                break; // safety: runaway schedules
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Event handlers
+    // ------------------------------------------------------------------
+
+    fn on_event(&mut self, ev: Event) {
+        match ev {
+            Event::PrefetchFire(p) => self.on_prefetch_fire(p),
+            Event::StreamPush { user, stream } => self.on_stream_push(user, stream),
+            Event::ServiceDone { task } => self.on_service_done(task),
+            Event::Rebuild => {
+                if let Some(m) = self.model.as_mut() {
+                    m.rebuild(self.now);
+                }
+            }
+            Event::Recluster => self.on_recluster(),
+        }
+    }
+
+    fn on_arrival(&mut self, i: usize) {
+        let req = self.trace.requests[i].clone();
+        let user_dtn = self.trace.user(req.user).dtn();
+
+        // Feed the engines (all framework strategies).
+        if self.cfg.strategy.uses_prefetch() {
+            let site = self.trace.site(self.trace.stream(req.stream).site);
+            let (sx, sy) = (site.x, site.y);
+            self.placement.observe(req.user, sx, sy, req.stream.0);
+            self.registry.on_demand(req.user, req.stream, self.now);
+            if let Some(model) = self.model.as_mut() {
+                let actions = model.observe(&req, self.trace);
+                self.handle_actions(actions, user_dtn);
+            }
+        }
+
+        if !self.cfg.strategy.uses_cache() {
+            // NoCache: the full request goes to the observatory and the
+            // data ships over the user's commodity WAN — today's
+            // delivery practice, no publication awareness at the edge.
+            let bytes = req.bytes(&self.trace.streams);
+            self.req_states[i].bytes = bytes;
+            self.submit_obs_task(i, user_dtn, Vec::new(), bytes, Some(user_dtn));
+            self.req_states[i].pending_parts = 1;
+            self.req_states[i].any_origin = true;
+            return;
+        }
+
+        // Publication batching (§III-D): the observatory publishes each
+        // stream in chunk-granular batches; cached service only applies
+        // to *closed* chunks.
+        let chunk_secs = self.trace.chunk_secs;
+        let published = (self.now / chunk_secs).floor() as u64;
+        let rate = self.trace.stream(req.stream).byte_rate;
+        let per_chunk = chunk_bytes(rate, chunk_secs) as f64;
+        let mut chunks: Vec<ChunkKey> = chunks_for(req.stream, &req.range, chunk_secs)
+            .into_iter()
+            .filter(|k| k.chunk < published)
+            .collect();
+        // The unpublished tail of the range (live data), if any.
+        let tail_secs = (req.range.end - published as f64 * chunk_secs)
+            .min(req.range.duration())
+            .max(0.0);
+
+        if self.cfg.strategy.uses_prefetch() {
+            // Framework with push engine: publication-aware clients.
+            // A request reaching into the live window is served "latest
+            // published batch" semantics — the newest closed chunk.
+            if chunks.is_empty() && tail_secs > 0.0 && published > 0 {
+                chunks.push(ChunkKey {
+                    stream: req.stream,
+                    chunk: published - 1,
+                });
+            }
+        }
+        // Accounting: chunk-granular service bytes for every framework
+        // strategy (consistent with the cache layer's transfer unit).
+        let mut bytes = per_chunk * chunks.len() as f64;
+        // CacheOnly has no publication knowledge: a range reaching into
+        // the live window forces a freshness check at the observatory,
+        // folded into the request's single observatory task (Fig. 5:
+        // the client DTN forwards one request for everything missing) —
+        // exactly the pull-based polling traffic the streaming
+        // mechanism eliminates (§IV-B).
+        let tail_bytes = if !self.cfg.strategy.uses_prefetch() && tail_secs > 0.0 {
+            (tail_secs * rate).max(1.0)
+        } else {
+            0.0
+        };
+        bytes += tail_bytes;
+        self.req_states[i].bytes = bytes;
+        if chunks.is_empty() && tail_bytes == 0.0 {
+            // Nothing published in range and no tail: catalog answers
+            // locally ("no new data yet").
+            self.finalize_request(i);
+            return;
+        }
+        let mut parts = 0;
+
+        // Framework path: resolve chunks local → peer → observatory.
+        let mut missing: Vec<ChunkKey> = Vec::new();
+        let mut peer_parts: std::collections::BTreeMap<usize, Vec<ChunkKey>> =
+            std::collections::BTreeMap::new();
+        let hub = self.placement.hub_for(req.user);
+        for key in chunks {
+            if let Some(origin) = self.caches.access(user_dtn, &key) {
+                match origin {
+                    Origin::Prefetch | Origin::Stream => {
+                        self.req_states[i].local_prefetch_bytes += per_chunk
+                    }
+                    _ => self.req_states[i].local_cache_bytes += per_chunk,
+                }
+                self.metrics.cache_bytes += per_chunk;
+                continue;
+            }
+            // Peer lookup: best-connected peer; the virtual group's hub
+            // wins ties (it concentrates the group's hot data, so
+            // preferring it keeps its cache warm), but a faster peer is
+            // never passed over for a slower hub.
+            let peers = self.caches.peers_with(user_dtn, &key);
+            let peer = peers
+                .into_iter()
+                .max_by(|&a, &b| {
+                    let la = self.topology.link(a, user_dtn);
+                    let lb = self.topology.link(b, user_dtn);
+                    la.partial_cmp(&lb)
+                        .unwrap()
+                        .then_with(|| (Some(a) == hub).cmp(&(Some(b) == hub)))
+                        .then(b.cmp(&a)) // deterministic tie-break
+                });
+            match peer {
+                // §IV-D: fetch from the peer only if its transfer cost
+                // beats the observatory path (queue wait included).
+                Some(p) if self.peer_beats_observatory(p, user_dtn, per_chunk) => {
+                    peer_parts.entry(p).or_default().push(key);
+                }
+                _ => missing.push(key),
+            }
+        }
+
+        for (peer, keys) in peer_parts {
+            let part_bytes = per_chunk * keys.len() as f64;
+            self.req_states[i].any_peer = true;
+            self.metrics.cache_bytes += part_bytes;
+            let fid = self.flows.start(
+                self.now,
+                part_bytes,
+                Pipe::Link {
+                    id: Topology::link_id(peer, user_dtn),
+                    capacity: self.topology.link(peer, user_dtn),
+                },
+            );
+            self.flow_ctx.insert(
+                fid,
+                FlowCtx::Peer {
+                    req: i,
+                    dest: user_dtn,
+                    chunks: keys,
+                },
+            );
+            parts += 1;
+        }
+        if !missing.is_empty() || tail_bytes > 0.0 {
+            let part_bytes = per_chunk * missing.len() as f64 + tail_bytes;
+            self.req_states[i].any_origin = true;
+            self.submit_obs_task(i, user_dtn, missing, part_bytes, None);
+            parts += 1;
+        }
+        self.req_states[i].pending_parts = parts;
+        if parts == 0 {
+            // Fully local: served at the user edge.
+            self.finalize_request(i);
+        }
+    }
+
+    /// Estimated peer transfer vs observatory path cost (§IV-D).
+    fn peer_beats_observatory(&self, peer: usize, dest: usize, bytes: f64) -> bool {
+        let peer_bw = self.topology.link(peer, dest);
+        if peer_bw <= 0.0 {
+            return false;
+        }
+        let t_peer = bytes / peer_bw;
+        let queue_wait = (self.obs.queue_len() as f64 / 10.0)
+            * crate::coordinator::server::SERVICE_OVERHEAD;
+        let t_obs = bytes / self.topology.link(SERVER, dest).max(1.0)
+            + crate::coordinator::server::SERVICE_OVERHEAD
+            + queue_wait;
+        t_peer < t_obs
+    }
+
+    fn submit_obs_task(
+        &mut self,
+        req: usize,
+        dest: usize,
+        chunks: Vec<ChunkKey>,
+        bytes: f64,
+        wan_dtn: Option<usize>,
+    ) {
+        let task_id = self.obs_tasks.len();
+        self.obs_tasks.push(ObsTask {
+            req,
+            dest,
+            chunks,
+            bytes,
+            wan_dtn,
+        });
+        self.obs.submit(task_id, bytes, self.now);
+        self.try_start_service();
+    }
+
+    fn try_start_service(&mut self) {
+        while let Some(started) = self.obs.try_start(self.now) {
+            self.metrics.latency.add(started.queue_wait);
+            self.events.push(
+                started.service_done_at,
+                Event::ServiceDone {
+                    task: started.payload,
+                },
+            );
+        }
+    }
+
+    fn on_service_done(&mut self, task: usize) {
+        self.obs.release();
+        let t = &self.obs_tasks[task];
+        let (req, dest, bytes, wan) = (t.req, t.dest, t.bytes, t.wan_dtn);
+        let chunks = t.chunks.clone();
+        self.metrics.origin_bytes += bytes;
+        let pipe = match wan {
+            // NoCache: commodity WAN, dedicated per-flow rate.
+            Some(dtn) => Pipe::Dedicated {
+                rate: self.topology.wan(dtn).max(1.0),
+            },
+            // Framework: DMZ link to the destination DTN.
+            None => Pipe::Link {
+                id: Topology::link_id(SERVER, dest),
+                capacity: self.topology.link(SERVER, dest),
+            },
+        };
+        let fid = self.flows.start(self.now, bytes.max(1.0), pipe);
+        self.flow_ctx.insert(fid, FlowCtx::Serve { req, dest, chunks });
+        // A slot freed: drain the queue.
+        self.try_start_service();
+    }
+
+    // ------------------------------------------------------------------
+    // Push engine: pre-fetching + streaming + placement
+    // ------------------------------------------------------------------
+
+    fn handle_actions(&mut self, actions: Vec<Action>, user_dtn: usize) {
+        for action in actions {
+            match action {
+                Action::Prefetch(p) => {
+                    self.events.push(p.fire_at.max(self.now), Event::PrefetchFire(p));
+                }
+                Action::Subscribe { user, stream, period } => {
+                    let is_new = self.registry.subscribe(
+                        user,
+                        stream,
+                        user_dtn,
+                        period,
+                        self.now,
+                        self.trace.chunk_secs,
+                    );
+                    if is_new {
+                        self.events.push(
+                            self.now + period,
+                            Event::StreamPush { user, stream },
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_prefetch_fire(&mut self, p: Prediction) {
+        let dest = self.trace.user(p.user).dtn();
+        let rate = self.trace.stream(p.stream).byte_rate;
+        let per_chunk = chunk_bytes(rate, self.trace.chunk_secs) as f64;
+        // Only published (closed) chunks can be staged.
+        let avail = (self.now / self.trace.chunk_secs).floor() as u64;
+        let mut chunks: Vec<ChunkKey> = chunks_for(p.stream, &p.range, self.trace.chunk_secs)
+            .into_iter()
+            .filter(|k| k.chunk < avail)
+            .filter(|k| !self.caches.contains(dest, k))
+            .filter(|k| !self.inflight.contains(&(dest, *k)))
+            .collect();
+        // Per-prediction staging budget: bound speculative transfer
+        // volume (the paper's n=3 cap bounds object count; this bounds
+        // bytes).  Keep the most recent chunks — users overwhelmingly
+        // revisit the fresh end of a range.
+        const MAX_PREFETCH_CHUNKS: usize = 128;
+        if chunks.len() > MAX_PREFETCH_CHUNKS {
+            chunks.drain(..chunks.len() - MAX_PREFETCH_CHUNKS);
+        }
+        if chunks.is_empty() {
+            return;
+        }
+        let bytes = per_chunk * chunks.len() as f64;
+        for k in &chunks {
+            self.inflight.insert((dest, *k));
+        }
+        self.metrics.origin_bytes += bytes;
+        let fid = self.flows.start(
+            self.now,
+            bytes,
+            Pipe::Link {
+                id: Topology::link_id(SERVER, dest),
+                capacity: self.topology.link(SERVER, dest),
+            },
+        );
+        self.flow_ctx.insert(fid, FlowCtx::Prefetch { dest, chunks });
+    }
+
+    fn on_stream_push(&mut self, user: UserId, stream: StreamId) {
+        let Some(range) = self
+            .registry
+            .push_tick(user, stream, self.now, self.trace.chunk_secs)
+        else {
+            return; // expired
+        };
+        let sub = self.registry.get(user, stream);
+        let (dest, period) = match sub {
+            Some(s) => (s.dtn, s.period),
+            None => return,
+        };
+        let rate = self.trace.stream(stream).byte_rate;
+        let per_chunk = chunk_bytes(rate, self.trace.chunk_secs) as f64;
+        // Coalescing: skip chunks already present or in flight to this
+        // DTN (other subscribers, demand fetches).
+        let chunks: Vec<ChunkKey> = range
+            .map(|chunk| ChunkKey { stream, chunk })
+            .filter(|k| !self.caches.contains(dest, k))
+            .filter(|k| !self.inflight.contains(&(dest, *k)))
+            .collect();
+        if !chunks.is_empty() {
+            let bytes = per_chunk * chunks.len() as f64;
+            for k in &chunks {
+                self.inflight.insert((dest, *k));
+            }
+            self.metrics.origin_bytes += bytes;
+            let fid = self.flows.start(
+                self.now,
+                bytes,
+                Pipe::Link {
+                    id: Topology::link_id(SERVER, dest),
+                    capacity: self.topology.link(SERVER, dest),
+                },
+            );
+            self.flow_ctx.insert(fid, FlowCtx::Push { dest, chunks });
+        } else {
+            self.registry.coalesced += 1;
+        }
+        // Next tick while the subscription lives.
+        self.events
+            .push(self.now + period, Event::StreamPush { user, stream });
+    }
+
+    fn on_recluster(&mut self) {
+        self.placement
+            .recluster(self.trace, &self.topology, &self.caches);
+        // Replicate each group's hot chunks to its hub (§IV-C2): chunks
+        // cached at member DTNs but missing at the hub.
+        let mut budget = self.cfg.replicate_budget;
+        let groups: Vec<(usize, Vec<usize>)> = self
+            .placement
+            .groups
+            .iter()
+            .map(|g| (g.hub, g.by_dtn.keys().copied().collect()))
+            .collect();
+        for (hub, dtns) in groups {
+            if budget == 0 {
+                break;
+            }
+            let mut moves: Vec<(usize, ChunkKey, u64)> = Vec::new();
+            let mut sorted_dtns = dtns.clone();
+            sorted_dtns.sort_unstable();
+            for &dtn in sorted_dtns.iter().filter(|&&d| d != hub) {
+                for (key, entry) in self.caches.store(dtn).iter() {
+                    if entry.used
+                        && !self.caches.contains(hub, key)
+                        && !self.inflight.contains(&(hub, *key))
+                    {
+                        moves.push((dtn, *key, entry.size));
+                    }
+                }
+            }
+            // Deterministic selection regardless of HashMap order.
+            moves.sort_unstable_by_key(|(d, k, _)| (*d, *k));
+            moves.truncate(budget);
+            budget = budget.saturating_sub(moves.len());
+            for (from, key, size) in moves {
+                self.inflight.insert((hub, key));
+                self.placement.replicated_bytes += size as f64;
+                self.placement.replicas_placed += 1;
+                self.metrics.placement_bytes += size as f64;
+                let fid = self.flows.start(
+                    self.now,
+                    size as f64,
+                    Pipe::Link {
+                        id: Topology::link_id(from, hub),
+                        capacity: self.topology.link(from, hub),
+                    },
+                );
+                self.flow_ctx.insert(
+                    fid,
+                    FlowCtx::Replicate {
+                        dest: hub,
+                        chunks: vec![key],
+                    },
+                );
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Flow completions
+    // ------------------------------------------------------------------
+
+    fn on_flow_complete(&mut self, fid: FlowId) {
+        let Some(done) = self.flows.complete(fid, self.now) else {
+            return;
+        };
+        let Some(ctx) = self.flow_ctx.remove(&fid) else {
+            return;
+        };
+        match ctx {
+            FlowCtx::Serve { req, dest, chunks } => {
+                self.insert_chunks(dest, &chunks, Origin::Demand);
+                self.part_done(req);
+            }
+            FlowCtx::Peer { req, dest, chunks } => {
+                self.metrics.peer_throughput.add(done.throughput());
+                self.insert_chunks(dest, &chunks, Origin::Demand);
+                self.part_done(req);
+            }
+            FlowCtx::Prefetch { dest, chunks } => {
+                for k in &chunks {
+                    self.inflight.remove(&(dest, *k));
+                }
+                self.insert_chunks(dest, &chunks, Origin::Prefetch);
+            }
+            FlowCtx::Push { dest, chunks } => {
+                for k in &chunks {
+                    self.inflight.remove(&(dest, *k));
+                }
+                self.insert_chunks(dest, &chunks, Origin::Stream);
+            }
+            FlowCtx::Replicate { dest, chunks } => {
+                for k in &chunks {
+                    self.inflight.remove(&(dest, *k));
+                }
+                self.insert_chunks(dest, &chunks, Origin::Replica);
+            }
+        }
+    }
+
+    fn insert_chunks(&mut self, dest: usize, chunks: &[ChunkKey], origin: Origin) {
+        if !self.cfg.strategy.uses_cache() {
+            return;
+        }
+        for key in chunks {
+            let rate = self.trace.stream(key.stream).byte_rate;
+            let size = chunk_bytes(rate, self.trace.chunk_secs);
+            self.caches.insert(dest, *key, size, origin, self.now);
+        }
+    }
+
+    fn part_done(&mut self, req: usize) {
+        let st = &mut self.req_states[req];
+        st.pending_parts = st.pending_parts.saturating_sub(1);
+        if st.pending_parts == 0 && !st.done {
+            self.finalize_request(req);
+        }
+    }
+
+    fn finalize_request(&mut self, req: usize) {
+        let user_edge = self.topology.user_edge();
+        let st = &mut self.req_states[req];
+        st.done = true;
+        // Final hop: DTN → user at the 100 Gbps edge (or already included
+        // for NoCache, where the WAN flow ends at the user).
+        let edge_time = if self.cfg.strategy.uses_cache() {
+            st.bytes / user_edge
+        } else {
+            0.0
+        };
+        let elapsed = (self.now - st.submitted + edge_time).max(1e-3);
+        self.metrics.throughput.add(st.bytes.max(1.0) / elapsed);
+        self.metrics.sum_bytes += st.bytes.max(1.0);
+        self.metrics.sum_elapsed += elapsed;
+        let served = if st.any_origin {
+            ServedBy::Observatory
+        } else if st.any_peer {
+            ServedBy::Peer
+        } else if st.local_prefetch_bytes > st.local_cache_bytes {
+            ServedBy::LocalPrefetch
+        } else {
+            ServedBy::LocalCache
+        };
+        self.metrics.record_served(served);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{generator, presets};
+
+    fn tiny_trace() -> Trace {
+        let mut cfg = presets::tiny();
+        cfg.duration_days = 2.0;
+        generator::generate(&cfg)
+    }
+
+    fn run_strategy(trace: &Trace, strategy: Strategy) -> RunMetrics {
+        let cfg = SimConfig {
+            strategy,
+            cache_bytes: 4 << 30,
+            rebuild_every: 6.0 * 3600.0,
+            recluster_every: 12.0 * 3600.0,
+            ..Default::default()
+        };
+        run(trace, &cfg)
+    }
+
+    #[test]
+    fn all_strategies_complete_every_request() {
+        let trace = tiny_trace();
+        for strategy in Strategy::ALL {
+            let m = run_strategy(&trace, strategy);
+            assert_eq!(
+                m.requests_total as usize,
+                trace.requests.len(),
+                "{}: {}/{} requests finalized",
+                strategy.name(),
+                m.requests_total,
+                trace.requests.len()
+            );
+        }
+    }
+
+    #[test]
+    fn cache_only_beats_no_cache_throughput() {
+        let trace = tiny_trace();
+        let none = run_strategy(&trace, Strategy::NoCache);
+        let cache = run_strategy(&trace, Strategy::CacheOnly);
+        assert!(
+            cache.throughput_mbps() > none.throughput_mbps() * 10.0,
+            "cache {} vs none {}",
+            cache.throughput_mbps(),
+            none.throughput_mbps()
+        );
+    }
+
+    #[test]
+    fn hpm_reduces_origin_requests_vs_cache_only() {
+        let trace = tiny_trace();
+        let cache = run_strategy(&trace, Strategy::CacheOnly);
+        let hpm = run_strategy(&trace, Strategy::Hpm);
+        assert!(
+            hpm.origin_fraction() < cache.origin_fraction(),
+            "hpm {} vs cache {}",
+            hpm.origin_fraction(),
+            cache.origin_fraction()
+        );
+    }
+
+    #[test]
+    fn no_cache_everything_hits_observatory() {
+        let trace = tiny_trace();
+        let m = run_strategy(&trace, Strategy::NoCache);
+        assert_eq!(m.requests_to_observatory, m.requests_total);
+        assert!((m.origin_fraction() - 1.0).abs() < 1e-9);
+        let (c, p) = m.local_fractions();
+        assert_eq!(c + p, 0.0);
+    }
+
+    #[test]
+    fn hpm_serves_prefetched_data_locally() {
+        let trace = tiny_trace();
+        let m = run_strategy(&trace, Strategy::Hpm);
+        let (_, prefetch_frac) = m.local_fractions();
+        assert!(
+            prefetch_frac > 0.02,
+            "expected some prefetch-served requests, got {prefetch_frac}"
+        );
+        assert!(m.recall > 0.0 && m.recall <= 1.0, "recall {}", m.recall);
+    }
+
+    #[test]
+    fn origin_bytes_conservation() {
+        // Cache strategies move no more origin bytes than NoCache + waste
+        // bound: every origin byte is a demand miss, prefetch or push.
+        let trace = tiny_trace();
+        let none = run_strategy(&trace, Strategy::NoCache);
+        let cache = run_strategy(&trace, Strategy::CacheOnly);
+        assert!(cache.origin_bytes <= none.origin_bytes * 1.01);
+        assert!(cache.origin_bytes > 0.0);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let trace = tiny_trace();
+        let a = run_strategy(&trace, Strategy::Hpm);
+        let b = run_strategy(&trace, Strategy::Hpm);
+        assert_eq!(a.requests_total, b.requests_total);
+        assert!((a.throughput.mean() - b.throughput.mean()).abs() < 1e-9);
+        assert!((a.origin_bytes - b.origin_bytes).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,18 @@
+//! The push-based data delivery framework (paper §IV, Fig. 5) and its
+//! simulation driver.
+//!
+//! * [`server`] — the observatory service model (task queue + ten
+//!   service processes).
+//! * [`framework`] — the end-to-end coordinator: request routing
+//!   (local cache → peer DTN → observatory), the data push engine
+//!   (pre-fetching + streaming), the placement engine, and the
+//!   discrete-event main loop over the fluid-flow network.
+//!
+//! The same driver runs every strategy of the evaluation grid
+//! ([`crate::prefetch::Strategy`]), which is how the experiment
+//! harnesses reproduce the paper's tables and figures.
+
+pub mod framework;
+pub mod server;
+
+pub use framework::{run, Framework, SimConfig};

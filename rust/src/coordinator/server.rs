@@ -1,0 +1,193 @@
+//! Observatory service model (paper §V-A1).
+//!
+//! The simulated observatory processes requests through a FIFO task
+//! queue drained by a fixed pool of **ten service processes**; each
+//! request holds a process for `overhead + bytes / io_rate` (query
+//! handling + storage read), after which the network transfer departs.
+//! When requests arrive faster than the pool drains, queueing time —
+//! the paper's *latency* metric — grows.  The caching/pre-fetching
+//! framework reduces latency precisely by keeping requests out of this
+//! queue (Table III).
+
+use std::collections::VecDeque;
+
+/// Service processes at the observatory (paper: ten).
+pub const N_SERVICE_PROCESSES: usize = 10;
+/// Fixed per-request processing overhead (seconds).
+pub const SERVICE_OVERHEAD: f64 = 4.0;
+/// Storage read rate per service process (bytes/second).
+pub const SERVICE_IO_BPS: f64 = 2.2e6;
+
+/// One queued observatory task.
+#[derive(Debug, Clone)]
+pub struct Task<T> {
+    pub payload: T,
+    pub bytes: f64,
+    pub enqueued_at: f64,
+}
+
+/// Outcome of starting a task.
+#[derive(Debug, Clone)]
+pub struct Started<T> {
+    pub payload: T,
+    pub bytes: f64,
+    /// Queue latency: submission → service start (the paper's metric).
+    pub queue_wait: f64,
+    /// When the service slot frees and the network transfer departs.
+    pub service_done_at: f64,
+}
+
+/// FIFO task queue + bounded service pool.
+pub struct Observatory<T> {
+    queue: VecDeque<Task<T>>,
+    busy: usize,
+    capacity: usize,
+    overhead: f64,
+    io_bps: f64,
+    /// Lifetime counters.
+    pub tasks_seen: u64,
+    pub max_queue_len: usize,
+}
+
+impl<T> Observatory<T> {
+    pub fn new() -> Self {
+        Self::with_params(N_SERVICE_PROCESSES, SERVICE_OVERHEAD, SERVICE_IO_BPS)
+    }
+
+    pub fn with_params(capacity: usize, overhead: f64, io_bps: f64) -> Self {
+        Self {
+            queue: VecDeque::new(),
+            busy: 0,
+            capacity,
+            overhead,
+            io_bps,
+            tasks_seen: 0,
+            max_queue_len: 0,
+        }
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn busy(&self) -> usize {
+        self.busy
+    }
+
+    pub fn idle_slots(&self) -> usize {
+        self.capacity - self.busy
+    }
+
+    /// Enqueue a request for service.
+    pub fn submit(&mut self, payload: T, bytes: f64, now: f64) {
+        self.tasks_seen += 1;
+        self.queue.push_back(Task {
+            payload,
+            bytes,
+            enqueued_at: now,
+        });
+        self.max_queue_len = self.max_queue_len.max(self.queue.len());
+    }
+
+    /// Try to start the next queued task on a free service process.
+    /// The caller schedules the returned `service_done_at` event and
+    /// calls [`Observatory::release`] when it fires.
+    pub fn try_start(&mut self, now: f64) -> Option<Started<T>> {
+        if self.busy >= self.capacity {
+            return None;
+        }
+        let task = self.queue.pop_front()?;
+        self.busy += 1;
+        let service_time = self.overhead + task.bytes / self.io_bps;
+        Some(Started {
+            bytes: task.bytes,
+            queue_wait: now - task.enqueued_at,
+            service_done_at: now + service_time,
+            payload: task.payload,
+        })
+    }
+
+    /// Release a service slot (its task's storage read completed).
+    pub fn release(&mut self) {
+        debug_assert!(self.busy > 0);
+        self.busy = self.busy.saturating_sub(1);
+    }
+
+    pub fn is_drained(&self) -> bool {
+        self.queue.is_empty() && self.busy == 0
+    }
+}
+
+impl<T> Default for Observatory<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_latency() {
+        let mut obs: Observatory<u32> = Observatory::with_params(1, 1.0, 1e6);
+        obs.submit(1, 0.0, 0.0);
+        obs.submit(2, 0.0, 0.5);
+        let a = obs.try_start(2.0).unwrap();
+        assert_eq!(a.payload, 1);
+        assert_eq!(a.queue_wait, 2.0);
+        // Pool exhausted.
+        assert!(obs.try_start(2.0).is_none());
+        obs.release();
+        let b = obs.try_start(3.0).unwrap();
+        assert_eq!(b.payload, 2);
+        assert_eq!(b.queue_wait, 2.5);
+    }
+
+    #[test]
+    fn service_time_includes_io() {
+        let mut obs: Observatory<()> = Observatory::with_params(1, 1.0, 100.0);
+        obs.submit((), 200.0, 0.0);
+        let s = obs.try_start(0.0).unwrap();
+        assert_eq!(s.service_done_at, 3.0); // 1.0 overhead + 200/100
+    }
+
+    #[test]
+    fn pool_capacity_respected() {
+        let mut obs: Observatory<u32> = Observatory::new();
+        for i in 0..15 {
+            obs.submit(i, 0.0, 0.0);
+        }
+        let mut started = 0;
+        while obs.try_start(0.0).is_some() {
+            started += 1;
+        }
+        assert_eq!(started, N_SERVICE_PROCESSES);
+        assert_eq!(obs.queue_len(), 5);
+        assert_eq!(obs.idle_slots(), 0);
+        obs.release();
+        assert!(obs.try_start(1.0).is_some());
+    }
+
+    #[test]
+    fn drained_state() {
+        let mut obs: Observatory<()> = Observatory::new();
+        assert!(obs.is_drained());
+        obs.submit((), 1.0, 0.0);
+        assert!(!obs.is_drained());
+        obs.try_start(0.0).unwrap();
+        assert!(!obs.is_drained());
+        obs.release();
+        assert!(obs.is_drained());
+    }
+
+    #[test]
+    fn max_queue_tracks_peak() {
+        let mut obs: Observatory<u32> = Observatory::with_params(1, 1.0, 1e6);
+        for i in 0..7 {
+            obs.submit(i, 0.0, 0.0);
+        }
+        obs.try_start(0.0);
+        assert_eq!(obs.max_queue_len, 7);
+    }
+}

@@ -1,0 +1,43 @@
+//! # obs-delivery
+//!
+//! A full reproduction of *"Leveraging User Access Patterns and
+//! Advanced Cyberinfrastructure to Accelerate Data Delivery from
+//! Shared-use Scientific Observatories"* (Qin et al., 2020): a
+//! push-based data delivery framework for shared-use observatories,
+//! running over a simulated Virtual Data Collaboratory (VDC) Science
+//! DMZ of Data Transfer Nodes.
+//!
+//! The crate is the Layer-3 Rust coordinator of a three-layer stack:
+//! prediction models (batched ARIMA-style gap forecasting, K-Means
+//! virtual-group clustering, streaming statistics) are authored in
+//! JAX + Pallas, AOT-lowered to HLO text at build time, and executed
+//! from Rust through the PJRT CPU client ([`runtime`]).  Python never
+//! runs on the request path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`trace`] — observatory data model, synthetic OOI/GAGE trace
+//!   generators, request classification (paper §III).
+//! * [`cache`] — chunked cache stores, eviction policies, the
+//!   distributed cache network (§IV-C).
+//! * [`simnet`] — 7-DTN VDC topology, fluid-flow transfers,
+//!   discrete-event queues (§V-A1).
+//! * [`prefetch`] — the hybrid pre-fetching model and the two
+//!   published baselines (§IV-A, §V-A2).
+//! * [`placement`] — virtual groups and local data hubs (§IV-C2).
+//! * [`coordinator`] — the push-based delivery framework itself:
+//!   request routing, observatory service model, push engine (§IV-D).
+//! * [`runtime`] — PJRT execution of the AOT artifacts.
+//! * [`metrics`], [`analysis`], [`experiments`] — evaluation (§V).
+
+pub mod analysis;
+pub mod cache;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod placement;
+pub mod prefetch;
+pub mod runtime;
+pub mod simnet;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,307 @@
+//! `repro` — CLI for the push-based data delivery framework.
+//!
+//! Subcommands:
+//!
+//! * `experiment --id <id>`   regenerate a paper table/figure
+//! * `analyze --observatory`  §III trace analysis (Fig. 2-4, Tables I-II)
+//! * `simulate ...`           one simulation run with explicit knobs
+//! * `generate-trace ...`     dump a synthetic trace as CSV
+//! * `runtime-check`          load + execute the AOT artifacts via PJRT
+//!                            and compare against the pure-Rust models
+//!
+//! Argument parsing is hand-rolled (the offline vendored crate set has
+//! no clap); every flag is `--name value`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use obsd::cache::policy::PolicyKind;
+use obsd::coordinator::{run, SimConfig};
+use obsd::experiments::{self, ExpOptions};
+use obsd::prefetch::Strategy;
+use obsd::simnet::NetCondition;
+use obsd::trace::{generator, presets};
+
+const USAGE: &str = "\
+repro — push-based data delivery framework (Qin et al. 2020 reproduction)
+
+USAGE:
+  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|all>
+                   [--scale F] [--days F] [--out DIR] [--quick] [--seed N]
+  repro analyze [--scale F]
+  repro simulate --observatory <ooi|gage> [--strategy S] [--policy P]
+                 [--cache-gb F] [--net best|medium|worst] [--traffic F]
+                 [--no-placement] [--scale F] [--seed N]
+  repro generate-trace --observatory <ooi|gage> [--scale F] [--out FILE]
+  repro runtime-check [--artifacts DIR]
+  repro help
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("unexpected argument '{a}' (flags are --name value)");
+        };
+        // Boolean flags.
+        if matches!(key, "quick" | "no-placement") {
+            flags.insert(key.to_string(), "true".to_string());
+            i += 1;
+            continue;
+        }
+        let Some(value) = args.get(i + 1) else {
+            bail!("flag --{key} needs a value");
+        };
+        flags.insert(key.to_string(), value.clone());
+        i += 2;
+    }
+    Ok(flags)
+}
+
+fn get_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .with_context(|| format!("--{key} must be a number, got '{v}'")),
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+
+    match cmd.as_str() {
+        "experiment" => cmd_experiment(&flags),
+        "analyze" => cmd_analyze(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "generate-trace" => cmd_generate(&flags),
+        "runtime-check" => cmd_runtime_check(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn exp_options(flags: &HashMap<String, String>) -> Result<ExpOptions> {
+    let mut opts = if flags.contains_key("quick") {
+        ExpOptions::quick()
+    } else {
+        ExpOptions::default()
+    };
+    opts.scale = get_f64(flags, "scale", opts.scale)?;
+    opts.days_factor = get_f64(flags, "days", opts.days_factor)?;
+    if let Some(dir) = flags.get("out") {
+        opts.out_dir = Some(dir.into());
+    }
+    if let Some(seed) = flags.get("seed") {
+        opts.seed = Some(seed.parse().context("--seed must be an integer")?);
+    }
+    Ok(opts)
+}
+
+fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
+    let id = flags.get("id").context("--id is required")?;
+    let opts = exp_options(flags)?;
+    let t0 = std::time::Instant::now();
+    let report = experiments::run_experiment(id, &opts)?;
+    println!("{report}");
+    eprintln!("[{}s] experiment '{id}' done", t0.elapsed().as_secs());
+    if let Some(dir) = &opts.out_dir {
+        eprintln!("CSV written under {}", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_analyze(flags: &HashMap<String, String>) -> Result<()> {
+    let opts = exp_options(flags)?;
+    for id in ["table1", "table2", "fig2", "fig4"] {
+        println!("{}", experiments::run_experiment(id, &opts)?);
+    }
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let obs = flags
+        .get("observatory")
+        .context("--observatory is required")?;
+    let mut preset = presets::by_name(obs)
+        .with_context(|| format!("unknown observatory '{obs}' (ooi|gage|tiny)"))?;
+    preset.scale *= get_f64(flags, "scale", 1.0)?;
+    if let Some(seed) = flags.get("seed") {
+        preset.seed = seed.parse().context("--seed must be an integer")?;
+    }
+    let strategy = match flags.get("strategy") {
+        None => Strategy::Hpm,
+        Some(s) => Strategy::parse(s).with_context(|| format!("bad --strategy '{s}'"))?,
+    };
+    let policy = match flags.get("policy") {
+        None => PolicyKind::Lru,
+        Some(p) => PolicyKind::parse(p).with_context(|| format!("bad --policy '{p}'"))?,
+    };
+    let net = match flags.get("net") {
+        None => NetCondition::Best,
+        Some(n) => NetCondition::parse(n).with_context(|| format!("bad --net '{n}'"))?,
+    };
+    let cfg = SimConfig {
+        strategy,
+        policy,
+        cache_bytes: (get_f64(flags, "cache-gb", 8.0)? * (1u64 << 30) as f64) as u64,
+        net,
+        traffic_factor: get_f64(flags, "traffic", 1.0)?,
+        placement: !flags.contains_key("no-placement"),
+        ..Default::default()
+    };
+    eprintln!("generating {obs} trace ...");
+    let trace = generator::generate(&preset);
+    eprintln!(
+        "simulating {} requests, strategy={}, policy={}, cache={}, net={} ...",
+        trace.requests.len(),
+        strategy.name(),
+        policy.name(),
+        obsd::util::fmt_bytes(cfg.cache_bytes as f64),
+        net.name()
+    );
+    let m = run(&trace, &cfg);
+    println!("requests            {}", m.requests_total);
+    println!("throughput (mean)   {:.2} Mbps", m.throughput_mbps());
+    println!("throughput (volume) {:.2} Mbps", m.agg_throughput_mbps());
+    println!("queue latency       {:.4} s", m.latency_secs());
+    println!("origin fraction     {:.4}", m.origin_fraction());
+    println!("origin bytes        {}", obsd::util::fmt_bytes(m.origin_bytes));
+    println!("cache bytes         {}", obsd::util::fmt_bytes(m.cache_bytes));
+    let (c, p) = m.local_fractions();
+    println!(
+        "served local        {:.1}% cached + {:.1}% pre-fetched",
+        c * 100.0,
+        p * 100.0
+    );
+    println!("recall              {:.4}", m.recall);
+    println!("wall clock          {:.2} s", m.wall_secs);
+    Ok(())
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
+    let obs = flags
+        .get("observatory")
+        .context("--observatory is required")?;
+    let mut preset = presets::by_name(obs)
+        .with_context(|| format!("unknown observatory '{obs}'"))?;
+    preset.scale *= get_f64(flags, "scale", 1.0)?;
+    let trace = generator::generate(&preset);
+    let mut csv = String::from("ts,user,continent,stream,site,range_start,range_end,bytes\n");
+    for r in &trace.requests {
+        let u = trace.user(r.user);
+        let s = trace.stream(r.stream);
+        csv.push_str(&format!(
+            "{:.1},{},{},{},{},{:.1},{:.1},{:.0}\n",
+            r.ts,
+            r.user.0,
+            u.continent.name().replace(' ', ""),
+            r.stream.0,
+            s.site.0,
+            r.range.start,
+            r.range.end,
+            r.bytes(&trace.streams)
+        ));
+    }
+    match flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, &csv)?;
+            eprintln!("wrote {} requests to {path}", trace.requests.len());
+        }
+        None => print!("{csv}"),
+    }
+    Ok(())
+}
+
+fn cmd_runtime_check(flags: &HashMap<String, String>) -> Result<()> {
+    use obsd::prefetch::arima::{GapPredictor, RustArima};
+    let dir = flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(obsd::runtime::default_artifacts_dir);
+    println!("loading AOT artifacts from {} ...", dir.display());
+    let engine = obsd::runtime::Engine::load(&dir)?;
+    println!(
+        "compiled models: predictor[B={},N={}], kmeans[N={},K={}], stream_stats[B={},W={}]",
+        engine.pred_batch,
+        engine.pred_window,
+        engine.km_points,
+        engine.km_clusters,
+        engine.stream_batch,
+        engine.stream_window
+    );
+
+    // Cross-check the PJRT predictor against the pure-Rust fallback.
+    let mut rng = obsd::util::rng::Rng::new(42);
+    let windows: Vec<Vec<f64>> = (0..engine.pred_batch + 3)
+        .map(|_| {
+            let period = rng.range(60.0, 86_400.0);
+            (0..60).map(|_| rng.gauss(period, period * 0.02)).collect()
+        })
+        .collect();
+    let pjrt = engine.predict_gaps_batch(&windows)?;
+    let mut rust = RustArima::new();
+    let fallback = rust.predict_gaps(&windows);
+    let mut max_rel = 0.0f64;
+    for (a, b) in pjrt.iter().zip(&fallback) {
+        max_rel = max_rel.max((a - b).abs() / b.abs().max(1e-9));
+    }
+    println!(
+        "predictor parity: {} windows, max relative deviation {:.3e} (f32 vs f64)",
+        windows.len(),
+        max_rel
+    );
+    if max_rel > 1e-2 {
+        bail!("PJRT predictor deviates from the Rust reference");
+    }
+
+    // K-Means smoke.
+    let pts: Vec<[f32; 4]> = (0..64)
+        .map(|i| {
+            let c = if i % 2 == 0 { 0.0 } else { 10.0 };
+            [
+                c + rng.gauss(0.0, 0.1) as f32,
+                c + rng.gauss(0.0, 0.1) as f32,
+                c as f32,
+                1.0,
+            ]
+        })
+        .collect();
+    let weights = vec![1.0f32; pts.len()];
+    let mut centroids = vec![[0.0f32; 4]; engine.km_clusters];
+    centroids[1] = [10.0, 10.0, 10.0, 1.0];
+    let (_, assign, inertia) = engine.kmeans_step(&pts, &weights, &centroids)?;
+    println!(
+        "kmeans: inertia {inertia:.3}, assignments sample {:?}",
+        &assign[..4]
+    );
+
+    // Stream stats smoke.
+    let stats = engine.stream_stats_batch(&[vec![60.0; 32]])?;
+    println!(
+        "stream_stats: minutely stream → ewma {:.2}s rate {:.4}Hz jitter {:.4}",
+        stats[0].0, stats[0].1, stats[0].2
+    );
+    println!("device calls: {}", engine.calls.get());
+    println!("runtime-check OK");
+    Ok(())
+}

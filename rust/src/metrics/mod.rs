@@ -1,0 +1,179 @@
+//! Evaluation metrics (paper §V-A5).
+//!
+//! * **Latency** — time between request submission and the observatory
+//!   *starting to process* it, including task-queue wait.
+//! * **Throughput** — request bytes divided by total transfer time.
+//! * **Recall** — fraction of pre-fetched bytes later accessed.
+//! * Request accounting: how many requests reach the observatory
+//!   (Table III), and how requests are served locally — split between
+//!   previously cached and pre-fetched data (Fig. 13).
+
+use crate::util::stats::Accum;
+
+/// How one demand request was (predominantly) served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServedBy {
+    /// Entirely from the user's local DTN, data cached by earlier demand.
+    LocalCache,
+    /// Entirely from the local DTN, data placed there by pre-fetch/stream.
+    LocalPrefetch,
+    /// Some portion from a peer DTN's cache.
+    Peer,
+    /// Some portion from the observatory.
+    Observatory,
+}
+
+/// Aggregated metrics for one simulation run.
+#[derive(Debug, Default, Clone)]
+pub struct RunMetrics {
+    /// Per-request achieved throughput (bytes/s).
+    pub throughput: Accum,
+    /// Queue latency of requests that reached the observatory (s).
+    pub latency: Accum,
+    /// Demand requests, total.
+    pub requests_total: u64,
+    /// Demand requests with any observatory-served portion.
+    pub requests_to_observatory: u64,
+    /// Requests served entirely at the local DTN from demand-cached data.
+    pub served_local_cache: u64,
+    /// Requests served entirely at the local DTN from pre-fetched data
+    /// (includes streamed pushes).
+    pub served_local_prefetch: u64,
+    /// Requests with a peer-DTN component.
+    pub served_peer: u64,
+    /// Bytes transferred out of the observatory (origin traffic).
+    pub origin_bytes: f64,
+    /// Bytes served from caches (local or peer).
+    pub cache_bytes: f64,
+    /// Bytes moved DTN→DTN by the placement strategy.
+    pub placement_bytes: f64,
+    /// Throughput of peer-DTN cache retrievals (bytes/s samples).
+    pub peer_throughput: Accum,
+    /// Total served bytes and total request elapsed time — the
+    /// volume-weighted aggregate throughput (big transfers count
+    /// proportionally, unlike the per-request mean).
+    pub sum_bytes: f64,
+    pub sum_elapsed: f64,
+    /// Pre-fetch recall (set at end of run from the cache network).
+    pub recall: f64,
+    /// Wall-clock spent in the run (for the §Perf log).
+    pub wall_secs: f64,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        Self {
+            throughput: Accum::new(),
+            latency: Accum::new(),
+            peer_throughput: Accum::new(),
+            ..Default::default()
+        }
+    }
+
+    pub fn record_served(&mut self, served: ServedBy) {
+        self.requests_total += 1;
+        match served {
+            ServedBy::LocalCache => self.served_local_cache += 1,
+            ServedBy::LocalPrefetch => self.served_local_prefetch += 1,
+            ServedBy::Peer => self.served_peer += 1,
+            ServedBy::Observatory => self.requests_to_observatory += 1,
+        }
+    }
+
+    /// Mean request throughput in Mbps (the unit of Tables IV-V).
+    pub fn throughput_mbps(&self) -> f64 {
+        crate::util::bytes_per_sec_to_mbps(self.throughput.mean())
+    }
+
+    /// Volume-weighted aggregate throughput in Mbps: total bytes over
+    /// total per-request elapsed time.  Sensitive to how the big
+    /// overlapping/human transfers are served, which is where cache
+    /// capacity and eviction policy actually bite.
+    pub fn agg_throughput_mbps(&self) -> f64 {
+        if self.sum_elapsed <= 0.0 {
+            0.0
+        } else {
+            crate::util::bytes_per_sec_to_mbps(self.sum_bytes / self.sum_elapsed)
+        }
+    }
+
+    /// Mean queue latency (seconds).
+    pub fn latency_secs(&self) -> f64 {
+        self.latency.mean()
+    }
+
+    /// Fraction of requests that had to be served by the observatory
+    /// (Table III's normalized count, with No-Cache ≡ 1.0).
+    pub fn origin_fraction(&self) -> f64 {
+        if self.requests_total == 0 {
+            0.0
+        } else {
+            self.requests_to_observatory as f64 / self.requests_total as f64
+        }
+    }
+
+    /// Fraction of requests served entirely from the local DTN,
+    /// split (cached, pre-fetched) — Fig. 13's two bars.
+    pub fn local_fractions(&self) -> (f64, f64) {
+        if self.requests_total == 0 {
+            return (0.0, 0.0);
+        }
+        let n = self.requests_total as f64;
+        (
+            self.served_local_cache as f64 / n,
+            self.served_local_prefetch as f64 / n,
+        )
+    }
+
+    /// Network-traffic reduction at the observatory vs a no-cache run
+    /// (the paper's headline 60.7% / 19.7%).
+    pub fn traffic_reduction_vs(&self, baseline_origin_bytes: f64) -> f64 {
+        if baseline_origin_bytes <= 0.0 {
+            0.0
+        } else {
+            1.0 - self.origin_bytes / baseline_origin_bytes
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn served_accounting() {
+        let mut m = RunMetrics::new();
+        m.record_served(ServedBy::LocalCache);
+        m.record_served(ServedBy::LocalPrefetch);
+        m.record_served(ServedBy::LocalPrefetch);
+        m.record_served(ServedBy::Observatory);
+        assert_eq!(m.requests_total, 4);
+        assert_eq!(m.origin_fraction(), 0.25);
+        let (c, p) = m.local_fractions();
+        assert_eq!(c, 0.25);
+        assert_eq!(p, 0.5);
+    }
+
+    #[test]
+    fn throughput_unit_conversion() {
+        let mut m = RunMetrics::new();
+        m.throughput.add(1.25e9); // 10 Gbps in bytes/s
+        assert!((m.throughput_mbps() - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn traffic_reduction() {
+        let mut m = RunMetrics::new();
+        m.origin_bytes = 40.0;
+        assert!((m.traffic_reduction_vs(100.0) - 0.6).abs() < 1e-12);
+        assert_eq!(m.traffic_reduction_vs(0.0), 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = RunMetrics::new();
+        assert_eq!(m.throughput_mbps(), 0.0);
+        assert_eq!(m.latency_secs(), 0.0);
+        assert_eq!(m.origin_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! K-Means clustering backends for virtual-group formation (§IV-C2).
+//!
+//! [`ClusterBackend`] abstracts one weighted Lloyd step so the
+//! coordinator can run either the pure-Rust implementation or the
+//! AOT-compiled JAX/Pallas model through PJRT ([`crate::runtime`]).
+//! Both are numerically identical (the integration suite asserts it).
+
+use crate::util::rng::Rng;
+
+/// Feature dimension: (geo_x, geo_y, interest, frequency) — must match
+/// `runtime::KM_DIM` and the Layer-2 model.
+pub const DIM: usize = 4;
+
+/// One Lloyd iteration over weighted points.
+pub trait ClusterBackend {
+    /// Returns (new_centroids, assignment, inertia).
+    fn step(
+        &mut self,
+        points: &[[f32; DIM]],
+        weights: &[f32],
+        centroids: &[[f32; DIM]],
+    ) -> (Vec<[f32; DIM]>, Vec<i32>, f32);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust Lloyd step (mirrors `python/compile/model.py::kmeans_step`).
+#[derive(Debug, Default)]
+pub struct RustKmeans;
+
+impl ClusterBackend for RustKmeans {
+    fn step(
+        &mut self,
+        points: &[[f32; DIM]],
+        weights: &[f32],
+        centroids: &[[f32; DIM]],
+    ) -> (Vec<[f32; DIM]>, Vec<i32>, f32) {
+        assert_eq!(points.len(), weights.len());
+        let k = centroids.len();
+        let mut sums = vec![[0.0f64; DIM]; k];
+        let mut counts = vec![0.0f64; k];
+        let mut assign = Vec::with_capacity(points.len());
+        let mut inertia = 0.0f64;
+        for (p, &w) in points.iter().zip(weights) {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for (j, c) in centroids.iter().enumerate() {
+                let mut d = 0.0f64;
+                for t in 0..DIM {
+                    let diff = (p[t] - c[t]) as f64;
+                    d += diff * diff;
+                }
+                if d < best_d {
+                    best_d = d;
+                    best = j;
+                }
+            }
+            assign.push(best as i32);
+            inertia += w as f64 * best_d;
+            counts[best] += w as f64;
+            for t in 0..DIM {
+                sums[best][t] += w as f64 * p[t] as f64;
+            }
+        }
+        let new_centroids = (0..k)
+            .map(|j| {
+                if counts[j] > 0.0 {
+                    let mut c = [0.0f32; DIM];
+                    for t in 0..DIM {
+                        c[t] = (sums[j][t] / counts[j]) as f32;
+                    }
+                    c
+                } else {
+                    centroids[j] // empty-cluster guard: keep previous
+                }
+            })
+            .collect();
+        (new_centroids, assign, inertia as f32)
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-kmeans"
+    }
+}
+
+/// k-means++ style seeding (first uniform, rest distance-weighted).
+pub fn seed_centroids(points: &[[f32; DIM]], k: usize, rng: &mut Rng) -> Vec<[f32; DIM]> {
+    assert!(!points.is_empty());
+    let mut centroids: Vec<[f32; DIM]> = Vec::with_capacity(k);
+    centroids.push(points[rng.below(points.len())]);
+    while centroids.len() < k {
+        let weights: Vec<f64> = points
+            .iter()
+            .map(|p| {
+                centroids
+                    .iter()
+                    .map(|c| {
+                        (0..DIM)
+                            .map(|t| ((p[t] - c[t]) as f64).powi(2))
+                            .sum::<f64>()
+                    })
+                    .fold(f64::INFINITY, f64::min)
+                    .max(1e-12)
+            })
+            .collect();
+        centroids.push(points[rng.weighted(&weights)]);
+    }
+    centroids
+}
+
+/// Run Lloyd to (near) convergence. Returns (centroids, assignment).
+pub fn cluster(
+    backend: &mut dyn ClusterBackend,
+    points: &[[f32; DIM]],
+    weights: &[f32],
+    k: usize,
+    max_iters: usize,
+    rng: &mut Rng,
+) -> (Vec<[f32; DIM]>, Vec<i32>) {
+    let k = k.min(points.len()).max(1);
+    let mut centroids = seed_centroids(points, k, rng);
+    let mut assign = vec![0i32; points.len()];
+    let mut last_inertia = f32::INFINITY;
+    for _ in 0..max_iters {
+        let (c, a, inertia) = backend.step(points, weights, &centroids);
+        centroids = c;
+        assign = a;
+        if (last_inertia - inertia).abs() <= 1e-6 * last_inertia.max(1.0) {
+            break;
+        }
+        last_inertia = inertia;
+    }
+    (centroids, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob_points(rng: &mut Rng, centers: &[[f32; DIM]], per: usize, spread: f32) -> Vec<[f32; DIM]> {
+        let mut pts = Vec::new();
+        for c in centers {
+            for _ in 0..per {
+                let mut p = *c;
+                for t in 0..DIM {
+                    p[t] += rng.gauss(0.0, spread as f64) as f32;
+                }
+                pts.push(p);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn lloyd_reduces_inertia() {
+        let mut rng = Rng::new(1);
+        let centers = [[0.0f32; DIM], [10.0f32; DIM], [-10.0f32, 5.0, 0.0, 3.0]];
+        let pts = blob_points(&mut rng, &centers, 40, 0.3);
+        let w = vec![1.0f32; pts.len()];
+        let mut backend = RustKmeans;
+        let seeds = seed_centroids(&pts, 3, &mut rng);
+        let (_, _, i1) = backend.step(&pts, &w, &seeds);
+        let (c2, _, _) = backend.step(&pts, &w, &seeds);
+        let (_, _, i3) = backend.step(&pts, &w, &c2);
+        assert!(i3 <= i1 + 1e-3, "i1={i1} i3={i3}");
+    }
+
+    #[test]
+    fn recovers_blobs() {
+        let mut rng = Rng::new(2);
+        let centers = [[0.0f32; DIM], [20.0f32; DIM]];
+        let pts = blob_points(&mut rng, &centers, 50, 0.1);
+        let w = vec![1.0f32; pts.len()];
+        let mut backend = RustKmeans;
+        let (c, assign) = cluster(&mut backend, &pts, &w, 2, 20, &mut rng);
+        // Points from the same blob share an assignment.
+        assert_eq!(assign[0..50].iter().collect::<std::collections::HashSet<_>>().len(), 1);
+        assert_eq!(assign[50..].iter().collect::<std::collections::HashSet<_>>().len(), 1);
+        assert_ne!(assign[0], assign[50]);
+        // Centroids near the true centers.
+        let mut near0 = false;
+        let mut near20 = false;
+        for cc in &c {
+            let d0: f32 = (0..DIM).map(|t| cc[t].powi(2)).sum();
+            let d20: f32 = (0..DIM).map(|t| (cc[t] - 20.0).powi(2)).sum();
+            near0 |= d0 < 1.0;
+            near20 |= d20 < 1.0;
+        }
+        assert!(near0 && near20, "centroids {c:?}");
+    }
+
+    #[test]
+    fn zero_weight_points_ignored() {
+        let pts = vec![[0.0f32; DIM], [100.0f32; DIM]];
+        let w = vec![1.0f32, 0.0];
+        let mut backend = RustKmeans;
+        let (c, _, _) = backend.step(&pts, &w, &[[1.0f32; DIM]]);
+        assert!((c[0][0] - 0.0).abs() < 1e-6, "centroid pulled by zero-weight point: {c:?}");
+    }
+
+    #[test]
+    fn empty_cluster_keeps_centroid() {
+        let pts = vec![[0.0f32; DIM]];
+        let w = vec![1.0f32];
+        let far = [99.0f32; DIM];
+        let mut backend = RustKmeans;
+        let (c, assign, _) = backend.step(&pts, &w, &[[0.0f32; DIM], far]);
+        assert_eq!(assign, vec![0]);
+        assert_eq!(c[1], far);
+    }
+
+    #[test]
+    fn k_larger_than_points_clamped() {
+        let mut rng = Rng::new(3);
+        let pts = vec![[1.0f32; DIM], [2.0f32; DIM]];
+        let w = vec![1.0f32; 2];
+        let mut backend = RustKmeans;
+        let (c, assign) = cluster(&mut backend, &pts, &w, 10, 5, &mut rng);
+        assert_eq!(c.len(), 2);
+        assert_eq!(assign.len(), 2);
+    }
+}

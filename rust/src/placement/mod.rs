@@ -1,0 +1,366 @@
+//! Data placement strategy: virtual groups + local data hubs
+//! (paper §IV-C2, Fig. 6; evaluated in Table IV).
+//!
+//! Users with common data interests are clustered (K-Means over
+//! request features) into *virtual groups*; each group is split by
+//! geography (client DTN) into sub-groups, and a *local data hub* DTN
+//! is selected per group by eq. 2 — a weighted sum of network
+//! throughput, resource availability and request frequency
+//! (θ_p = 0.6, θ_u = 0.2, θ_f = 0.2).  Hot chunks of the group are
+//! replicated to the hub so peer lookups hit a well-connected cache.
+
+pub mod kmeans;
+
+use std::collections::HashMap;
+
+use crate::cache::network::CacheNetwork;
+use crate::simnet::{Topology, N_DTNS, SERVER};
+use crate::trace::{Trace, UserId};
+use crate::util::rng::Rng;
+use kmeans::{ClusterBackend, DIM};
+
+/// Eq. 2 weights (paper: empirically 0.6 / 0.2 / 0.2).
+pub const THETA_P: f64 = 0.6;
+pub const THETA_U: f64 = 0.2;
+pub const THETA_F: f64 = 0.2;
+
+/// Per-user running feature state, updated on every demand request.
+#[derive(Debug, Clone, Default)]
+pub struct UserStats {
+    pub requests: u64,
+    /// Mean site coordinates of accessed data (interest locus).
+    pub sum_x: f64,
+    pub sum_y: f64,
+    /// Mean stream id (coarse "interest" axis, matching the paper's
+    /// instrument-serialization in Fig. 4).
+    pub sum_stream: f64,
+}
+
+impl UserStats {
+    pub fn observe(&mut self, site_x: f64, site_y: f64, stream: u32) {
+        self.requests += 1;
+        self.sum_x += site_x;
+        self.sum_y += site_y;
+        self.sum_stream += stream as f64;
+    }
+
+    /// Feature vector: (geo_x, geo_y, interest, log-frequency).
+    pub fn features(&self) -> [f32; DIM] {
+        let n = self.requests.max(1) as f64;
+        [
+            (self.sum_x / n) as f32,
+            (self.sum_y / n) as f32,
+            (self.sum_stream / n) as f32,
+            ((self.requests as f64).ln_1p()) as f32,
+        ]
+    }
+}
+
+/// One virtual group after clustering.
+#[derive(Debug, Clone)]
+pub struct VirtualGroup {
+    pub centroid: [f32; DIM],
+    pub members: Vec<UserId>,
+    /// Members bucketed by their client DTN (the sub-groups of Fig. 6).
+    pub by_dtn: HashMap<usize, Vec<UserId>>,
+    /// Selected local data hub.
+    pub hub: usize,
+}
+
+/// The placement engine.
+pub struct Placement {
+    pub stats: HashMap<UserId, UserStats>,
+    pub groups: Vec<VirtualGroup>,
+    backend: Box<dyn ClusterBackend>,
+    k: usize,
+    rng: Rng,
+    /// Bytes replicated to hubs (Table IV accounting).
+    pub replicated_bytes: f64,
+    /// Chunks placed by the strategy over the run.
+    pub replicas_placed: u64,
+}
+
+impl Placement {
+    pub fn new(backend: Box<dyn ClusterBackend>, k: usize, seed: u64) -> Self {
+        Self {
+            stats: HashMap::new(),
+            groups: Vec::new(),
+            backend,
+            k,
+            rng: Rng::new(seed),
+            replicated_bytes: 0.0,
+            replicas_placed: 0,
+        }
+    }
+
+    /// Record a demand request for feature building.
+    pub fn observe(&mut self, user: UserId, site_x: f64, site_y: f64, stream: u32) {
+        self.stats
+            .entry(user)
+            .or_default()
+            .observe(site_x, site_y, stream);
+    }
+
+    /// Re-cluster users into virtual groups and select hubs (periodic).
+    pub fn recluster(&mut self, trace: &Trace, topology: &Topology, caches: &CacheNetwork) {
+        let mut users: Vec<UserId> = self.stats.keys().copied().collect();
+        users.sort_unstable();
+        if users.len() < 2 {
+            self.groups.clear();
+            return;
+        }
+        // Normalize features to comparable scales.
+        let raw: Vec<[f32; DIM]> = users.iter().map(|u| self.stats[u].features()).collect();
+        let points = normalize(&raw);
+        let weights = vec![1.0f32; points.len()];
+        let k = self.k.min(points.len());
+        let (centroids, assign) = kmeans::cluster(
+            self.backend.as_mut(),
+            &points,
+            &weights,
+            k,
+            10,
+            &mut self.rng,
+        );
+
+        let mut groups: Vec<VirtualGroup> = centroids
+            .iter()
+            .map(|c| VirtualGroup {
+                centroid: *c,
+                members: Vec::new(),
+                by_dtn: HashMap::new(),
+                hub: SERVER,
+            })
+            .collect();
+        for (i, &user) in users.iter().enumerate() {
+            let g = assign[i] as usize;
+            groups[g].members.push(user);
+            let dtn = trace.user(user).dtn();
+            groups[g].by_dtn.entry(dtn).or_default().push(user);
+        }
+        groups.retain(|g| !g.members.is_empty());
+        for g in &mut groups {
+            g.hub = select_hub(g, &self.stats, topology, caches);
+        }
+        self.groups = groups;
+    }
+
+    /// The hub DTN for a user's group, if clustered.
+    pub fn hub_for(&self, user: UserId) -> Option<usize> {
+        self.groups
+            .iter()
+            .find(|g| g.members.contains(&user))
+            .map(|g| g.hub)
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+/// Min-max normalize each feature column to [0, 1].
+fn normalize(points: &[[f32; DIM]]) -> Vec<[f32; DIM]> {
+    let mut lo = [f32::INFINITY; DIM];
+    let mut hi = [f32::NEG_INFINITY; DIM];
+    for p in points {
+        for t in 0..DIM {
+            lo[t] = lo[t].min(p[t]);
+            hi[t] = hi[t].max(p[t]);
+        }
+    }
+    points
+        .iter()
+        .map(|p| {
+            let mut q = [0.0f32; DIM];
+            for t in 0..DIM {
+                let span = hi[t] - lo[t];
+                q[t] = if span > 1e-9 { (p[t] - lo[t]) / span } else { 0.5 };
+            }
+            q
+        })
+        .collect()
+}
+
+/// Eq. 2: `V_dh = argmax_i  θ_p Σ_j P_ij + θ_u U_i + θ_f F_i` over the
+/// client DTNs hosting the group's sub-groups.
+pub fn select_hub(
+    group: &VirtualGroup,
+    stats: &HashMap<UserId, UserStats>,
+    topology: &Topology,
+    caches: &CacheNetwork,
+) -> usize {
+    let mut candidates: Vec<usize> = group.by_dtn.keys().copied().collect();
+    candidates.sort_unstable();
+    if candidates.is_empty() {
+        return SERVER;
+    }
+    // Normalizers so the three terms are comparable.
+    let max_link: f64 = (1..N_DTNS)
+        .flat_map(|i| (1..N_DTNS).map(move |j| (i, j)))
+        .filter(|(i, j)| i != j)
+        .map(|(i, j)| topology.link(i, j))
+        .fold(1.0, f64::max);
+    let total_reqs: f64 = group
+        .members
+        .iter()
+        .map(|u| stats.get(u).map(|s| s.requests).unwrap_or(0) as f64)
+        .sum::<f64>()
+        .max(1.0);
+
+    let mut best = candidates[0];
+    let mut best_score = f64::NEG_INFINITY;
+    for &i in &candidates {
+        // P: aggregate throughput from this DTN to the group's other DTNs.
+        let p: f64 = candidates
+            .iter()
+            .filter(|&&j| j != i)
+            .map(|&j| topology.link(i, j) / max_link)
+            .sum::<f64>()
+            / (candidates.len().max(2) - 1) as f64;
+        // U: resource availability = free cache fraction.
+        let u = 1.0 - caches.store(i).fill_fraction();
+        // F: request frequency of group members attached to this DTN.
+        let f: f64 = group
+            .by_dtn
+            .get(&i)
+            .map(|members| {
+                members
+                    .iter()
+                    .map(|u| stats.get(u).map(|s| s.requests).unwrap_or(0) as f64)
+                    .sum::<f64>()
+            })
+            .unwrap_or(0.0)
+            / total_reqs;
+        let score = THETA_P * p + THETA_U * u + THETA_F * f;
+        if score > best_score {
+            best_score = score;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::policy::PolicyKind;
+    use crate::simnet::NetCondition;
+    use crate::trace::{generator, presets};
+
+    fn mk() -> (Trace, Topology, CacheNetwork) {
+        let trace = generator::generate(&presets::tiny());
+        let topo = Topology::vdc(NetCondition::Best, &[25.0, 18.0, 0.568, 2.3, 1.2, 22.0]);
+        let caches = CacheNetwork::new(N_DTNS, 1 << 30, PolicyKind::Lru);
+        (trace, topo, caches)
+    }
+
+    fn placement() -> Placement {
+        Placement::new(Box::new(kmeans::RustKmeans), 4, 42)
+    }
+
+    #[test]
+    fn features_average_request_geometry() {
+        let mut s = UserStats::default();
+        s.observe(10.0, 0.0, 4);
+        s.observe(20.0, 10.0, 6);
+        let f = s.features();
+        assert!((f[0] - 15.0).abs() < 1e-6);
+        assert!((f[1] - 5.0).abs() < 1e-6);
+        assert!((f[2] - 5.0).abs() < 1e-6);
+        assert!(f[3] > 0.0);
+    }
+
+    #[test]
+    fn recluster_forms_groups() {
+        let (trace, topo, caches) = mk();
+        let mut p = placement();
+        for r in trace.requests.iter().take(2000) {
+            let site = trace.site(trace.stream(r.stream).site);
+            p.observe(r.user, site.x, site.y, r.stream.0);
+        }
+        p.recluster(&trace, &topo, &caches);
+        assert!(p.n_groups() >= 2, "groups={}", p.n_groups());
+        // Every member appears exactly once across groups.
+        let mut seen = std::collections::HashSet::new();
+        for g in &p.groups {
+            assert!(!g.members.is_empty());
+            assert!((1..N_DTNS).contains(&g.hub), "hub {}", g.hub);
+            for m in &g.members {
+                assert!(seen.insert(*m), "user {m:?} in two groups");
+            }
+            // Sub-groups partition the members.
+            let sub_total: usize = g.by_dtn.values().map(|v| v.len()).sum();
+            assert_eq!(sub_total, g.members.len());
+        }
+    }
+
+    #[test]
+    fn hub_prefers_high_frequency_dtn_all_else_equal() {
+        let (trace, topo, caches) = mk();
+        let mut stats: HashMap<UserId, UserStats> = HashMap::new();
+        // Two users on the NA DTN (1), one on Asia (3); NA requests more.
+        let na: Vec<&crate::trace::User> = trace
+            .users
+            .iter()
+            .filter(|u| u.dtn() == 1)
+            .take(2)
+            .collect();
+        let asia = trace.users.iter().find(|u| u.dtn() == 3);
+        let (Some(asia), [a, b]) = (asia, na.as_slice()) else {
+            return; // preset lacks the needed continents; skip
+        };
+        for (u, n) in [(a.id, 50u64), (b.id, 40), (asia.id, 5)] {
+            let mut s = UserStats::default();
+            for _ in 0..n {
+                s.observe(0.0, 0.0, 0);
+            }
+            stats.insert(u, s);
+        }
+        let mut group = VirtualGroup {
+            centroid: [0.0; DIM],
+            members: vec![a.id, b.id, asia.id],
+            by_dtn: HashMap::new(),
+            hub: 0,
+        };
+        group.by_dtn.insert(1, vec![a.id, b.id]);
+        group.by_dtn.insert(3, vec![asia.id]);
+        let hub = select_hub(&group, &stats, &topo, &caches);
+        assert_eq!(hub, 1, "expected the well-connected high-frequency DTN");
+    }
+
+    #[test]
+    fn single_dtn_group_hubs_there() {
+        let (_, topo, caches) = mk();
+        let mut group = VirtualGroup {
+            centroid: [0.0; DIM],
+            members: vec![UserId(1)],
+            by_dtn: HashMap::new(),
+            hub: 0,
+        };
+        group.by_dtn.insert(4, vec![UserId(1)]);
+        let hub = select_hub(&group, &HashMap::new(), &topo, &caches);
+        assert_eq!(hub, 4);
+    }
+
+    #[test]
+    fn too_few_users_no_groups() {
+        let (trace, topo, caches) = mk();
+        let mut p = placement();
+        p.observe(UserId(0), 0.0, 0.0, 0);
+        p.recluster(&trace, &topo, &caches);
+        assert_eq!(p.n_groups(), 0);
+    }
+
+    #[test]
+    fn normalize_bounds() {
+        let pts = vec![[0.0f32, 10.0, -5.0, 1.0], [10.0, 20.0, 5.0, 1.0]];
+        let n = normalize(&pts);
+        for p in &n {
+            for t in 0..DIM {
+                assert!((0.0..=1.0).contains(&p[t]));
+            }
+        }
+        // Constant column maps to 0.5.
+        assert_eq!(n[0][3], 0.5);
+    }
+}

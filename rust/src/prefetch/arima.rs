@@ -1,0 +1,216 @@
+//! Next-request-gap prediction (paper §IV-A2).
+//!
+//! The paper trains an ARIMA model on the n = 60 most recent request
+//! timestamps of each program user and predicts the next one.  We use
+//! the same forecasting family, batched: an AR(p) Yule-Walker fit on
+//! the first-differenced inter-arrival series (≡ ARIMA(p,1,0)).
+//!
+//! Two interchangeable implementations sit behind [`GapPredictor`]:
+//!
+//! * [`RustArima`] — pure-Rust reference (this file): identical math to
+//!   the Layer-2 JAX model, used in unit tests and as a no-artifact
+//!   fallback.
+//! * [`crate::runtime::Engine`] — the AOT path: the JAX/Pallas model
+//!   lowered to HLO and executed on the PJRT CPU client.  The
+//!   integration suite asserts both produce the same numbers.
+
+/// Batched next-gap predictor interface.
+pub trait GapPredictor {
+    /// For each window of inter-arrival gaps (oldest first), forecast
+    /// the next gap in seconds.  Implementations must accept windows of
+    /// any length ≥ 2 (shorter histories are padded internally).
+    fn predict_gaps(&mut self, windows: &[Vec<f64>]) -> Vec<f64>;
+
+    /// Display name for experiment logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Window length the predictor operates on (the paper's n = 60).
+pub const WINDOW: usize = 60;
+/// AR order (matches the Layer-2 model's `AR_ORDER`).
+pub const ORDER: usize = 8;
+/// Ridge nugget keeping the Toeplitz solve stable for constant series
+/// (matches `_RIDGE` in python/compile/model.py).
+pub const RIDGE: f64 = 1e-5;
+
+/// Pure-Rust batched AR(p) gap predictor.
+#[derive(Debug, Default, Clone)]
+pub struct RustArima;
+
+impl RustArima {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl GapPredictor for RustArima {
+    fn predict_gaps(&mut self, windows: &[Vec<f64>]) -> Vec<f64> {
+        windows.iter().map(|w| predict_next_gap(w)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-arima"
+    }
+}
+
+/// Left-pad (by repeating the first element) or left-truncate a gap
+/// history to exactly [`WINDOW`] entries, newest last.
+pub fn normalize_window(gaps: &[f64]) -> Vec<f64> {
+    let mut w = Vec::with_capacity(WINDOW);
+    if gaps.is_empty() {
+        return vec![1.0; WINDOW];
+    }
+    if gaps.len() >= WINDOW {
+        w.extend_from_slice(&gaps[gaps.len() - WINDOW..]);
+    } else {
+        let pad = WINDOW - gaps.len();
+        w.extend(std::iter::repeat(gaps[0]).take(pad));
+        w.extend_from_slice(gaps);
+    }
+    w
+}
+
+/// Forecast the next inter-arrival gap from a history of gaps.
+/// Mirrors `python/compile/model.py::ar_predictor` exactly.
+pub fn predict_next_gap(gaps: &[f64]) -> f64 {
+    let x = normalize_window(gaps);
+    // ARIMA d=1: first difference.
+    let dx: Vec<f64> = x.windows(2).map(|w| w[1] - w[0]).collect();
+    let r = autocorr(&dx, ORDER + 1);
+    let (phi, _sigma2) = levinson_durbin(&r, ORDER);
+    // One-step forecast: most recent differences first.
+    let mut dnext = 0.0;
+    for (k, p) in phi.iter().enumerate() {
+        dnext += p * dx[dx.len() - 1 - k];
+    }
+    (x[x.len() - 1] + dnext).max(1e-3)
+}
+
+/// Biased mean-centered autocorrelation (mirrors the Pallas kernel).
+pub fn autocorr(x: &[f64], num_lags: usize) -> Vec<f64> {
+    let n = x.len();
+    assert!(num_lags <= n, "num_lags {num_lags} > len {n}");
+    let mean = x.iter().sum::<f64>() / n as f64;
+    let xc: Vec<f64> = x.iter().map(|v| v - mean).collect();
+    (0..num_lags)
+        .map(|k| {
+            let mut s = 0.0;
+            for t in 0..n - k {
+                s += xc[t] * xc[t + k];
+            }
+            s / n as f64
+        })
+        .collect()
+}
+
+/// Levinson-Durbin recursion solving the Yule-Walker system
+/// (mirrors `model.levinson_durbin`). Returns (phi, innovation var).
+pub fn levinson_durbin(r: &[f64], order: usize) -> (Vec<f64>, f64) {
+    assert!(r.len() > order);
+    let mut e = r[0] + RIDGE;
+    let mut a: Vec<f64> = Vec::new();
+    for m in 1..=order {
+        let mut acc = r[m];
+        for j in 1..m {
+            acc -= a[j - 1] * r[m - j];
+        }
+        let k = acc / e;
+        let mut new_a: Vec<f64> = (1..m).map(|j| a[j - 1] - k * a[m - j - 1]).collect();
+        new_a.push(k);
+        a = new_a;
+        e *= 1.0 - k * k;
+    }
+    (a, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_series_predicts_period() {
+        let gaps = vec![3600.0; 30];
+        let next = predict_next_gap(&gaps);
+        assert!((next - 3600.0).abs() < 1.0, "next={next}");
+    }
+
+    #[test]
+    fn noisy_periodic_close_to_period() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let gaps: Vec<f64> = (0..60).map(|_| rng.gauss(3600.0, 30.0)).collect();
+        let next = predict_next_gap(&gaps);
+        assert!((next - 3600.0).abs() < 180.0, "next={next}");
+    }
+
+    #[test]
+    fn short_history_padded() {
+        let next = predict_next_gap(&[100.0, 100.0, 100.0]);
+        assert!((next - 100.0).abs() < 1.0, "next={next}");
+    }
+
+    #[test]
+    fn empty_history_safe() {
+        let next = predict_next_gap(&[]);
+        assert!(next > 0.0);
+    }
+
+    #[test]
+    fn positive_gap_guarantee() {
+        // Wildly decreasing gaps cannot push the forecast below the floor.
+        let gaps: Vec<f64> = (0..60).map(|i| 1000.0 / (i + 1) as f64).collect();
+        assert!(predict_next_gap(&gaps) >= 1e-3);
+    }
+
+    #[test]
+    fn autocorr_lag0_is_variance() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let r = autocorr(&x, 2);
+        assert!((r[0] - 2.0).abs() < 1e-12); // var of 1..5 = 2
+    }
+
+    #[test]
+    fn levinson_solves_toeplitz_system() {
+        // Known AR(2): x_t = 0.6 x_{t-1} - 0.3 x_{t-2} + noise.
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut x = vec![0.0; 8000];
+        for t in 2..x.len() {
+            x[t] = 0.6 * x[t - 1] - 0.3 * x[t - 2] + rng.normal();
+        }
+        let r = autocorr(&x, 3);
+        let (phi, e) = levinson_durbin(&r, 2);
+        assert!((phi[0] - 0.6).abs() < 0.05, "phi={phi:?}");
+        assert!((phi[1] + 0.3).abs() < 0.05, "phi={phi:?}");
+        assert!(e > 0.0);
+    }
+
+    #[test]
+    fn batched_predictor_matches_scalar() {
+        let mut p = RustArima::new();
+        let w1: Vec<f64> = (0..40).map(|i| 100.0 + (i % 3) as f64).collect();
+        let w2 = vec![60.0; 20];
+        let out = p.predict_gaps(&[w1.clone(), w2.clone()]);
+        assert_eq!(out.len(), 2);
+        assert!((out[0] - predict_next_gap(&w1)).abs() < 1e-12);
+        assert!((out[1] - predict_next_gap(&w2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_forecast_finite_and_positive() {
+        crate::util::prop::check("arima-finite", |rng| {
+            let n = rng.int_range(2, 80);
+            let gaps: Vec<f64> = (0..n).map(|_| rng.range(0.1, 1e5)).collect();
+            let next = predict_next_gap(&gaps);
+            assert!(next.is_finite() && next > 0.0, "next={next}");
+        });
+    }
+
+    #[test]
+    fn normalize_window_shapes() {
+        assert_eq!(normalize_window(&[]).len(), WINDOW);
+        assert_eq!(normalize_window(&vec![1.0; 10]).len(), WINDOW);
+        assert_eq!(normalize_window(&vec![1.0; 100]).len(), WINDOW);
+        let w = normalize_window(&[5.0, 6.0]);
+        assert_eq!(w[WINDOW - 1], 6.0);
+        assert_eq!(w[0], 5.0); // padded with first element
+    }
+}

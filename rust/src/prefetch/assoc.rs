@@ -1,0 +1,338 @@
+//! Association-rule prediction model (paper §IV-A3).
+//!
+//! Sessionizes each user's request stream into transactions (sets of
+//! data objects), mines frequent itemsets with FP-Growth, generates
+//! rules `X → y` filtered by *confidence*, and predicts the next data
+//! objects for a user from the rules matching their current session.
+//! The paper empirically sets support = 30 and confidence = 0.5, and
+//! pre-fetches only the top-3 predicted objects; support scales with
+//! the (scaled-down) synthetic traces via [`AssocConfig::min_support`].
+
+use std::collections::HashMap;
+
+use crate::prefetch::fpgrowth::{self, Item};
+
+/// Rule `antecedent → consequent` with confidence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rule {
+    pub antecedent: Vec<Item>, // sorted
+    pub consequent: Item,
+    pub confidence: f64,
+    pub support: u64,
+}
+
+/// Tunables (paper defaults scaled to trace size).
+#[derive(Debug, Clone)]
+pub struct AssocConfig {
+    /// Absolute minimum itemset support (paper: 30).
+    pub min_support: u64,
+    /// Minimum rule confidence (paper: 0.5).
+    pub min_confidence: f64,
+    /// Session idle gap: a new transaction starts after this silence.
+    pub session_gap_secs: f64,
+    /// Cap on retained training transactions (sliding window).
+    pub max_transactions: usize,
+}
+
+impl Default for AssocConfig {
+    fn default() -> Self {
+        Self {
+            min_support: 5,
+            min_confidence: 0.5,
+            session_gap_secs: 1800.0,
+            max_transactions: 20_000,
+        }
+    }
+}
+
+/// Online transaction collector + rule miner.
+pub struct AssocModel {
+    cfg: AssocConfig,
+    /// Completed transactions (training window).
+    transactions: Vec<Vec<Item>>,
+    /// Per-user open session: (last ts, items).
+    open: HashMap<u32, (f64, Vec<Item>)>,
+    /// Mined rules, indexed by each antecedent item for fast matching.
+    rules: Vec<Rule>,
+    by_item: HashMap<Item, Vec<usize>>,
+    /// Generation-stamped dedup scratch (one slot per rule) — keeps
+    /// `predict` allocation- and sort-free on the hot path.
+    stamp: Vec<u32>,
+    generation: u32,
+    /// Rules rebuilt at least once.
+    pub built: bool,
+}
+
+impl AssocModel {
+    pub fn new(cfg: AssocConfig) -> Self {
+        Self {
+            cfg,
+            transactions: Vec::new(),
+            open: HashMap::new(),
+            rules: Vec::new(),
+            by_item: HashMap::new(),
+            stamp: Vec::new(),
+            generation: 0,
+            built: false,
+        }
+    }
+
+    /// Observe one request; closes the user's session if it went idle.
+    pub fn observe(&mut self, user: u32, item: Item, ts: f64) {
+        let entry = self.open.entry(user).or_insert_with(|| (ts, Vec::new()));
+        if ts - entry.0 > self.cfg.session_gap_secs && !entry.1.is_empty() {
+            let items = std::mem::take(&mut entry.1);
+            Self::push_tx(&mut self.transactions, self.cfg.max_transactions, items);
+        }
+        entry.0 = ts;
+        if !entry.1.contains(&item) {
+            entry.1.push(item);
+        }
+    }
+
+    fn push_tx(txs: &mut Vec<Vec<Item>>, cap: usize, items: Vec<Item>) {
+        if items.len() >= 2 {
+            txs.push(items);
+            if txs.len() > cap {
+                let excess = txs.len() - cap;
+                txs.drain(..excess);
+            }
+        }
+    }
+
+    /// The user's current (open) session items.
+    pub fn session_items(&self, user: u32) -> &[Item] {
+        self.open
+            .get(&user)
+            .map(|(_, items)| items.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Mine rules from the training window (FP-Growth + confidence
+    /// filter).  Call periodically (paper: the model is retrained as
+    /// the framework runs).  Open sessions are included as snapshot
+    /// transactions so recent activity contributes to the rules.
+    pub fn rebuild(&mut self) {
+        let mut training = self.transactions.clone();
+        for (_, (_, items)) in self.open.iter() {
+            if items.len() >= 2 {
+                training.push(items.clone());
+            }
+        }
+        let sets = fpgrowth::mine(&training, self.cfg.min_support);
+        // Support lookup for confidence computation.
+        let sup: HashMap<&[Item], u64> =
+            sets.iter().map(|s| (s.items.as_slice(), s.support)).collect();
+        self.rules.clear();
+        self.by_item.clear();
+        for set in &sets {
+            if set.items.len() < 2 {
+                continue;
+            }
+            // Single-consequent rules: X \ {y} → y.
+            for (i, &y) in set.items.iter().enumerate() {
+                let mut ante = set.items.clone();
+                ante.remove(i);
+                let Some(&ante_sup) = sup.get(ante.as_slice()) else {
+                    continue;
+                };
+                let confidence = set.support as f64 / ante_sup as f64;
+                if confidence >= self.cfg.min_confidence {
+                    let idx = self.rules.len();
+                    for &a in &ante {
+                        self.by_item.entry(a).or_default().push(idx);
+                    }
+                    self.rules.push(Rule {
+                        antecedent: ante,
+                        consequent: y,
+                        confidence,
+                        support: set.support,
+                    });
+                }
+            }
+        }
+        self.stamp = vec![0; self.rules.len()];
+        self.generation = 0;
+        self.built = true;
+    }
+
+    /// Predict up to `top_n` next objects for a session's items, ranked
+    /// by rule confidence (then support).  Items already in the session
+    /// are not re-predicted.
+    pub fn predict(&mut self, session: &[Item], top_n: usize) -> Vec<Item> {
+        let mut best: HashMap<Item, (f64, u64)> = HashMap::new();
+        // Generation-stamped visit set: each rule index is evaluated at
+        // most once per call without sorting or allocating.
+        self.generation = self.generation.wrapping_add(1);
+        if self.generation == 0 {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.generation = 1;
+        }
+        let generation = self.generation;
+        for item in session {
+            let Some(rule_ids) = self.by_item.get(item) else {
+                continue;
+            };
+            for &idx in rule_ids {
+                if self.stamp[idx] == generation {
+                    continue;
+                }
+                self.stamp[idx] = generation;
+                let rule = &self.rules[idx];
+                if session.contains(&rule.consequent) {
+                    continue;
+                }
+                // Antecedent must be fully contained in the session.
+                if rule.antecedent.iter().all(|a| session.contains(a)) {
+                    let e = best
+                        .entry(rule.consequent)
+                        .or_insert((rule.confidence, rule.support));
+                    if rule.confidence > e.0 || (rule.confidence == e.0 && rule.support > e.1) {
+                        *e = (rule.confidence, rule.support);
+                    }
+                }
+            }
+        }
+        let mut ranked: Vec<(Item, (f64, u64))> = best.into_iter().collect();
+        ranked.sort_by(|a, b| {
+            b.1 .0
+                .partial_cmp(&a.1 .0)
+                .unwrap()
+                .then(b.1 .1.cmp(&a.1 .1))
+                .then(a.0.cmp(&b.0))
+        });
+        ranked.into_iter().take(top_n).map(|(i, _)| i).collect()
+    }
+
+    pub fn n_rules(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn n_transactions(&self) -> usize {
+        self.transactions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_with_pattern() -> AssocModel {
+        let mut m = AssocModel::new(AssocConfig {
+            min_support: 3,
+            min_confidence: 0.5,
+            session_gap_secs: 100.0,
+            max_transactions: 1000,
+        });
+        // 10 users each browse {1, 2, 3} together; a few also touch 9.
+        let mut ts = 0.0;
+        for u in 0..10 {
+            for &item in &[1u32, 2, 3] {
+                m.observe(u, item, ts);
+                ts += 1.0;
+            }
+            ts += 1000.0; // close session on next observe
+        }
+        // Force-close all sessions by observing far in the future.
+        for u in 0..10 {
+            m.observe(u, 99, ts + 1e6);
+        }
+        m.rebuild();
+        m
+    }
+
+    #[test]
+    fn mines_rules_from_sessions() {
+        let m = model_with_pattern();
+        assert!(m.n_transactions() >= 10);
+        assert!(m.n_rules() > 0);
+    }
+
+    #[test]
+    fn predicts_co_browsed_objects() {
+        let mut m = model_with_pattern();
+        let pred = m.predict(&[1, 2], 3);
+        assert_eq!(pred.first(), Some(&3), "pred={pred:?}");
+    }
+
+    #[test]
+    fn does_not_predict_session_items() {
+        let mut m = model_with_pattern();
+        let pred = m.predict(&[1, 2, 3], 3);
+        assert!(!pred.contains(&1) && !pred.contains(&2) && !pred.contains(&3));
+    }
+
+    #[test]
+    fn empty_session_predicts_nothing() {
+        let mut m = model_with_pattern();
+        assert!(m.predict(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn top_n_respected() {
+        let mut m = AssocModel::new(AssocConfig {
+            min_support: 2,
+            min_confidence: 0.3,
+            session_gap_secs: 100.0,
+            max_transactions: 1000,
+        });
+        let mut ts = 0.0;
+        // Item 0 co-occurs with many others.
+        for u in 0..8 {
+            for item in [0u32, 1, 2, 3, 4, 5] {
+                m.observe(u, item, ts);
+                ts += 1.0;
+            }
+            ts += 1000.0;
+        }
+        for u in 0..8 {
+            m.observe(u, 99, ts + 1e6);
+        }
+        m.rebuild();
+        assert!(m.predict(&[0], 3).len() <= 3);
+        assert!(m.predict(&[0], 1).len() <= 1);
+    }
+
+    #[test]
+    fn confidence_filter_drops_weak_rules() {
+        let mut strict = AssocModel::new(AssocConfig {
+            min_support: 2,
+            min_confidence: 0.99,
+            session_gap_secs: 100.0,
+            max_transactions: 1000,
+        });
+        let mut ts = 0.0;
+        // 1 → 2 holds half the time only.
+        for u in 0..10 {
+            strict.observe(u, 1, ts);
+            if u % 2 == 0 {
+                strict.observe(u, 2, ts + 1.0);
+            } else {
+                strict.observe(u, 3, ts + 1.0);
+            }
+            ts += 1000.0;
+        }
+        for u in 0..10 {
+            strict.observe(u, 99, ts + 1e6);
+        }
+        strict.rebuild();
+        assert!(strict.predict(&[1], 3).is_empty());
+    }
+
+    #[test]
+    fn sliding_window_caps_memory() {
+        let mut m = AssocModel::new(AssocConfig {
+            min_support: 2,
+            min_confidence: 0.5,
+            session_gap_secs: 10.0,
+            max_transactions: 5,
+        });
+        let mut ts = 0.0;
+        for i in 0..50 {
+            m.observe(0, i % 7, ts);
+            m.observe(0, (i + 1) % 7, ts + 1.0);
+            ts += 100.0; // close previous session each time
+        }
+        assert!(m.n_transactions() <= 5);
+    }
+}

@@ -1,0 +1,305 @@
+//! FP-Growth frequent-pattern mining (Han, Pei & Yin 2000), built from
+//! scratch (paper §IV-A3a/b).
+//!
+//! Used by the association-rule prediction model: transactions are
+//! browsing sessions (sets of data-object ids), the FP-tree compacts
+//! them, and the recursive conditional-tree mining enumerates all
+//! itemsets whose *support* (absolute transaction count) meets the
+//! threshold.  Rule generation + the confidence filter live in
+//! [`crate::prefetch::assoc`].
+
+use std::collections::HashMap;
+
+/// Item identifier (data-object / mesh-cell id).
+pub type Item = u32;
+
+/// A frequent itemset with its support count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrequentSet {
+    pub items: Vec<Item>, // sorted ascending
+    pub support: u64,
+}
+
+#[derive(Debug)]
+struct Node {
+    item: Item,
+    count: u64,
+    parent: usize,
+    children: HashMap<Item, usize>,
+}
+
+/// FP-tree with header table.
+struct FpTree {
+    nodes: Vec<Node>,
+    /// item → node indices holding that item.
+    header: HashMap<Item, Vec<usize>>,
+}
+
+impl FpTree {
+    fn new() -> Self {
+        Self {
+            nodes: vec![Node {
+                item: u32::MAX,
+                count: 0,
+                parent: usize::MAX,
+                children: HashMap::new(),
+            }],
+            header: HashMap::new(),
+        }
+    }
+
+    /// Insert a transaction (items already support-ordered) with count.
+    fn insert(&mut self, items: &[Item], count: u64) {
+        let mut cur = 0usize;
+        for &item in items {
+            let next = match self.nodes[cur].children.get(&item) {
+                Some(&n) => {
+                    self.nodes[n].count += count;
+                    n
+                }
+                None => {
+                    let n = self.nodes.len();
+                    self.nodes.push(Node {
+                        item,
+                        count,
+                        parent: cur,
+                        children: HashMap::new(),
+                    });
+                    self.nodes[cur].children.insert(item, n);
+                    self.header.entry(item).or_default().push(n);
+                    n
+                }
+            };
+            cur = next;
+        }
+    }
+
+    /// Path from a node's parent up to the root (excluding root).
+    fn prefix_path(&self, mut node: usize) -> Vec<Item> {
+        let mut path = Vec::new();
+        node = self.nodes[node].parent;
+        while node != 0 && node != usize::MAX {
+            path.push(self.nodes[node].item);
+            node = self.nodes[node].parent;
+        }
+        path.reverse();
+        path
+    }
+}
+
+/// Mine all frequent itemsets with `support ≥ min_support` from
+/// transactions.  Each transaction is a set (deduplicated internally).
+pub fn mine(transactions: &[Vec<Item>], min_support: u64) -> Vec<FrequentSet> {
+    // 1. Global item counts (1-itemset supports).
+    let mut counts: HashMap<Item, u64> = HashMap::new();
+    for t in transactions {
+        let mut seen: Vec<Item> = t.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        for item in seen {
+            *counts.entry(item).or_insert(0) += 1;
+        }
+    }
+    counts.retain(|_, c| *c >= min_support);
+    if counts.is_empty() {
+        return Vec::new();
+    }
+
+    // 2. Build the FP-tree with items ordered by descending support
+    //    (ties by item id for determinism).
+    let order_key = |item: &Item| (std::cmp::Reverse(counts[item]), *item);
+    let mut tree = FpTree::new();
+    for t in transactions {
+        let mut items: Vec<Item> = t
+            .iter()
+            .copied()
+            .filter(|i| counts.contains_key(i))
+            .collect();
+        items.sort_unstable();
+        items.dedup();
+        items.sort_by_key(order_key);
+        if !items.is_empty() {
+            tree.insert(&items, 1);
+        }
+    }
+
+    // 3. Recursive mining.
+    let mut out = Vec::new();
+    mine_tree(&tree, &[], min_support, &mut out);
+    // Deterministic output order: by (len, items).
+    out.sort_by(|a, b| (a.items.len(), &a.items).cmp(&(b.items.len(), &b.items)));
+    out
+}
+
+fn mine_tree(tree: &FpTree, suffix: &[Item], min_support: u64, out: &mut Vec<FrequentSet>) {
+    // Header items ordered ascending by support (mine least-frequent
+    // first, the classic bottom-up order); ties by id.
+    let mut items: Vec<(Item, u64)> = tree
+        .header
+        .iter()
+        .map(|(&item, nodes)| (item, nodes.iter().map(|&n| tree.nodes[n].count).sum()))
+        .collect();
+    items.retain(|(_, s)| *s >= min_support);
+    items.sort_by_key(|&(item, s)| (s, item));
+
+    for (item, support) in items {
+        let mut itemset = vec![item];
+        itemset.extend_from_slice(suffix);
+        itemset.sort_unstable();
+        out.push(FrequentSet {
+            items: itemset.clone(),
+            support,
+        });
+
+        // Conditional pattern base for `item`.
+        let mut cond_counts: HashMap<Item, u64> = HashMap::new();
+        let paths: Vec<(Vec<Item>, u64)> = tree.header[&item]
+            .iter()
+            .map(|&n| (tree.prefix_path(n), tree.nodes[n].count))
+            .collect();
+        for (path, count) in &paths {
+            for &i in path {
+                *cond_counts.entry(i).or_insert(0) += count;
+            }
+        }
+        cond_counts.retain(|_, c| *c >= min_support);
+        if cond_counts.is_empty() {
+            continue;
+        }
+        // Conditional FP-tree.
+        let order_key = |i: &Item| (std::cmp::Reverse(cond_counts[i]), *i);
+        let mut cond_tree = FpTree::new();
+        for (path, count) in &paths {
+            let mut p: Vec<Item> = path
+                .iter()
+                .copied()
+                .filter(|i| cond_counts.contains_key(i))
+                .collect();
+            p.sort_by_key(order_key);
+            if !p.is_empty() {
+                cond_tree.insert(&p, *count);
+            }
+        }
+        mine_tree(&cond_tree, &itemset, min_support, out);
+    }
+}
+
+/// Brute-force miner for cross-checking FP-Growth in tests
+/// (exponential; only safe for small item universes).
+#[cfg(test)]
+pub fn mine_bruteforce(transactions: &[Vec<Item>], min_support: u64) -> Vec<FrequentSet> {
+    use std::collections::BTreeSet;
+    let mut universe: BTreeSet<Item> = BTreeSet::new();
+    for t in transactions {
+        universe.extend(t.iter().copied());
+    }
+    let items: Vec<Item> = universe.into_iter().collect();
+    assert!(items.len() <= 20, "universe too large for brute force");
+    let sets: Vec<BTreeSet<Item>> = transactions
+        .iter()
+        .map(|t| t.iter().copied().collect())
+        .collect();
+    let mut out = Vec::new();
+    for mask in 1u32..(1 << items.len()) {
+        let subset: Vec<Item> = (0..items.len())
+            .filter(|&i| mask & (1 << i) != 0)
+            .map(|i| items[i])
+            .collect();
+        let support = sets
+            .iter()
+            .filter(|s| subset.iter().all(|i| s.contains(i)))
+            .count() as u64;
+        if support >= min_support {
+            out.push(FrequentSet {
+                items: subset,
+                support,
+            });
+        }
+    }
+    out.sort_by(|a, b| (a.items.len(), &a.items).cmp(&(b.items.len(), &b.items)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(items: &[Item]) -> Vec<Item> {
+        items.to_vec()
+    }
+
+    #[test]
+    fn classic_example() {
+        // Han et al. style example.
+        let txs = vec![
+            t(&[1, 2, 5]),
+            t(&[2, 4]),
+            t(&[2, 3]),
+            t(&[1, 2, 4]),
+            t(&[1, 3]),
+            t(&[2, 3]),
+            t(&[1, 3]),
+            t(&[1, 2, 3, 5]),
+            t(&[1, 2, 3]),
+        ];
+        let sets = mine(&txs, 2);
+        let find = |items: &[Item]| {
+            sets.iter()
+                .find(|s| s.items == items)
+                .map(|s| s.support)
+        };
+        assert_eq!(find(&[1]), Some(6));
+        assert_eq!(find(&[2]), Some(7));
+        assert_eq!(find(&[1, 2]), Some(4));
+        assert_eq!(find(&[1, 2, 3]), Some(2));
+        assert_eq!(find(&[1, 2, 5]), Some(2));
+        assert_eq!(find(&[4]), Some(2));
+        assert_eq!(find(&[5]), Some(2));
+        assert_eq!(find(&[3, 5]), None); // support 1 < 2
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        assert!(mine(&[], 1).is_empty());
+        assert!(mine(&[vec![]], 1).is_empty());
+        let sets = mine(&[t(&[7])], 1);
+        assert_eq!(sets.len(), 1);
+        assert_eq!(sets[0].support, 1);
+    }
+
+    #[test]
+    fn min_support_filters() {
+        let txs = vec![t(&[1, 2]), t(&[1]), t(&[1])];
+        let sets = mine(&txs, 3);
+        assert_eq!(sets.len(), 1);
+        assert_eq!(sets[0].items, vec![1]);
+    }
+
+    #[test]
+    fn duplicate_items_in_transaction_count_once() {
+        let txs = vec![t(&[1, 1, 1]), t(&[1])];
+        let sets = mine(&txs, 2);
+        assert_eq!(sets[0].support, 2);
+    }
+
+    #[test]
+    fn matches_bruteforce_small_random() {
+        crate::util::prop::check("fpgrowth-vs-bruteforce", |rng| {
+            let n_items = rng.int_range(3, 9);
+            let n_tx = rng.int_range(5, 30);
+            let txs: Vec<Vec<Item>> = (0..n_tx)
+                .map(|_| {
+                    let len = rng.int_range(1, n_items + 1);
+                    rng.sample_indices(n_items, len)
+                        .into_iter()
+                        .map(|i| i as Item)
+                        .collect()
+                })
+                .collect();
+            let minsup = rng.int_range(1, 5) as u64;
+            let got = mine(&txs, minsup);
+            let want = mine_bruteforce(&txs, minsup);
+            assert_eq!(got, want, "txs={txs:?} minsup={minsup}");
+        });
+    }
+}

@@ -1,0 +1,305 @@
+//! HPM — the paper's Hybrid Pre-fetching Model (§IV-A).
+//!
+//! The hybrid routes each request by its classified type:
+//!
+//! * **Program requests** (regular / overlapping series) → the
+//!   *history-based* model: an ARIMA-family forecast of the next
+//!   request time from the series' 60 most recent gaps, then a
+//!   pre-fetch scheduled at `ts_i + 0.8·(ts_pred − ts_i)` for the same
+//!   moving window advanced to the predicted time.
+//! * **Real-time requests** → the *streaming mechanism*: emit a
+//!   [`Action::Subscribe`] so the push engine converts the polling
+//!   series into server-side pushes (§IV-B).
+//! * **Human / unclassified requests** → *association-rule mining*
+//!   (FP-Growth): predict the top-3 co-browsed objects within the same
+//!   time range as the last request, with the next time step estimated
+//!   from the last two requests (§IV-A3).
+//!
+//! The gap forecaster is pluggable ([`GapPredictor`]): the pure-Rust
+//! fallback or the AOT-compiled JAX/Pallas model through PJRT.  A
+//! per-series forecast cache avoids re-running the model while a
+//! series stays on its predicted schedule, so device calls scale with
+//! the number of *series*, not requests.
+
+use std::collections::HashMap;
+
+use crate::prefetch::arima::GapPredictor;
+use crate::prefetch::assoc::{AssocConfig, AssocModel};
+use crate::prefetch::{Action, Prediction, PrefetchModel, ASSOC_TOP_N, PREFETCH_OFFSET};
+use crate::trace::classifier::{OnlineClassifier, ProgramClass};
+use crate::trace::{Request, StreamId, TimeRange, Trace, UserId};
+
+/// Relative forecast error beyond which the cached gap is invalidated
+/// and the model re-run.
+const CACHE_TOLERANCE: f64 = 0.2;
+
+/// The hybrid pre-fetching model.
+pub struct Hpm {
+    classifier: OnlineClassifier,
+    assoc: AssocModel,
+    predictor: Box<dyn GapPredictor>,
+    /// Cached next-gap forecast per program series.
+    gap_cache: HashMap<(UserId, StreamId), f64>,
+    /// user → previous request ts (human time-step estimation).
+    prev_ts: HashMap<UserId, f64>,
+    /// Device/model call counter (perf accounting).
+    pub predictor_calls: u64,
+}
+
+impl Hpm {
+    pub fn new(predictor: Box<dyn GapPredictor>) -> Self {
+        Self::with_assoc_config(predictor, AssocConfig::default())
+    }
+
+    pub fn with_assoc_config(predictor: Box<dyn GapPredictor>, cfg: AssocConfig) -> Self {
+        Self {
+            classifier: OnlineClassifier::new(),
+            assoc: AssocModel::new(cfg),
+            predictor,
+            gap_cache: HashMap::new(),
+            prev_ts: HashMap::new(),
+            predictor_calls: 0,
+        }
+    }
+
+    pub fn classifier(&self) -> &OnlineClassifier {
+        &self.classifier
+    }
+
+    /// Forecast the next gap of a program series, using the cache while
+    /// the series stays on schedule.
+    fn forecast_gap(&mut self, user: UserId, stream: StreamId) -> f64 {
+        let gaps = self.classifier.gap_history(user, stream);
+        let last_gap = gaps.last().copied().unwrap_or(3600.0);
+        let key = (user, stream);
+        if let Some(&cached) = self.gap_cache.get(&key) {
+            if (last_gap - cached).abs() <= CACHE_TOLERANCE * cached.max(1.0) {
+                return cached;
+            }
+        }
+        let pred = self.predictor.predict_gaps(&[gaps])[0];
+        self.predictor_calls += 1;
+        self.gap_cache.insert(key, pred);
+        pred
+    }
+
+    /// History-based prediction for a regular/overlapping series.
+    fn history_predict(&mut self, req: &Request) -> Vec<Action> {
+        let gap = self.forecast_gap(req.user, req.stream).max(1.0);
+        let pred_ts = req.ts + gap;
+        // Moving window: same duration as the last request, ending at
+        // the predicted request time (what program users actually ask).
+        let window = req.range.duration();
+        let range = TimeRange::new((pred_ts - window).max(0.0), pred_ts);
+        vec![Action::Prefetch(Prediction {
+            user: req.user,
+            stream: req.stream,
+            range,
+            fire_at: req.ts + PREFETCH_OFFSET * gap,
+        })]
+    }
+
+    /// Association-rule prediction for human/unclassified requests.
+    fn assoc_predict(&mut self, req: &Request, prev_ts: Option<f64>) -> Vec<Action> {
+        if !self.assoc.built {
+            return Vec::new();
+        }
+        let session = self.assoc.session_items(req.user.0).to_vec();
+        let objects = self.assoc.predict(&session, ASSOC_TOP_N);
+        if objects.is_empty() {
+            return Vec::new();
+        }
+        // ts_{i+1} = ts_i + (ts_i − ts_{i−1}); tr_{i+1} = tr_i (§IV-A3).
+        let step = prev_ts.map(|p| (req.ts - p).max(1.0)).unwrap_or(60.0);
+        let fire_at = req.ts + PREFETCH_OFFSET * step;
+        objects
+            .into_iter()
+            .map(|obj| {
+                Action::Prefetch(Prediction {
+                    user: req.user,
+                    stream: StreamId(obj),
+                    range: req.range,
+                    fire_at,
+                })
+            })
+            .collect()
+    }
+}
+
+impl PrefetchModel for Hpm {
+    fn observe(&mut self, req: &Request, _trace: &Trace) -> Vec<Action> {
+        self.classifier.observe(req);
+        self.assoc.observe(req.user.0, req.stream.0, req.ts);
+        let prev = self.prev_ts.insert(req.user, req.ts);
+
+        match self.classifier.classify_series(req.user, req.stream) {
+            Some(ProgramClass::Realtime) => {
+                // Streaming mechanism: push cadence = the classifier's
+                // cached median gap (O(1); no per-request sorting).
+                let period = self
+                    .classifier
+                    .series_median_gap(req.user, req.stream)
+                    .unwrap_or(60.0);
+                vec![Action::Subscribe {
+                    user: req.user,
+                    stream: req.stream,
+                    period,
+                }]
+            }
+            Some(_) => self.history_predict(req),
+            None => self.assoc_predict(req, prev),
+        }
+    }
+
+    fn rebuild(&mut self, _now: f64) {
+        self.assoc.rebuild();
+    }
+
+    fn name(&self) -> &'static str {
+        "HPM"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prefetch::arima::RustArima;
+    use crate::trace::{generator, presets};
+
+    fn mk_trace() -> Trace {
+        generator::generate(&presets::tiny())
+    }
+
+    fn mk_hpm() -> Hpm {
+        Hpm::new(Box::new(RustArima::new()))
+    }
+
+    fn req(user: u32, ts: f64, stream: u32, start: f64, end: f64) -> Request {
+        Request {
+            user: UserId(user),
+            ts,
+            stream: StreamId(stream),
+            range: TimeRange::new(start, end),
+        }
+    }
+
+    #[test]
+    fn hourly_series_gets_history_prefetch() {
+        let trace = mk_trace();
+        let mut hpm = mk_hpm();
+        let mut last = Vec::new();
+        for i in 0..10 {
+            let t = i as f64 * 3600.0;
+            last = hpm.observe(&req(1, t, 0, t - 3600.0, t), &trace);
+        }
+        assert_eq!(last.len(), 1);
+        match &last[0] {
+            Action::Prefetch(p) => {
+                assert_eq!(p.stream, StreamId(0));
+                // Predicted one period ahead, fired at the 0.8 offset.
+                let t_last = 9.0 * 3600.0;
+                assert!((p.fire_at - (t_last + 0.8 * 3600.0)).abs() < 120.0, "fire {}", p.fire_at);
+                assert!((p.range.end - (t_last + 3600.0)).abs() < 120.0);
+                assert!((p.range.duration() - 3600.0).abs() < 1.0);
+            }
+            other => panic!("expected prefetch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn minutely_series_gets_subscription() {
+        let trace = mk_trace();
+        let mut hpm = mk_hpm();
+        let mut last = Vec::new();
+        for i in 0..20 {
+            let t = i as f64 * 60.0;
+            last = hpm.observe(&req(2, t, 1, t - 60.0, t), &trace);
+        }
+        match &last[0] {
+            Action::Subscribe { user, stream, period } => {
+                assert_eq!(*user, UserId(2));
+                assert_eq!(*stream, StreamId(1));
+                assert!((*period - 60.0).abs() < 1.0);
+            }
+            other => panic!("expected subscribe, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn human_requests_use_association_rules() {
+        let trace = mk_trace();
+        let mut hpm = mk_hpm();
+        // Train: many users co-browse streams {3, 4, 5} in sessions.
+        let mut ts = 0.0;
+        for u in 10..25 {
+            for s in [3u32, 4, 5] {
+                hpm.observe(&req(u, ts, s, ts - 500.0, ts), &trace);
+                ts += 30.0;
+            }
+            ts += 5000.0;
+        }
+        hpm.rebuild(ts);
+        // A fresh user browses 3 then 4 → expect 5 predicted.
+        let _ = hpm.observe(&req(99, ts, 3, ts - 500.0, ts), &trace);
+        let acts = hpm.observe(&req(99, ts + 40.0, 4, ts - 500.0, ts), &trace);
+        let streams: Vec<u32> = acts
+            .iter()
+            .map(|a| match a {
+                Action::Prefetch(p) => p.stream.0,
+                _ => panic!("unexpected subscribe"),
+            })
+            .collect();
+        assert!(streams.contains(&5), "streams={streams:?}");
+        // Range identical to the last request (§IV-A3).
+        if let Action::Prefetch(p) = &acts[0] {
+            assert_eq!(p.range, TimeRange::new(ts - 500.0, ts));
+        }
+    }
+
+    #[test]
+    fn predictor_cache_limits_model_calls() {
+        let trace = mk_trace();
+        let mut hpm = mk_hpm();
+        for i in 0..50 {
+            let t = i as f64 * 3600.0;
+            hpm.observe(&req(1, t, 0, t - 3600.0, t), &trace);
+        }
+        // Constant-period series: the cache should hold after the first
+        // forecast — far fewer calls than observations.
+        assert!(
+            hpm.predictor_calls <= 3,
+            "predictor called {} times for a constant series",
+            hpm.predictor_calls
+        );
+    }
+
+    #[test]
+    fn no_assoc_predictions_before_rebuild() {
+        let trace = mk_trace();
+        let mut hpm = mk_hpm();
+        let acts = hpm.observe(&req(50, 10.0, 2, 0.0, 10.0), &trace);
+        assert!(acts.is_empty());
+    }
+
+    #[test]
+    fn classified_series_switch_models() {
+        let trace = mk_trace();
+        let mut hpm = mk_hpm();
+        // The same user has one periodic series (stream 0) and one-off
+        // browsing (stream 7): only the periodic one gets history
+        // prefetches.
+        for i in 0..10 {
+            let t = i as f64 * 3600.0;
+            let acts = hpm.observe(&req(1, t, 0, t - 3600.0, t), &trace);
+            if i >= 5 {
+                assert!(matches!(acts[0], Action::Prefetch(_)));
+            }
+            // Quadratically growing timestamps: every gap differs, so the
+            // stream-7 series can never look periodic.
+            let t7 = (i * i) as f64 * 1000.0 + 7.0;
+            let acts2 = hpm.observe(&req(1, t7, 7, 0.0, 100.0 + i as f64), &trace);
+            // Unclassified + no rules → nothing.
+            assert!(acts2.is_empty(), "i={i}: {acts2:?}");
+        }
+    }
+}

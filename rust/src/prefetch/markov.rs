@@ -1,0 +1,220 @@
+//! MD1 reference model: Markov prediction over geospatial access paths
+//! (Li et al., "A prefetching model based on access popularity for
+//! geospatial data in a cluster-based caching system", paper §V-A2).
+//!
+//! The authors connect the geospatial coordinates of consecutive
+//! accesses into an "access path" and observe the paths follow Zipf's
+//! law, so a first-order Markov chain over locations predicts the next
+//! access.  Our implementation: states are instrument *sites*;
+//! transition counts are learned online; the predicted next site's most
+//! popular streams are pre-fetched with the user's last time range.
+//! The model treats every request identically — no user classification
+//! — which is exactly the weakness HPM exploits (§V-B1).
+
+use std::collections::HashMap;
+
+use crate::prefetch::{Action, Prediction, PrefetchModel, ASSOC_TOP_N, PREFETCH_OFFSET};
+use crate::trace::{Request, SiteId, StreamId, TimeRange, Trace, UserId};
+
+/// First-order Markov chain over sites + per-site stream popularity.
+#[derive(Debug, Default)]
+pub struct MarkovModel {
+    /// site → (next site → count).
+    transitions: HashMap<SiteId, HashMap<SiteId, u64>>,
+    /// site → (stream → popularity count).
+    popularity: HashMap<SiteId, HashMap<StreamId, u64>>,
+    /// user → (last ts, last site, last range).
+    last: HashMap<UserId, (f64, SiteId, TimeRange)>,
+}
+
+impl MarkovModel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Most likely next site from `site` (ties → smaller id, stable).
+    pub fn predict_site(&self, site: SiteId) -> Option<SiteId> {
+        self.transitions.get(&site).and_then(|m| {
+            m.iter()
+                .max_by_key(|(s, c)| (**c, std::cmp::Reverse(s.0)))
+                .map(|(s, _)| *s)
+        })
+    }
+
+    /// Top streams at a site by popularity.
+    pub fn top_streams(&self, site: SiteId, n: usize) -> Vec<StreamId> {
+        let Some(pop) = self.popularity.get(&site) else {
+            return Vec::new();
+        };
+        let mut v: Vec<(StreamId, u64)> = pop.iter().map(|(s, c)| (*s, *c)).collect();
+        v.sort_by_key(|(s, c)| (std::cmp::Reverse(*c), s.0));
+        v.into_iter().take(n).map(|(s, _)| s).collect()
+    }
+}
+
+impl PrefetchModel for MarkovModel {
+    fn observe(&mut self, req: &Request, trace: &Trace) -> Vec<Action> {
+        let site = trace.stream(req.stream).site;
+        *self
+            .popularity
+            .entry(site)
+            .or_default()
+            .entry(req.stream)
+            .or_insert(0) += 1;
+
+        let prev = self.last.insert(req.user, (req.ts, site, req.range));
+        let Some((prev_ts, prev_site, _)) = prev else {
+            return Vec::new();
+        };
+        if prev_site != site {
+            *self
+                .transitions
+                .entry(prev_site)
+                .or_default()
+                .entry(site)
+                .or_insert(0) += 1;
+        }
+
+        // Predict the next site and pre-fetch its popular streams.
+        let Some(next_site) = self.predict_site(site) else {
+            return Vec::new();
+        };
+        let gap = (req.ts - prev_ts).max(1.0);
+        let fire_at = req.ts + PREFETCH_OFFSET * gap;
+        // Popularity-based scheme: pre-fetches the popular objects of
+        // the predicted region over the *observed* time range — unlike
+        // MD2, it has no temporal model to advance the window, which is
+        // exactly why its recall trails (paper §V-B1).
+        let range = req.range;
+        self.top_streams(next_site, ASSOC_TOP_N)
+            .into_iter()
+            .map(|stream| {
+                Action::Prefetch(Prediction {
+                    user: req.user,
+                    stream,
+                    range,
+                    fire_at,
+                })
+            })
+            .collect()
+    }
+
+    fn rebuild(&mut self, _now: f64) {
+        // Transition counts are maintained online; nothing to rebuild.
+    }
+
+    fn name(&self) -> &'static str {
+        "MD1"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{generator, presets};
+
+    fn mk_trace() -> Trace {
+        generator::generate(&presets::tiny())
+    }
+
+    fn req(trace: &Trace, user: u32, ts: f64, stream: u32) -> Request {
+        Request {
+            user: UserId(user),
+            ts,
+            stream: StreamId(stream % trace.streams.len() as u32),
+            range: TimeRange::new(ts - 100.0, ts),
+        }
+    }
+
+    #[test]
+    fn learns_transitions() {
+        let trace = mk_trace();
+        let mut m = MarkovModel::new();
+        // Find two streams at different sites.
+        let s0 = 0u32;
+        let s1 = trace
+            .streams
+            .iter()
+            .position(|s| s.site != trace.streams[0].site)
+            .unwrap() as u32;
+        // User ping-pongs between the two sites.
+        for i in 0..10 {
+            m.observe(&req(&trace, 1, i as f64 * 100.0, if i % 2 == 0 { s0 } else { s1 }), &trace);
+        }
+        let site0 = trace.stream(StreamId(s0)).site;
+        let site1 = trace.stream(StreamId(s1)).site;
+        assert_eq!(m.predict_site(site0), Some(site1));
+        assert_eq!(m.predict_site(site1), Some(site0));
+    }
+
+    #[test]
+    fn emits_prefetch_after_transition_learned() {
+        let trace = mk_trace();
+        let mut m = MarkovModel::new();
+        let s0 = 0u32;
+        let s1 = trace
+            .streams
+            .iter()
+            .position(|s| s.site != trace.streams[0].site)
+            .unwrap() as u32;
+        let mut actions = Vec::new();
+        for i in 0..10 {
+            actions = m.observe(
+                &req(&trace, 1, i as f64 * 100.0, if i % 2 == 0 { s0 } else { s1 }),
+                &trace,
+            );
+        }
+        assert!(!actions.is_empty());
+        match &actions[0] {
+            Action::Prefetch(p) => {
+                assert_eq!(p.user, UserId(1));
+                // fire_at is offset into the predicted gap.
+                assert!((p.fire_at - (900.0 + 0.8 * 100.0)).abs() < 1e-9);
+            }
+            other => panic!("expected prefetch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn first_request_emits_nothing() {
+        let trace = mk_trace();
+        let mut m = MarkovModel::new();
+        assert!(m.observe(&req(&trace, 1, 0.0, 0), &trace).is_empty());
+    }
+
+    #[test]
+    fn popularity_ranks_streams() {
+        let trace = mk_trace();
+        let mut m = MarkovModel::new();
+        // Two streams at the same site: find them.
+        let site = trace.streams[0].site;
+        let same_site: Vec<u32> = trace
+            .streams
+            .iter()
+            .filter(|s| s.site == site)
+            .map(|s| s.id.0)
+            .collect();
+        if same_site.len() < 2 {
+            return; // preset didn't give co-located streams; skip
+        }
+        for _ in 0..5 {
+            m.observe(&req(&trace, 2, 0.0, same_site[0]), &trace);
+        }
+        m.observe(&req(&trace, 2, 1.0, same_site[1]), &trace);
+        let top = m.top_streams(site, 2);
+        assert_eq!(top[0], StreamId(same_site[0]));
+    }
+
+    #[test]
+    fn never_subscribes() {
+        // MD1 has no streaming mechanism.
+        let trace = mk_trace();
+        let mut m = MarkovModel::new();
+        for i in 0..50 {
+            let acts = m.observe(&req(&trace, 3, i as f64 * 60.0, 0), &trace);
+            assert!(acts
+                .iter()
+                .all(|a| matches!(a, Action::Prefetch(_))));
+        }
+    }
+}

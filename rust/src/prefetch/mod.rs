@@ -1,0 +1,148 @@
+//! Data pre-fetching models (paper §IV-A, §IV-B, §V-A2).
+//!
+//! * [`arima`] — next-gap forecasting (history-based prediction core).
+//! * [`fpgrowth`] — FP-tree / FP-Growth frequent-itemset mining.
+//! * [`assoc`] — association-rule prediction over data objects.
+//! * [`hybrid`] — **HPM**, the paper's contribution: classifier-routed
+//!   hybrid of history-based ARIMA (program users), association rules
+//!   (human users) and streaming subscriptions (real-time users).
+//! * [`markov`] — **MD1** baseline (Li et al.): Markov model over
+//!   geospatial access paths.
+//! * [`mesh`] — **MD2** baseline (Xiong et al.): regional mesh +
+//!   association rules + ARIMA, applied uniformly to all requests.
+//! * [`streaming`] — subscription registry for the push/streaming
+//!   mechanism (§IV-B).
+
+pub mod arima;
+pub mod assoc;
+pub mod fpgrowth;
+pub mod hybrid;
+pub mod markov;
+pub mod mesh;
+pub mod streaming;
+
+use crate::trace::{Request, StreamId, TimeRange, Trace, UserId};
+
+/// Pre-fetch lead offset: fetch at `ts_i + OFFSET · (ts_pred − ts_i)`
+/// (paper §IV-A2, empirically 0.8).
+pub const PREFETCH_OFFSET: f64 = 0.8;
+
+/// Max data objects pre-fetched per association-rule prediction
+/// (paper §IV-A3, empirically 3).
+pub const ASSOC_TOP_N: usize = 3;
+
+/// A predicted future request to pre-fetch for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub user: UserId,
+    pub stream: StreamId,
+    /// Predicted observation-time range to stage.
+    pub range: TimeRange,
+    /// Simulated time at which to launch the pre-fetch transfer.
+    pub fire_at: f64,
+}
+
+/// Actions a model can request from the push engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Stage data toward the user's DTN ahead of the predicted request.
+    Prefetch(Prediction),
+    /// Convert a real-time request series into a push subscription
+    /// (streaming mechanism, §IV-B). Only HPM emits this.
+    Subscribe {
+        user: UserId,
+        stream: StreamId,
+        /// Smoothed request period (push cadence), seconds.
+        period: f64,
+    },
+}
+
+/// A pre-fetching model: observes the demand stream, emits actions.
+pub trait PrefetchModel {
+    /// Observe one demand request (fed in timestamp order); returns the
+    /// actions to schedule.
+    fn observe(&mut self, req: &Request, trace: &Trace) -> Vec<Action>;
+
+    /// Periodic model rebuild (rule mining, transition re-estimation).
+    fn rebuild(&mut self, now: f64);
+
+    /// Display name (experiment tables).
+    fn name(&self) -> &'static str;
+}
+
+/// The strategy axis of the evaluation grid (§V-B1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Direct observatory delivery (current practice).
+    NoCache,
+    /// DTN cache layer only, no prediction.
+    CacheOnly,
+    /// Framework + MD1 (Markov) pre-fetching.
+    Md1,
+    /// Framework + MD2 (mesh + rules + ARIMA) pre-fetching.
+    Md2,
+    /// Framework + the hybrid pre-fetching model.
+    Hpm,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 5] = [
+        Strategy::NoCache,
+        Strategy::CacheOnly,
+        Strategy::Md1,
+        Strategy::Md2,
+        Strategy::Hpm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::NoCache => "No Cache",
+            Strategy::CacheOnly => "Cache Only",
+            Strategy::Md1 => "MD1",
+            Strategy::Md2 => "MD2",
+            Strategy::Hpm => "HPM",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().replace([' ', '-', '_'], "").as_str() {
+            "nocache" => Some(Strategy::NoCache),
+            "cacheonly" | "cache" => Some(Strategy::CacheOnly),
+            "md1" => Some(Strategy::Md1),
+            "md2" => Some(Strategy::Md2),
+            "hpm" => Some(Strategy::Hpm),
+            _ => None,
+        }
+    }
+
+    pub fn uses_cache(&self) -> bool {
+        !matches!(self, Strategy::NoCache)
+    }
+
+    pub fn uses_prefetch(&self) -> bool {
+        matches!(self, Strategy::Md1 | Strategy::Md2 | Strategy::Hpm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::parse("hpm"), Some(Strategy::Hpm));
+        assert_eq!(Strategy::parse("no-cache"), Some(Strategy::NoCache));
+        assert_eq!(Strategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn strategy_capabilities() {
+        assert!(!Strategy::NoCache.uses_cache());
+        assert!(Strategy::CacheOnly.uses_cache());
+        assert!(!Strategy::CacheOnly.uses_prefetch());
+        assert!(Strategy::Hpm.uses_prefetch());
+    }
+}

@@ -1,0 +1,214 @@
+//! Streaming mechanism for real-time requests (paper §IV-B).
+//!
+//! Real-time monitoring is implemented by users as high-frequency
+//! pull-based polling (Fig. 3b), which floods the observatory with
+//! small requests.  The framework converts a detected real-time series
+//! into a *subscription*: the server-side DTN pushes each newly
+//! available chunk toward the subscriber's DTN, duplicate requests
+//! from co-located subscribers are coalesced (one push per (stream,
+//! DTN, chunk)), and the subscription expires when the user stops
+//! requesting.
+
+use std::collections::HashMap;
+
+use crate::trace::{StreamId, UserId};
+
+/// Subscription expiry: if no demand request is seen for this many
+/// periods, pushing stops.
+pub const EXPIRY_PERIODS: f64 = 10.0;
+
+/// One active subscription.
+#[derive(Debug, Clone)]
+pub struct Subscription {
+    pub user: UserId,
+    pub stream: StreamId,
+    /// Client DTN the user is attached to (push destination).
+    pub dtn: usize,
+    /// Push cadence (smoothed request period, from stream_stats).
+    pub period: f64,
+    /// Last time the user actually demanded this stream.
+    pub last_demand: f64,
+    /// Next observation-time chunk index to push.
+    pub next_chunk: u64,
+}
+
+impl Subscription {
+    pub fn expired(&self, now: f64) -> bool {
+        now - self.last_demand > EXPIRY_PERIODS * self.period
+    }
+}
+
+/// Registry of active subscriptions.
+#[derive(Debug, Default)]
+pub struct StreamRegistry {
+    subs: HashMap<(UserId, StreamId), Subscription>,
+    /// Lifetime counters (metrics).
+    pub pushes: u64,
+    pub coalesced: u64,
+}
+
+impl StreamRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.subs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.subs.is_empty()
+    }
+
+    pub fn contains(&self, user: UserId, stream: StreamId) -> bool {
+        self.subs.contains_key(&(user, stream))
+    }
+
+    /// Register (or refresh) a subscription. Returns true if new —
+    /// the caller schedules the first push event for new subscriptions.
+    pub fn subscribe(
+        &mut self,
+        user: UserId,
+        stream: StreamId,
+        dtn: usize,
+        period: f64,
+        now: f64,
+        chunk_secs: f64,
+    ) -> bool {
+        let key = (user, stream);
+        let is_new = !self.subs.contains_key(&key);
+        let next_chunk = (now / chunk_secs).floor() as u64;
+        let e = self.subs.entry(key).or_insert(Subscription {
+            user,
+            stream,
+            dtn,
+            period,
+            last_demand: now,
+            next_chunk,
+        });
+        e.period = period;
+        e.last_demand = now;
+        is_new
+    }
+
+    /// Renew on a demand request (keeps the subscription alive).
+    pub fn on_demand(&mut self, user: UserId, stream: StreamId, now: f64) {
+        if let Some(s) = self.subs.get_mut(&(user, stream)) {
+            s.last_demand = now;
+        }
+    }
+
+    pub fn get(&self, user: UserId, stream: StreamId) -> Option<&Subscription> {
+        self.subs.get(&(user, stream))
+    }
+
+    /// Process one push tick for a subscription.  Returns the chunks
+    /// that became available since the last push (to be transferred to
+    /// the subscriber's DTN), or `None` if the subscription expired and
+    /// was removed.  `now` is observation == wall time (live data).
+    pub fn push_tick(
+        &mut self,
+        user: UserId,
+        stream: StreamId,
+        now: f64,
+        chunk_secs: f64,
+    ) -> Option<std::ops::Range<u64>> {
+        let key = (user, stream);
+        let expired = match self.subs.get(&key) {
+            None => return None,
+            Some(s) => s.expired(now),
+        };
+        if expired {
+            self.subs.remove(&key);
+            return None;
+        }
+        let s = self.subs.get_mut(&key).unwrap();
+        // Chunks *published* (closed) by `now` — the observatory
+        // publishes data in chunk-granular batches (§III-D), and the
+        // push engine ships each batch the moment it closes.
+        let avail_end = (now / chunk_secs).floor() as u64;
+        let range = s.next_chunk..avail_end.max(s.next_chunk);
+        s.next_chunk = range.end;
+        self.pushes += 1;
+        Some(range)
+    }
+
+    /// All live subscriptions (placement / diagnostics).
+    pub fn iter(&self) -> impl Iterator<Item = &Subscription> {
+        self.subs.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CHUNK: f64 = 100.0;
+
+    #[test]
+    fn subscribe_then_push_yields_new_chunks() {
+        let mut reg = StreamRegistry::new();
+        let is_new = reg.subscribe(UserId(1), StreamId(2), 3, 60.0, 1000.0, CHUNK);
+        assert!(is_new);
+        // At t=1000, next_chunk = 10. By t=1250, chunks 10..12 closed.
+        let r = reg.push_tick(UserId(1), StreamId(2), 1250.0, CHUNK).unwrap();
+        assert_eq!(r, 10..12);
+        // Nothing new yet at 1299.
+        let r2 = reg.push_tick(UserId(1), StreamId(2), 1299.0, CHUNK).unwrap();
+        assert!(r2.is_empty());
+        // Chunk 12 closes at 1300.
+        let r3 = reg.push_tick(UserId(1), StreamId(2), 1310.0, CHUNK).unwrap();
+        assert_eq!(r3, 12..13);
+    }
+
+    #[test]
+    fn resubscribe_is_not_new() {
+        let mut reg = StreamRegistry::new();
+        assert!(reg.subscribe(UserId(1), StreamId(2), 3, 60.0, 0.0, CHUNK));
+        assert!(!reg.subscribe(UserId(1), StreamId(2), 3, 55.0, 100.0, CHUNK));
+        assert_eq!(reg.len(), 1);
+        assert!((reg.get(UserId(1), StreamId(2)).unwrap().period - 55.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expires_without_demand() {
+        let mut reg = StreamRegistry::new();
+        reg.subscribe(UserId(1), StreamId(2), 3, 60.0, 0.0, CHUNK);
+        // 10 periods of silence → expired.
+        let r = reg.push_tick(UserId(1), StreamId(2), 601.0, CHUNK);
+        assert!(r.is_none());
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn demand_renews_subscription() {
+        let mut reg = StreamRegistry::new();
+        reg.subscribe(UserId(1), StreamId(2), 3, 60.0, 0.0, CHUNK);
+        reg.on_demand(UserId(1), StreamId(2), 580.0);
+        // Was due to expire at 600 without the renewal.
+        assert!(reg.push_tick(UserId(1), StreamId(2), 700.0, CHUNK).is_some());
+    }
+
+    #[test]
+    fn push_tick_on_unknown_sub_is_none() {
+        let mut reg = StreamRegistry::new();
+        assert!(reg.push_tick(UserId(9), StreamId(9), 0.0, CHUNK).is_none());
+    }
+
+    #[test]
+    fn chunks_never_repushed() {
+        let mut reg = StreamRegistry::new();
+        reg.subscribe(UserId(1), StreamId(2), 3, 60.0, 0.0, CHUNK);
+        let mut pushed = Vec::new();
+        for t in [150.0, 250.0, 250.0, 400.0] {
+            reg.on_demand(UserId(1), StreamId(2), t);
+            if let Some(r) = reg.push_tick(UserId(1), StreamId(2), t, CHUNK) {
+                pushed.extend(r);
+            }
+        }
+        let mut dedup = pushed.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(pushed, dedup, "chunk pushed twice: {pushed:?}");
+    }
+}

@@ -1,0 +1,172 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.  Shapes and baked constants are asserted at load
+//! time so mismatches fail fast instead of mid-simulation.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor spec as recorded by aot.py.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One model's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub consts: BTreeMap<String, f64>,
+}
+
+impl ModelSpec {
+    pub fn const_usize(&self, key: &str) -> Result<usize> {
+        self.consts
+            .get(key)
+            .map(|v| *v as usize)
+            .with_context(|| format!("manifest const '{key}' missing"))
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &std::path::Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = Json::parse(text).context("parsing manifest.json")?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_usize)
+            .context("manifest missing 'version'")?;
+        let mut models = BTreeMap::new();
+        let model_obj = doc
+            .get("models")
+            .and_then(Json::as_obj)
+            .context("manifest missing 'models'")?;
+        for (name, entry) in model_obj {
+            models.insert(name.clone(), parse_model(entry)?);
+        }
+        Ok(Manifest { version, models })
+    }
+}
+
+fn parse_model(entry: &Json) -> Result<ModelSpec> {
+    let file = entry
+        .get("file")
+        .and_then(Json::as_str)
+        .context("model missing 'file'")?
+        .to_string();
+    let parse_tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+        entry
+            .get(key)
+            .and_then(Json::as_arr)
+            .with_context(|| format!("model missing '{key}'"))?
+            .iter()
+            .map(|t| {
+                Ok(TensorSpec {
+                    dtype: t
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .context("tensor missing dtype")?
+                        .to_string(),
+                    shape: t
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("tensor missing shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("bad dim"))
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect()
+    };
+    let mut consts = BTreeMap::new();
+    if let Some(c) = entry.get("consts").and_then(Json::as_obj) {
+        for (k, v) in c {
+            if let Some(n) = v.as_f64() {
+                consts.insert(k.clone(), n);
+            }
+        }
+    }
+    Ok(ModelSpec {
+        file,
+        inputs: parse_tensors("inputs")?,
+        outputs: parse_tensors("outputs")?,
+        consts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 2,
+      "models": {
+        "predictor": {
+          "file": "predictor.hlo.txt",
+          "inputs": [{"dtype": "f32", "shape": [64, 60]}],
+          "outputs": [
+            {"dtype": "f32", "shape": [64]},
+            {"dtype": "f32", "shape": [64, 8]},
+            {"dtype": "f32", "shape": [64]}
+          ],
+          "consts": {"batch": 64, "window": 60, "order": 8}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 2);
+        let p = &m.models["predictor"];
+        assert_eq!(p.file, "predictor.hlo.txt");
+        assert_eq!(p.inputs[0].shape, vec![64, 60]);
+        assert_eq!(p.outputs.len(), 3);
+        assert_eq!(p.const_usize("batch").unwrap(), 64);
+        assert_eq!(p.const_usize("order").unwrap(), 8);
+    }
+
+    #[test]
+    fn missing_const_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.models["predictor"].const_usize("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("{\"version\": 2}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn parses_real_artifact_manifest_if_present() {
+        let path = crate::runtime::default_artifacts_dir().join("manifest.json");
+        if !path.exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        for name in ["predictor", "kmeans", "stream_stats"] {
+            assert!(m.models.contains_key(name), "missing {name}");
+        }
+        assert_eq!(m.models["predictor"].const_usize("window").unwrap(), 60);
+    }
+}

@@ -1,0 +1,278 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas models.
+//!
+//! `make artifacts` (the one-time Python build step) writes
+//! `artifacts/{predictor,kmeans,stream_stats}.hlo.txt` plus
+//! `manifest.json`.  This module loads the HLO *text* (the interchange
+//! format — see python/compile/aot.py), compiles each model once on the
+//! PJRT CPU client, and exposes typed entry points used by the
+//! coordinator's hot path.  Python is never imported at runtime.
+//!
+//! [`Engine`] implements [`GapPredictor`], making the AOT predictor a
+//! drop-in for the pure-Rust fallback; the integration tests assert the
+//! two produce the same numbers.
+
+pub mod manifest;
+
+use anyhow::{bail, Context, Result};
+
+use crate::prefetch::arima::{GapPredictor, WINDOW};
+use manifest::Manifest;
+
+/// Feature dimension of the K-Means model (matches `model.KM_DIM`).
+pub const KM_DIM: usize = 4;
+
+/// One compiled model.
+struct Model {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Model {
+    fn load(client: &xla::PjRtClient, path: &std::path::Path, name: &str) -> Result<Model> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text for model '{name}' from {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling model '{name}'"))?;
+        Ok(Model {
+            exe,
+            name: name.to_string(),
+        })
+    }
+
+    /// Execute with literal inputs, unwrap the tupled outputs.
+    fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing model '{}'", self.name))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of '{}'", self.name))?;
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        Ok(root.to_tuple()?)
+    }
+}
+
+/// The loaded AOT model bundle.
+pub struct Engine {
+    predictor: Model,
+    kmeans: Model,
+    stream_stats: Model,
+    /// Batch capacities baked into the artifacts.
+    pub pred_batch: usize,
+    pub pred_window: usize,
+    pub km_points: usize,
+    pub km_clusters: usize,
+    pub stream_batch: usize,
+    pub stream_window: usize,
+    /// Device call counter (perf accounting).
+    pub calls: std::cell::Cell<u64>,
+}
+
+impl Engine {
+    /// Load every model listed in `dir/manifest.json` and compile on
+    /// the PJRT CPU client.
+    pub fn load(dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        let get = |name: &str| -> Result<(&manifest::ModelSpec, std::path::PathBuf)> {
+            let spec = manifest
+                .models
+                .get(name)
+                .with_context(|| format!("manifest missing model '{name}'"))?;
+            Ok((spec, dir.join(&spec.file)))
+        };
+
+        let (pspec, ppath) = get("predictor")?;
+        let pred_batch = pspec.const_usize("batch")?;
+        let pred_window = pspec.const_usize("window")?;
+        if pred_window != WINDOW {
+            bail!(
+                "artifact predictor window {} != coordinator WINDOW {}",
+                pred_window,
+                WINDOW
+            );
+        }
+        let (kspec, kpath) = get("kmeans")?;
+        let km_points = kspec.const_usize("points")?;
+        let km_clusters = kspec.const_usize("clusters")?;
+        if kspec.const_usize("dim")? != KM_DIM {
+            bail!("artifact kmeans dim != {KM_DIM}");
+        }
+        let (sspec, spath) = get("stream_stats")?;
+        let stream_batch = sspec.const_usize("batch")?;
+        let stream_window = sspec.const_usize("window")?;
+
+        Ok(Engine {
+            predictor: Model::load(&client, &ppath, "predictor")?,
+            kmeans: Model::load(&client, &kpath, "kmeans")?,
+            stream_stats: Model::load(&client, &spath, "stream_stats")?,
+            pred_batch,
+            pred_window,
+            km_points,
+            km_clusters,
+            stream_batch,
+            stream_window,
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Load from the conventional `artifacts/` directory next to the
+    /// workspace root (honours `OBSD_ARTIFACTS` override).
+    pub fn load_default() -> Result<Engine> {
+        Engine::load(&default_artifacts_dir())
+    }
+
+    /// Predict the next inter-arrival gap for up to `pred_batch` users
+    /// per device call (larger inputs are chunked).
+    pub fn predict_gaps_batch(&self, windows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(windows.len());
+        for chunk in windows.chunks(self.pred_batch) {
+            let mut flat = Vec::with_capacity(self.pred_batch * self.pred_window);
+            for w in chunk {
+                let norm = crate::prefetch::arima::normalize_window(w);
+                flat.extend(norm.iter().map(|&g| g as f32));
+            }
+            // Pad the batch with benign constant rows.
+            for _ in chunk.len()..self.pred_batch {
+                flat.extend(std::iter::repeat(1.0f32).take(self.pred_window));
+            }
+            let x = xla::Literal::vec1(&flat)
+                .reshape(&[self.pred_batch as i64, self.pred_window as i64])?;
+            let outputs = self.predictor.run(&[x])?;
+            self.calls.set(self.calls.get() + 1);
+            let gaps = outputs[0].to_vec::<f32>()?;
+            out.extend(gaps[..chunk.len()].iter().map(|&g| g as f64));
+        }
+        Ok(out)
+    }
+
+    /// One K-Means step over ≤ `km_points` weighted feature points.
+    /// Returns (new centroids, assignment per point, inertia).
+    pub fn kmeans_step(
+        &self,
+        points: &[[f32; KM_DIM]],
+        weights: &[f32],
+        centroids: &[[f32; KM_DIM]],
+    ) -> Result<(Vec<[f32; KM_DIM]>, Vec<i32>, f32)> {
+        if points.len() > self.km_points {
+            bail!(
+                "kmeans_step: {} points > capacity {}",
+                points.len(),
+                self.km_points
+            );
+        }
+        if centroids.len() != self.km_clusters {
+            bail!(
+                "kmeans_step: {} centroids != artifact clusters {}",
+                centroids.len(),
+                self.km_clusters
+            );
+        }
+        if weights.len() != points.len() {
+            bail!("kmeans_step: weights/points length mismatch");
+        }
+        let mut pts = Vec::with_capacity(self.km_points * KM_DIM);
+        for p in points {
+            pts.extend_from_slice(p);
+        }
+        pts.resize(self.km_points * KM_DIM, 0.0);
+        let mut w: Vec<f32> = weights.to_vec();
+        w.resize(self.km_points, 0.0);
+        let mut cents = Vec::with_capacity(self.km_clusters * KM_DIM);
+        for c in centroids {
+            cents.extend_from_slice(c);
+        }
+        let p_lit = xla::Literal::vec1(&pts).reshape(&[self.km_points as i64, KM_DIM as i64])?;
+        let w_lit = xla::Literal::vec1(&w);
+        let c_lit =
+            xla::Literal::vec1(&cents).reshape(&[self.km_clusters as i64, KM_DIM as i64])?;
+        let outputs = self.kmeans.run(&[p_lit, w_lit, c_lit])?;
+        self.calls.set(self.calls.get() + 1);
+        let new_c_flat = outputs[0].to_vec::<f32>()?;
+        let assign_all = outputs[1].to_vec::<i32>()?;
+        let inertia = outputs[2].to_vec::<f32>()?[0];
+        let new_centroids = new_c_flat
+            .chunks(KM_DIM)
+            .map(|c| [c[0], c[1], c[2], c[3]])
+            .collect();
+        Ok((new_centroids, assign_all[..points.len()].to_vec(), inertia))
+    }
+
+    /// Batched EWMA/rate/jitter over subscription windows. Returns
+    /// `(ewma_gap, rate, jitter)` per input row.
+    pub fn stream_stats_batch(&self, windows: &[Vec<f64>]) -> Result<Vec<(f64, f64, f64)>> {
+        let mut out = Vec::with_capacity(windows.len());
+        for chunk in windows.chunks(self.stream_batch) {
+            let mut flat = Vec::with_capacity(self.stream_batch * self.stream_window);
+            for w in chunk {
+                // Left-pad / truncate to the artifact window.
+                let mut row: Vec<f32> = w.iter().map(|&g| g as f32).collect();
+                if row.len() >= self.stream_window {
+                    row = row[row.len() - self.stream_window..].to_vec();
+                } else {
+                    let first = *row.first().unwrap_or(&1.0);
+                    let mut padded = vec![first; self.stream_window - row.len()];
+                    padded.extend(row);
+                    row = padded;
+                }
+                flat.extend(row);
+            }
+            for _ in chunk.len()..self.stream_batch {
+                flat.extend(std::iter::repeat(1.0f32).take(self.stream_window));
+            }
+            let x = xla::Literal::vec1(&flat)
+                .reshape(&[self.stream_batch as i64, self.stream_window as i64])?;
+            let outputs = self.stream_stats.run(&[x])?;
+            self.calls.set(self.calls.get() + 1);
+            let stats = outputs[0].to_vec::<f32>()?;
+            for i in 0..chunk.len() {
+                out.push((
+                    stats[i * 3] as f64,
+                    stats[i * 3 + 1] as f64,
+                    stats[i * 3 + 2] as f64,
+                ));
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl GapPredictor for Engine {
+    fn predict_gaps(&mut self, windows: &[Vec<f64>]) -> Vec<f64> {
+        match self.predict_gaps_batch(windows) {
+            Ok(v) => v,
+            Err(e) => {
+                // PJRT failures degrade to the pure-Rust path rather than
+                // killing the coordinator.
+                eprintln!("runtime: predictor fell back to rust-arima: {e:#}");
+                windows
+                    .iter()
+                    .map(|w| crate::prefetch::arima::predict_next_gap(w))
+                    .collect()
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-arima"
+    }
+}
+
+/// `artifacts/` next to Cargo.toml, or `OBSD_ARTIFACTS`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("OBSD_ARTIFACTS") {
+        return dir.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Do the AOT artifacts exist (used by tests/examples to pick a path)?
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}

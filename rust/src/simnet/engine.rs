@@ -1,0 +1,144 @@
+//! Discrete-event scheduling primitives.
+//!
+//! [`EventQueue`] is a time-ordered priority queue with FIFO tie-break
+//! (stable ordering makes simulations reproducible).  The coordinator's
+//! main loop merges this queue with [`FlowSim::next_completion`]
+//! (transfer completions are dynamic — fair-share rates change as flows
+//! churn — so they are queried, not queued).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Item<T> {
+    time: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Item<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Item<T> {}
+
+impl<T> PartialOrd for Item<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Item<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap on (time, seq).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap event queue ordered by (time, insertion order).
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Item<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at absolute time `time`.
+    pub fn push(&mut self, time: f64, payload: T) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        self.heap.push(Item {
+            time,
+            seq: self.seq,
+            payload,
+        });
+        self.seq += 1;
+    }
+
+    /// Time of the earliest event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|i| i.time)
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|i| (i.time, i.payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.pop().unwrap(), (1.0, "a"));
+        assert_eq!(q.pop().unwrap(), (2.0, "b"));
+        assert_eq!(q.pop().unwrap(), (3.0, "c"));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_on_ties() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 1);
+        q.push(1.0, 2);
+        q.push(1.0, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(5.0, ());
+        q.push(2.0, ());
+        assert_eq!(q.peek_time(), Some(2.0));
+        q.pop();
+        assert_eq!(q.peek_time(), Some(5.0));
+    }
+
+    #[test]
+    fn prop_monotone_pop_order() {
+        crate::util::prop::check("eventqueue-monotone", |rng| {
+            let mut q = EventQueue::new();
+            for i in 0..200 {
+                q.push(rng.range(0.0, 1000.0), i);
+            }
+            let mut last = f64::NEG_INFINITY;
+            while let Some((t, _)) = q.pop() {
+                assert!(t >= last);
+                last = t;
+            }
+        });
+    }
+}

@@ -1,0 +1,343 @@
+//! Fluid-flow transfer model with per-link fair sharing.
+//!
+//! Each transfer is a *flow* on one directed resource: either a DMZ
+//! link between two DTNs (fair-shared among concurrent flows) or a
+//! dedicated commodity-WAN pipe (fixed per-flow rate).  When the flow
+//! population on a link changes, all flows on that link are settled at
+//! the old rate and re-planned at the new rate — the classic
+//! progressive-filling fluid approximation, exact for single-hop paths
+//! like the VDC star/clique topology.
+//!
+//! Completion times are delivered through [`FlowSim::next_completion`];
+//! the discrete-event engine re-queries after every perturbation
+//! (event versioning is handled by the engine).
+
+use std::collections::HashMap;
+
+/// Identifies one transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FlowId(pub u64);
+
+/// The resource a flow rides on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pipe {
+    /// Fair-shared DMZ link (by link id from `Topology::link_id`).
+    Link { id: usize, capacity: f64 },
+    /// Dedicated pipe at a fixed rate (commodity WAN, user edge).
+    Dedicated { rate: f64 },
+}
+
+#[derive(Debug, Clone)]
+struct Flow {
+    pipe: Pipe,
+    bytes_left: f64,
+    bytes_total: f64,
+    rate: f64,
+    last_settle: f64,
+    started: f64,
+}
+
+/// Fluid-flow simulator state.
+#[derive(Debug, Default)]
+pub struct FlowSim {
+    next_id: u64,
+    flows: HashMap<FlowId, Flow>,
+    /// link id → flows currently on it.
+    link_flows: HashMap<usize, Vec<FlowId>>,
+}
+
+/// Result of completing a flow.
+#[derive(Debug, Clone, Copy)]
+pub struct Completed {
+    pub id: FlowId,
+    pub bytes: f64,
+    pub started: f64,
+    pub finished: f64,
+}
+
+impl Completed {
+    /// Achieved throughput in bytes/second.
+    pub fn throughput(&self) -> f64 {
+        if self.finished > self.started {
+            self.bytes / (self.finished - self.started)
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+impl FlowSim {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn active(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Start a transfer of `bytes` at time `now`. Returns its id.
+    pub fn start(&mut self, now: f64, bytes: f64, pipe: Pipe) -> FlowId {
+        debug_assert!(bytes > 0.0, "empty flow");
+        let id = FlowId(self.next_id);
+        self.next_id += 1;
+        let flow = Flow {
+            pipe,
+            bytes_left: bytes,
+            bytes_total: bytes,
+            rate: 0.0,
+            last_settle: now,
+            started: now,
+        };
+        self.flows.insert(id, flow);
+        match pipe {
+            Pipe::Link { id: link, .. } => {
+                self.settle_link(link, now);
+                self.link_flows.entry(link).or_default().push(id);
+                self.replan_link(link);
+            }
+            Pipe::Dedicated { rate } => {
+                self.flows.get_mut(&id).unwrap().rate = rate.max(1.0);
+            }
+        }
+        id
+    }
+
+    /// Earliest (time, flow) completion among active flows, if any.
+    pub fn next_completion(&self) -> Option<(f64, FlowId)> {
+        self.flows
+            .iter()
+            .map(|(&id, f)| {
+                let t = if f.rate > 0.0 {
+                    f.last_settle + f.bytes_left / f.rate
+                } else {
+                    f64::INFINITY
+                };
+                (t, id)
+            })
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
+    }
+
+    /// Complete a flow at `now` (the engine guarantees `now` is its
+    /// completion time).  Frees link share for the remaining flows.
+    pub fn complete(&mut self, id: FlowId, now: f64) -> Option<Completed> {
+        let flow = self.flows.remove(&id)?;
+        if let Pipe::Link { id: link, .. } = flow.pipe {
+            self.settle_link(link, now);
+            if let Some(v) = self.link_flows.get_mut(&link) {
+                v.retain(|&f| f != id);
+                if v.is_empty() {
+                    self.link_flows.remove(&link);
+                }
+            }
+            self.replan_link(link);
+        }
+        Some(Completed {
+            id,
+            bytes: flow.bytes_total,
+            started: flow.started,
+            finished: now,
+        })
+    }
+
+    /// Advance all flows on a link to `now` at their current rates.
+    fn settle_link(&mut self, link: usize, now: f64) {
+        if let Some(ids) = self.link_flows.get(&link) {
+            for id in ids {
+                if let Some(f) = self.flows.get_mut(id) {
+                    let dt = (now - f.last_settle).max(0.0);
+                    f.bytes_left = (f.bytes_left - f.rate * dt).max(0.0);
+                    f.last_settle = now;
+                }
+            }
+        }
+    }
+
+    /// Recompute fair-share rates on a link.
+    fn replan_link(&mut self, link: usize) {
+        let Some(ids) = self.link_flows.get(&link) else {
+            return;
+        };
+        let n = ids.len().max(1) as f64;
+        for id in ids {
+            if let Some(f) = self.flows.get_mut(id) {
+                if let Pipe::Link { capacity, .. } = f.pipe {
+                    f.rate = (capacity / n).max(1.0);
+                }
+            }
+        }
+    }
+
+    /// Current instantaneous rate of a flow (bytes/s).
+    #[cfg(test)]
+    fn rate(&self, id: FlowId) -> f64 {
+        self.flows[&id].rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LINK: Pipe = Pipe::Link {
+        id: 1,
+        capacity: 1000.0,
+    };
+
+    #[test]
+    fn single_flow_full_capacity() {
+        let mut sim = FlowSim::new();
+        let id = sim.start(0.0, 5000.0, LINK);
+        assert_eq!(sim.rate(id), 1000.0);
+        let (t, fid) = sim.next_completion().unwrap();
+        assert_eq!(fid, id);
+        assert!((t - 5.0).abs() < 1e-9);
+        let done = sim.complete(id, t).unwrap();
+        assert!((done.throughput() - 1000.0).abs() < 1e-9);
+        assert_eq!(sim.active(), 0);
+    }
+
+    #[test]
+    fn two_flows_share_fairly() {
+        let mut sim = FlowSim::new();
+        let a = sim.start(0.0, 1000.0, LINK);
+        let b = sim.start(0.0, 1000.0, LINK);
+        assert_eq!(sim.rate(a), 500.0);
+        assert_eq!(sim.rate(b), 500.0);
+        // Both finish at t=2 (1000 bytes at 500 B/s).
+        let (t, first) = sim.next_completion().unwrap();
+        assert!((t - 2.0).abs() < 1e-9);
+        sim.complete(first, t).unwrap();
+        // Remaining flow gets the full link again; it has 0 bytes left.
+        let (t2, second) = sim.next_completion().unwrap();
+        assert!((t2 - 2.0).abs() < 1e-9);
+        sim.complete(second, t2).unwrap();
+    }
+
+    #[test]
+    fn late_join_slows_first_flow() {
+        let mut sim = FlowSim::new();
+        let a = sim.start(0.0, 1000.0, LINK);
+        // At t=0.5, a has 500 bytes left; b joins.
+        let _b = sim.start(0.5, 10_000.0, LINK);
+        assert_eq!(sim.rate(a), 500.0);
+        let (t, first) = sim.next_completion().unwrap();
+        assert_eq!(first, a);
+        // 500 bytes left at 500 B/s → completes at 1.5.
+        assert!((t - 1.5).abs() < 1e-9);
+        let done = sim.complete(a, t).unwrap();
+        // 1000 bytes over 1.5 s.
+        assert!((done.throughput() - 666.666).abs() < 0.01);
+    }
+
+    #[test]
+    fn completion_restores_rate() {
+        let mut sim = FlowSim::new();
+        let a = sim.start(0.0, 10_000.0, LINK);
+        let b = sim.start(0.0, 500.0, LINK);
+        let (t, first) = sim.next_completion().unwrap();
+        assert_eq!(first, b);
+        assert!((t - 1.0).abs() < 1e-9); // 500 at 500 B/s
+        sim.complete(b, t).unwrap();
+        assert_eq!(sim.rate(a), 1000.0);
+        let (t2, _) = sim.next_completion().unwrap();
+        // a had 10000-500=9500 left at t=1, now at 1000 B/s → 10.5.
+        assert!((t2 - 10.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dedicated_pipe_fixed_rate() {
+        let mut sim = FlowSim::new();
+        let a = sim.start(0.0, 100.0, Pipe::Dedicated { rate: 10.0 });
+        let _b = sim.start(0.0, 100.0, Pipe::Dedicated { rate: 10.0 });
+        // Dedicated pipes don't share.
+        let (t, _) = sim.next_completion().unwrap();
+        assert!((t - 10.0).abs() < 1e-9);
+        sim.complete(a, t).unwrap();
+    }
+
+    #[test]
+    fn different_links_independent() {
+        let mut sim = FlowSim::new();
+        let a = sim.start(
+            0.0,
+            1000.0,
+            Pipe::Link {
+                id: 1,
+                capacity: 1000.0,
+            },
+        );
+        let b = sim.start(
+            0.0,
+            1000.0,
+            Pipe::Link {
+                id: 2,
+                capacity: 1000.0,
+            },
+        );
+        assert_eq!(sim.rate(a), 1000.0);
+        assert_eq!(sim.rate(b), 1000.0);
+    }
+
+    /// Property: total bytes delivered equals total bytes requested, and
+    /// completions are causally ordered, under random workloads.
+    #[test]
+    fn prop_byte_conservation() {
+        crate::util::prop::check("flow-byte-conservation", |rng| {
+            let mut sim = FlowSim::new();
+            let mut now = 0.0;
+            let mut submitted = 0.0;
+            let mut delivered = 0.0;
+            let mut pending = 0usize;
+            for _ in 0..100 {
+                if rng.chance(0.6) || pending == 0 {
+                    let next_now = now + rng.range(0.0, 2.0);
+                    // DES discipline: process completions due before the
+                    // clock advances past them.
+                    while let Some((t, id)) = sim.next_completion() {
+                        if t > next_now {
+                            break;
+                        }
+                        assert!(t >= now - 1e-6, "completion {t} before now {now}");
+                        now = t.max(now);
+                        let done = sim.complete(id, now).unwrap();
+                        assert!(done.finished >= done.started);
+                        delivered += done.bytes;
+                        pending -= 1;
+                    }
+                    now = next_now;
+                    let bytes = rng.range(10.0, 5000.0);
+                    let pipe = if rng.chance(0.7) {
+                        Pipe::Link {
+                            id: rng.below(3),
+                            capacity: rng.range(100.0, 2000.0),
+                        }
+                    } else {
+                        Pipe::Dedicated {
+                            rate: rng.range(10.0, 500.0),
+                        }
+                    };
+                    sim.start(now, bytes, pipe);
+                    submitted += bytes;
+                    pending += 1;
+                } else {
+                    let (t, id) = sim.next_completion().unwrap();
+                    assert!(t >= now - 1e-6, "completion {t} before now {now}");
+                    now = t.max(now);
+                    let done = sim.complete(id, now).unwrap();
+                    assert!(done.finished >= done.started);
+                    delivered += done.bytes;
+                    pending -= 1;
+                }
+            }
+            // Drain.
+            while let Some((t, id)) = sim.next_completion() {
+                now = t.max(now);
+                delivered += sim.complete(id, now).unwrap().bytes;
+            }
+            assert!(
+                (submitted - delivered).abs() < 1e-6 * submitted.max(1.0),
+                "submitted {submitted} delivered {delivered}"
+            );
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! VDC network simulator (paper §V-A1).
+//!
+//! * [`topology`] — the 7-DTN Fig. 8 bandwidth matrix, commodity-WAN
+//!   rates per continent, and network-condition scaling (§V-A3).
+//! * [`flow`] — fluid fair-share transfer model over DMZ links and
+//!   dedicated WAN pipes.
+//! * [`engine`] — discrete-event queue primitives.
+//!
+//! The observatory service model (task queue + 10 service processes)
+//! lives in [`crate::coordinator::server`]; this module only models the
+//! network fabric.
+
+pub mod engine;
+pub mod flow;
+pub mod topology;
+
+pub use engine::EventQueue;
+pub use flow::{Completed, FlowId, FlowSim, Pipe};
+pub use topology::{NetCondition, Topology, N_DTNS, SERVER};

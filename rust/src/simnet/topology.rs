@@ -1,0 +1,189 @@
+//! VDC network topology (paper Fig. 7-8).
+//!
+//! Seven DTNs: node 0 is the observatory-side server DTN, nodes 1-6
+//! are client DTNs hosting the six continents' users.  The paper caps
+//! client-DTN bandwidth between 10 and 40 Gbps (Fig. 8, emulating
+//! GAGE's measured per-continent WAN performance); the exact matrix in
+//! the paper is a figure without published numbers, so we reconstruct
+//! a heterogeneous matrix with the same range and ordering.
+//!
+//! Separately from the DMZ fabric, every user has a *commodity WAN*
+//! path to the observatory (the paper's "current observatory data
+//! delivery") whose throughput is the continent's Fig. 2 average —
+//! this is what the No-Cache baseline rides on.
+
+use crate::util::gbps_to_bytes_per_sec;
+
+/// Number of DTNs in the simulated VDC (Fig. 7).
+pub const N_DTNS: usize = 7;
+/// The observatory-side server DTN.
+pub const SERVER: usize = 0;
+/// Users connect to their local DTN at 100 Gbps (paper §V-A1).
+pub const USER_EDGE_GBPS: f64 = 100.0;
+
+/// Network condition scenarios (paper §V-A3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NetCondition {
+    /// Original Fig. 8 bandwidths.
+    Best,
+    /// 50% of best.
+    Medium,
+    /// 1% of best.
+    Worst,
+}
+
+impl NetCondition {
+    pub const ALL: [NetCondition; 3] = [NetCondition::Best, NetCondition::Medium, NetCondition::Worst];
+
+    pub fn factor(&self) -> f64 {
+        match self {
+            NetCondition::Best => 1.0,
+            NetCondition::Medium => 0.5,
+            NetCondition::Worst => 0.01,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetCondition::Best => "Best",
+            NetCondition::Medium => "Medium",
+            NetCondition::Worst => "Worst",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NetCondition> {
+        match s.to_ascii_lowercase().as_str() {
+            "best" => Some(NetCondition::Best),
+            "medium" => Some(NetCondition::Medium),
+            "worst" => Some(NetCondition::Worst),
+            _ => None,
+        }
+    }
+}
+
+/// Symmetric DTN-to-DTN bandwidth matrix plus per-continent commodity
+/// WAN rates.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// `bw[i][j]` in bytes/second (0 on the diagonal).
+    bw: [[f64; N_DTNS]; N_DTNS],
+    /// Commodity WAN bytes/second for users of each client DTN
+    /// (index 1..N_DTNS; index 0 unused).
+    wan: [f64; N_DTNS],
+    /// User ↔ local DTN edge, bytes/second.
+    user_edge: f64,
+}
+
+/// Client DTN → server bandwidth in Gbps (Fig. 8 reconstruction:
+/// 10-40 Gbps, ordered like Fig. 2's continent throughput:
+/// NA, EU, AS, SA, AF, OC on DTNs 1..6).
+const SERVER_LINK_GBPS: [f64; 6] = [40.0, 40.0, 10.0, 20.0, 10.0, 30.0];
+
+impl Topology {
+    /// The Fig. 8 VDC topology under a network condition, with
+    /// per-continent WAN rates in Mbps (from the trace preset).
+    pub fn vdc(cond: NetCondition, wan_mbps: &[f64; 6]) -> Self {
+        let f = cond.factor();
+        let mut bw = [[0.0; N_DTNS]; N_DTNS];
+        for i in 1..N_DTNS {
+            let gbps = SERVER_LINK_GBPS[i - 1] * f;
+            bw[SERVER][i] = gbps_to_bytes_per_sec(gbps);
+            bw[i][SERVER] = bw[SERVER][i];
+        }
+        // Peer links: limited by the slower endpoint, with a 20% path
+        // penalty (multi-hop regional fabric).
+        for i in 1..N_DTNS {
+            for j in (i + 1)..N_DTNS {
+                let gbps = SERVER_LINK_GBPS[i - 1].min(SERVER_LINK_GBPS[j - 1]) * 0.8 * f;
+                bw[i][j] = gbps_to_bytes_per_sec(gbps);
+                bw[j][i] = bw[i][j];
+            }
+        }
+        let mut wan = [0.0; N_DTNS];
+        for (i, mbps) in wan_mbps.iter().enumerate() {
+            // Commodity WAN also degrades with the network condition.
+            wan[i + 1] = mbps * f * 1e6 / 8.0;
+        }
+        Self {
+            bw,
+            wan,
+            user_edge: gbps_to_bytes_per_sec(USER_EDGE_GBPS),
+        }
+    }
+
+    /// DMZ link bandwidth between two DTNs (bytes/s).
+    pub fn link(&self, from: usize, to: usize) -> f64 {
+        self.bw[from][to]
+    }
+
+    /// Commodity WAN bandwidth for a client DTN's users (bytes/s).
+    pub fn wan(&self, dtn: usize) -> f64 {
+        self.wan[dtn]
+    }
+
+    /// User ↔ local DTN bandwidth (bytes/s).
+    pub fn user_edge(&self) -> f64 {
+        self.user_edge
+    }
+
+    /// Directed link id for flow bookkeeping.
+    pub fn link_id(from: usize, to: usize) -> usize {
+        from * N_DTNS + to
+    }
+
+    pub fn n_links() -> usize {
+        N_DTNS * N_DTNS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vdc_matrix_symmetric_and_in_range() {
+        let t = Topology::vdc(NetCondition::Best, &[25.0, 18.0, 0.568, 2.3, 1.2, 22.0]);
+        for i in 0..N_DTNS {
+            assert_eq!(t.link(i, i), 0.0);
+            for j in 0..N_DTNS {
+                assert_eq!(t.link(i, j), t.link(j, i));
+                if i != j {
+                    let gbps = t.link(i, j) * 8.0 / 1e9;
+                    assert!((6.0..=40.5).contains(&gbps), "link {i}-{j}: {gbps} Gbps");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conditions_scale_bandwidth() {
+        let wan = [25.0, 18.0, 0.568, 2.3, 1.2, 22.0];
+        let best = Topology::vdc(NetCondition::Best, &wan);
+        let med = Topology::vdc(NetCondition::Medium, &wan);
+        let worst = Topology::vdc(NetCondition::Worst, &wan);
+        assert!((med.link(0, 1) / best.link(0, 1) - 0.5).abs() < 1e-9);
+        assert!((worst.link(0, 1) / best.link(0, 1) - 0.01).abs() < 1e-9);
+        assert!((worst.wan(1) / best.wan(1) - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wan_is_much_slower_than_dmz() {
+        let t = Topology::vdc(NetCondition::Best, &[25.0, 18.0, 0.568, 2.3, 1.2, 22.0]);
+        for dtn in 1..N_DTNS {
+            assert!(t.wan(dtn) < t.link(SERVER, dtn) / 100.0);
+        }
+        // Asia (DTN 3) gets the paper's 0.568 Mbps.
+        assert!((t.wan(3) - 0.568e6 / 8.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn link_ids_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..N_DTNS {
+            for j in 0..N_DTNS {
+                assert!(seen.insert(Topology::link_id(i, j)));
+            }
+        }
+        assert!(seen.len() <= Topology::n_links());
+    }
+}

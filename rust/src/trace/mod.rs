@@ -1,0 +1,330 @@
+//! Observatory access-trace model (paper §III).
+//!
+//! The paper analyzes proprietary OOI and GAGE logs; we reproduce their
+//! *distributional* structure with synthetic, seeded generators (see
+//! DESIGN.md §2).  A [`Trace`] carries the full ground truth — streams,
+//! sites, users and a time-ordered request list — which both the
+//! analysis experiments (§III tables/figures) and the simulator consume.
+
+pub mod classifier;
+pub mod generator;
+pub mod presets;
+
+use crate::util::rng::Rng;
+
+/// Identifier of a data stream (one instrument at one site).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StreamId(pub u32);
+
+/// Identifier of an instrument site (geographic location).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SiteId(pub u32);
+
+/// Identifier of a user.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct UserId(pub u32);
+
+/// Continents used for user distribution and DTN mapping (Fig. 2);
+/// Antarctica is excluded, as in the paper's simulator (§V-A4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Continent {
+    NorthAmerica,
+    Europe,
+    Asia,
+    SouthAmerica,
+    Africa,
+    Oceania,
+}
+
+impl Continent {
+    pub const ALL: [Continent; 6] = [
+        Continent::NorthAmerica,
+        Continent::Europe,
+        Continent::Asia,
+        Continent::SouthAmerica,
+        Continent::Africa,
+        Continent::Oceania,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Continent::NorthAmerica => "North America",
+            Continent::Europe => "Europe",
+            Continent::Asia => "Asia",
+            Continent::SouthAmerica => "South America",
+            Continent::Africa => "Africa",
+            Continent::Oceania => "Oceania",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        Continent::ALL.iter().position(|c| c == self).unwrap()
+    }
+
+    /// Client DTN hosting this continent's users (server DTN is node 0).
+    pub fn dtn(&self) -> usize {
+        self.index() + 1
+    }
+
+    /// Nominal continent center in the synthetic 2D geography.
+    pub fn center(&self) -> (f64, f64) {
+        match self {
+            Continent::NorthAmerica => (-100.0, 45.0),
+            Continent::Europe => (15.0, 50.0),
+            Continent::Asia => (95.0, 35.0),
+            Continent::SouthAmerica => (-60.0, -15.0),
+            Continent::Africa => (20.0, 5.0),
+            Continent::Oceania => (140.0, -25.0),
+        }
+    }
+}
+
+/// Observation time range of a request `[start, end)` in seconds since
+/// trace epoch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimeRange {
+    pub start: f64,
+    pub end: f64,
+}
+
+impl TimeRange {
+    pub fn new(start: f64, end: f64) -> Self {
+        debug_assert!(end >= start, "invalid range [{start}, {end})");
+        Self { start, end }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+
+    /// Overlap duration with another range.
+    pub fn overlap(&self, other: &TimeRange) -> f64 {
+        (self.end.min(other.end) - self.start.max(other.start)).max(0.0)
+    }
+}
+
+/// One instrument site with a synthetic 2D location.
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub id: SiteId,
+    pub x: f64,
+    pub y: f64,
+}
+
+/// One data stream: an instrument type deployed at a site, producing
+/// bytes at a constant observation-time rate.
+#[derive(Debug, Clone)]
+pub struct Stream {
+    pub id: StreamId,
+    pub site: SiteId,
+    pub instrument_type: u32,
+    /// Bytes produced per second of observation time.
+    pub byte_rate: f64,
+}
+
+/// Ground-truth behavioural class used by the generator; the classifier
+/// must *recover* this from the request stream alone (§III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UserKind {
+    Human,
+    ProgramRegular,
+    ProgramRealtime,
+    ProgramOverlapping,
+}
+
+impl UserKind {
+    pub fn is_program(&self) -> bool {
+        !matches!(self, UserKind::Human)
+    }
+}
+
+/// A user of the observatory.
+#[derive(Debug, Clone)]
+pub struct User {
+    pub id: UserId,
+    pub continent: Continent,
+    /// Institutional location in the synthetic geography.
+    pub x: f64,
+    pub y: f64,
+    /// Ground-truth behaviour class (generator-internal; the pipeline
+    /// itself only sees requests).
+    pub kind: UserKind,
+}
+
+impl User {
+    /// Client DTN this user accesses the framework through.
+    pub fn dtn(&self) -> usize {
+        self.continent.dtn()
+    }
+}
+
+/// One access request: "user `user` at wall time `ts` asked for stream
+/// `stream` over observation range `range`" (paper eq. 1 tuple).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub user: UserId,
+    /// Wall-clock submission time, seconds since trace epoch.
+    pub ts: f64,
+    pub stream: StreamId,
+    pub range: TimeRange,
+}
+
+impl Request {
+    /// Bytes this request transfers if served in full.
+    pub fn bytes(&self, streams: &[Stream]) -> f64 {
+        self.range.duration() * streams[self.stream.0 as usize].byte_rate
+    }
+}
+
+/// A complete access trace plus the observatory ground truth.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub observatory: String,
+    pub duration: f64,
+    /// Observation-time chunk size used by the cache layer (seconds).
+    pub chunk_secs: f64,
+    pub sites: Vec<Site>,
+    pub streams: Vec<Stream>,
+    pub users: Vec<User>,
+    /// Requests sorted by submission time.
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn stream(&self, id: StreamId) -> &Stream {
+        &self.streams[id.0 as usize]
+    }
+
+    pub fn user(&self, id: UserId) -> &User {
+        &self.users[id.0 as usize]
+    }
+
+    pub fn site(&self, id: SiteId) -> &Site {
+        &self.sites[id.0 as usize]
+    }
+
+    /// Total bytes transferred if every request is served in full from
+    /// the origin (the paper's "No Cache" data volume).
+    pub fn total_bytes(&self) -> f64 {
+        self.requests.iter().map(|r| r.bytes(&self.streams)).sum()
+    }
+
+    /// Verify the invariants the simulator relies on. Panics on violation.
+    pub fn validate(&self) {
+        let mut last_ts = f64::NEG_INFINITY;
+        for (i, r) in self.requests.iter().enumerate() {
+            assert!(r.ts >= last_ts, "requests not time-sorted at {i}");
+            last_ts = r.ts;
+            assert!((r.user.0 as usize) < self.users.len(), "bad user at {i}");
+            assert!(
+                (r.stream.0 as usize) < self.streams.len(),
+                "bad stream at {i}"
+            );
+            assert!(r.range.duration() > 0.0, "empty range at {i}");
+            assert!(r.ts <= self.duration * 1.001, "request beyond duration at {i}");
+        }
+        for s in &self.streams {
+            assert!((s.site.0 as usize) < self.sites.len());
+            assert!(s.byte_rate > 0.0);
+        }
+    }
+
+    /// Rescale request traffic in time: `factor` > 1 compresses the trace
+    /// (heavier traffic), < 1 expands it (lighter traffic) — §V-A3.
+    ///
+    /// The whole timeline (submission times *and* observation ranges)
+    /// compresses together, and stream byte rates scale up by `factor`
+    /// so every request still transfers the same bytes — the observatory
+    /// sees `factor ×` the requests (and bytes) per unit time, exactly
+    /// the paper's "compress one month into one week".
+    pub fn with_traffic_factor(&self, factor: f64) -> Trace {
+        let mut t = self.clone();
+        for r in &mut t.requests {
+            r.ts /= factor;
+            r.range.start /= factor;
+            r.range.end /= factor;
+        }
+        for s in &mut t.streams {
+            s.byte_rate *= factor;
+        }
+        t.chunk_secs = self.chunk_secs / factor;
+        t.duration = self.duration / factor;
+        t
+    }
+
+    /// Deterministically subsample users (keeps request ordering).
+    pub fn subsample_users(&self, keep_frac: f64, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let keep: Vec<bool> = (0..self.users.len())
+            .map(|_| rng.chance(keep_frac))
+            .collect();
+        let mut t = self.clone();
+        t.requests.retain(|r| keep[r.user.0 as usize]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_range_overlap() {
+        let a = TimeRange::new(0.0, 10.0);
+        let b = TimeRange::new(5.0, 15.0);
+        assert_eq!(a.overlap(&b), 5.0);
+        assert_eq!(b.overlap(&a), 5.0);
+        let c = TimeRange::new(20.0, 30.0);
+        assert_eq!(a.overlap(&c), 0.0);
+        assert_eq!(a.duration(), 10.0);
+    }
+
+    #[test]
+    fn continent_dtn_mapping() {
+        assert_eq!(Continent::NorthAmerica.dtn(), 1);
+        assert_eq!(Continent::Oceania.dtn(), 6);
+        // All six DTNs distinct.
+        let mut dtns: Vec<usize> = Continent::ALL.iter().map(|c| c.dtn()).collect();
+        dtns.sort_unstable();
+        dtns.dedup();
+        assert_eq!(dtns.len(), 6);
+    }
+
+    #[test]
+    fn request_bytes_uses_stream_rate() {
+        let streams = vec![Stream {
+            id: StreamId(0),
+            site: SiteId(0),
+            instrument_type: 0,
+            byte_rate: 100.0,
+        }];
+        let r = Request {
+            user: UserId(0),
+            ts: 0.0,
+            stream: StreamId(0),
+            range: TimeRange::new(0.0, 60.0),
+        };
+        assert_eq!(r.bytes(&streams), 6000.0);
+    }
+
+    #[test]
+    fn traffic_factor_compresses() {
+        let t = Trace {
+            observatory: "t".into(),
+            duration: 100.0,
+            chunk_secs: 10.0,
+            sites: vec![],
+            streams: vec![],
+            users: vec![],
+            requests: vec![Request {
+                user: UserId(0),
+                ts: 50.0,
+                stream: StreamId(0),
+                range: TimeRange::new(0.0, 1.0),
+            }],
+        };
+        let heavy = t.with_traffic_factor(4.0);
+        assert_eq!(heavy.duration, 25.0);
+        assert_eq!(heavy.requests[0].ts, 12.5);
+    }
+}

@@ -1,0 +1,197 @@
+//! Micro-benchmark harness (criterion is not in the vendored crate set).
+//!
+//! `cargo bench` targets are plain binaries (`harness = false`) that use
+//! this module: warmup, calibrated iteration counts, and mean/p50/p95
+//! wall-clock reporting in a criterion-like format.  Results can also be
+//! written as JSON for the §Perf before/after log in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        let fmt = |ns: f64| -> String {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} µs", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        };
+        let mut line = format!(
+            "{:<44} time: [{} {} {}]",
+            self.name,
+            fmt(self.p50_ns),
+            fmt(self.mean_ns),
+            fmt(self.p95_ns)
+        );
+        if let Some((v, unit)) = self.throughput {
+            line.push_str(&format!("  thrpt: {v:.2} {unit}"));
+        }
+        line
+    }
+}
+
+/// Benchmark runner with criterion-like calibration.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // `cargo bench -- --quick` shrinks the windows.
+        let quick = std::env::args().any(|a| a == "--quick");
+        Self {
+            warmup: if quick {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            measure: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_millis(1500)
+            },
+            min_samples: 10,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run a closure repeatedly and record stats. The closure should
+    /// return something to defeat dead-code elimination.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup + per-iteration estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 3 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let est_ns = (warm_start.elapsed().as_nanos() as f64 / warm_iters as f64).max(1.0);
+        // Batch so each sample is ≥ ~100 µs to amortize timer overhead.
+        let batch = ((100_000.0 / est_ns).ceil() as u64).max(1);
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure || samples.len() < self.min_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters: batch * samples.len() as u64,
+            mean_ns: stats::mean(&samples),
+            p50_ns: stats::percentile(&samples, 0.5),
+            p95_ns: stats::percentile(&samples, 0.95),
+            throughput: None,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Like [`bench`] but annotates with elements/second throughput.
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        elems: f64,
+        unit: &'static str,
+        f: impl FnMut() -> T,
+    ) {
+        self.bench(name, f);
+        let m = self.results.last_mut().unwrap();
+        let per_sec = elems / (m.mean_ns / 1e9);
+        m.throughput = Some((per_sec, unit));
+        println!("{:<44} thrpt: {:.3e} {}/s", "", per_sec, unit);
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// JSON dump for the §Perf log.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let arr = self
+            .results
+            .iter()
+            .map(|m| {
+                let mut o = BTreeMap::new();
+                o.insert("name".into(), Json::Str(m.name.clone()));
+                o.insert("mean_ns".into(), Json::Num(m.mean_ns));
+                o.insert("p50_ns".into(), Json::Num(m.p50_ns));
+                o.insert("p95_ns".into(), Json::Num(m.p95_ns));
+                o.insert("iters".into(), Json::Num(m.iters as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        Json::Arr(arr).to_string_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_samples: 3,
+            results: Vec::new(),
+        };
+        let m = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters > 0);
+    }
+
+    #[test]
+    fn json_output_parses() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(2),
+            measure: Duration::from_millis(5),
+            min_samples: 2,
+            results: Vec::new(),
+        };
+        b.bench("x", || 1 + 1);
+        let parsed = crate::util::json::Json::parse(&b.to_json()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
+    }
+}

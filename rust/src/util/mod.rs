@@ -1,0 +1,54 @@
+//! Shared utilities: deterministic RNG, JSON, statistics, tables,
+//! micro-benchmarking, and property-testing support.
+//!
+//! These exist because the offline vendored crate set ships only the
+//! `xla` stack; everything else the framework needs is implemented here
+//! from scratch (see DESIGN.md §2 Substitutions).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Bytes-per-second → Mbps.
+pub fn bytes_per_sec_to_mbps(bps: f64) -> f64 {
+    bps * 8.0 / 1e6
+}
+
+/// Gbps → bytes per second.
+pub fn gbps_to_bytes_per_sec(gbps: f64) -> f64 {
+    gbps * 1e9 / 8.0
+}
+
+/// Human-readable byte size.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{:.2} {}", v, UNITS[u])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions_roundtrip() {
+        let bps = gbps_to_bytes_per_sec(10.0);
+        assert_eq!(bps, 1.25e9);
+        assert!((bytes_per_sec_to_mbps(bps) - 10_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512.00 B");
+        assert_eq!(fmt_bytes(1024.0 * 1024.0), "1.00 MB");
+        assert_eq!(fmt_bytes(1.5 * 1024.0f64.powi(4)), "1.50 TB");
+    }
+}

