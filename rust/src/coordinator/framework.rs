@@ -78,14 +78,25 @@ impl Default for SimConfig {
     }
 }
 
-/// Discrete events of the coordinator loop (transfer completions are
-/// queried from the fluid-flow simulator, not queued).
+/// Discrete events of the coordinator loop (transfer completions come
+/// from the fluid-flow simulator's indexed completion heap, not this
+/// queue).
 enum Event {
     PrefetchFire(Prediction),
     StreamPush { user: UserId, stream: StreamId },
     ServiceDone { task: usize },
     Rebuild,
     Recluster,
+}
+
+/// One step popped off the unified event spine: the three time sources
+/// (sorted trace arrivals, queued events, indexed flow completions)
+/// merged under `f64::total_cmp`.  Ties resolve completion ≤ event ≤
+/// arrival, matching the historical loop so runs stay reproducible.
+enum Step {
+    Completion(FlowId),
+    Queued(Event),
+    Arrival(usize),
 }
 
 /// Why a flow is in the air.
@@ -266,40 +277,78 @@ impl<'t> Framework<'t> {
             }
         }
 
-        // Main DES loop: three-way merge of (sorted arrivals, dynamic
-        // event queue, flow completions).
+        // Main DES loop: the unified event spine pops the earliest of
+        // (sorted arrivals, dynamic event queue, indexed completions).
         let horizon = self.trace.duration + 7.0 * 86_400.0;
-        loop {
-            let t_arr = self
-                .trace
-                .requests
-                .get(self.next_arrival)
-                .map(|r| r.ts)
-                .unwrap_or(f64::INFINITY);
-            let t_event = self.events.peek_time().unwrap_or(f64::INFINITY);
-            let t_flow = self.flows.next_completion();
-            let t_fl = t_flow.map(|(t, _)| t).unwrap_or(f64::INFINITY);
-
-            if t_arr.is_infinite() && t_event.is_infinite() && t_fl.is_infinite() {
-                break;
+        while let Some((t, step)) = self.next_step() {
+            self.now = t.max(self.now);
+            match step {
+                Step::Completion(fid) => self.on_flow_complete(fid),
+                Step::Queued(ev) => self.on_event(ev),
+                Step::Arrival(i) => {
+                    self.on_arrival(i);
+                    self.drain_arrival_burst(t);
+                }
             }
-            if t_fl <= t_arr && t_fl <= t_event {
-                let (tf, fid) = t_flow.unwrap();
-                self.now = tf.max(self.now);
-                self.on_flow_complete(fid);
-            } else if t_event <= t_arr {
-                let (t, ev) = self.events.pop().unwrap();
-                self.now = t.max(self.now);
-                self.on_event(ev);
-            } else {
-                let i = self.next_arrival;
-                self.next_arrival += 1;
-                self.now = t_arr.max(self.now);
-                self.on_arrival(i);
-            }
+            self.metrics.peak_flows = self.metrics.peak_flows.max(self.flows.active() as u64);
             if self.now > horizon {
                 break; // safety: runaway schedules
             }
+        }
+    }
+
+    /// Pop the earliest pending step off the unified spine, merging the
+    /// three time sources with `f64::total_cmp`.  Returns `None` when
+    /// the simulation has fully drained (no arrival, no queued event,
+    /// and no flow that can ever finish).
+    fn next_step(&mut self) -> Option<(f64, Step)> {
+        let t_arr = self
+            .trace
+            .requests
+            .get(self.next_arrival)
+            .map(|r| r.ts)
+            .unwrap_or(f64::INFINITY);
+        let t_event = self.events.peek_time().unwrap_or(f64::INFINITY);
+        let flow = self.flows.next_completion();
+        let t_flow = flow.map(|(t, _)| t).unwrap_or(f64::INFINITY);
+
+        if t_arr.is_infinite() && t_event.is_infinite() && t_flow.is_infinite() {
+            return None;
+        }
+        // Tie order: completion, then queued event, then arrival.
+        if t_flow.total_cmp(&t_arr).is_le() && t_flow.total_cmp(&t_event).is_le() {
+            let (t, fid) = flow.unwrap();
+            Some((t, Step::Completion(fid)))
+        } else if t_event.total_cmp(&t_arr).is_le() {
+            let (t, ev) = self.events.pop().unwrap();
+            Some((t, Step::Queued(ev)))
+        } else {
+            let i = self.next_arrival;
+            self.next_arrival += 1;
+            Some((t_arr, Step::Arrival(i)))
+        }
+    }
+
+    /// Drain the remaining arrivals that share timestamp `t` so their
+    /// per-link fair-share replans batch into a single settle/replan in
+    /// the flow simulator, instead of one per arrival.  The burst stops
+    /// as soon as a queued event is due at `t` (events outrank arrivals
+    /// on ties); new flows started by the burst cannot complete before
+    /// `t`, so completion ordering is unaffected.
+    fn drain_arrival_burst(&mut self, t: f64) {
+        loop {
+            match self.trace.requests.get(self.next_arrival) {
+                Some(r) if r.ts == t => {}
+                _ => break,
+            }
+            if let Some(te) = self.events.peek_time() {
+                if te <= t {
+                    break;
+                }
+            }
+            let i = self.next_arrival;
+            self.next_arrival += 1;
+            self.on_arrival(i);
         }
     }
 

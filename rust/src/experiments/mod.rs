@@ -61,6 +61,10 @@ impl ExpOptions {
 /// All experiment ids, in paper order, plus the `policies` extension
 /// (the paper defers advanced eviction models to future work; we ship
 /// FIFO / SIZE / GDSF alongside LRU and LFU and compare all five).
+/// The `traffic` stress sweep (heavy preset, 10-100× concurrency) is
+/// deliberately *not* in this list: `all` and the experiments bench
+/// iterate it, and the sweep's cost would dominate a paper-figures
+/// run — invoke it explicitly with `--id traffic`.
 pub const ALL_IDS: [&str; 15] = [
     "fig2", "table1", "table2", "fig3", "fig4", "fig9", "fig10", "fig11", "fig12", "table3",
     "fig13", "table4", "table5", "headline", "policies",
@@ -74,7 +78,7 @@ pub fn cache_grid(observatory: &str) -> Vec<(&'static str, u64)> {
     match observatory.to_ascii_lowercase().as_str() {
         "ooi" => vec![
             ("128GB", 256 * MB),
-            ("256GB", 1 * GB),
+            ("256GB", GB),
             ("512GB", 4 * GB),
             ("1TB", 16 * GB),
             ("10TB", 384 * GB),
@@ -126,6 +130,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Result<String> {
         "table4" => table4(opts),
         "table5" => table5(opts),
         "headline" => headline(opts),
+        "traffic" => traffic_sweep(opts),
         "policies" => policies(opts),
         "all" => {
             let mut out = String::new();
@@ -522,6 +527,63 @@ fn headline(opts: &ExpOptions) -> Result<String> {
     Ok(t.render())
 }
 
+/// Extension: scheduler stress sweep.  The `heavy` preset (10× users)
+/// crossed with `traffic_factor` compressions exercises 10-100× the
+/// seed traces' concurrent-flow population, the regime where the
+/// pre-index linear completion scan made the event loop O(n²).
+/// Reports peak in-flight transfers and wall-clock alongside the
+/// delivery metrics, so scheduler regressions show up as wall-clock
+/// blowups rather than silent slowdowns (EXPERIMENTS.md §Perf).
+fn traffic_sweep(opts: &ExpOptions) -> Result<String> {
+    let trace = build_trace("heavy", opts)?;
+    let mut t = Table::new("Traffic sweep — heavy preset, concurrent-flow scaling (LRU)")
+        .header(&[
+            "Traffic ×",
+            "Strategy",
+            "Requests",
+            "Peak flows",
+            "Thrpt (Mbps)",
+            "Origin frac",
+            "Wall (s)",
+        ]);
+    let mut csv = String::from(
+        "traffic_factor,strategy,requests,peak_flows,thrpt_mbps,origin_frac,wall_secs\n",
+    );
+    for tf in [1.0, 10.0, 100.0] {
+        for strat in [Strategy::CacheOnly, Strategy::Hpm] {
+            let cfg = SimConfig {
+                strategy: strat,
+                policy: PolicyKind::Lru,
+                cache_bytes: 8 << 30,
+                traffic_factor: tf,
+                ..Default::default()
+            };
+            let m = run(&trace, &cfg);
+            t.row(vec![
+                format!("{tf:.0}"),
+                strat.name().to_string(),
+                format!("{}", m.requests_total),
+                format!("{}", m.peak_flows),
+                format!("{:.2}", m.throughput_mbps()),
+                format!("{:.4}", m.origin_fraction()),
+                format!("{:.2}", m.wall_secs),
+            ]);
+            let _ = writeln!(
+                csv,
+                "{tf},{},{},{},{:.3},{:.4},{:.3}",
+                strat.name(),
+                m.requests_total,
+                m.peak_flows,
+                m.throughput_mbps(),
+                m.origin_fraction(),
+                m.wall_secs
+            );
+        }
+    }
+    write_csv(opts, "traffic.csv", &csv)?;
+    Ok(t.render())
+}
+
 /// Extension: all five eviction policies at the smallest cache size
 /// (the paper compares only LRU/LFU and defers the rest, §V-B1).
 fn policies(opts: &ExpOptions) -> Result<String> {
@@ -607,5 +669,20 @@ mod tests {
         let out = run_experiment("headline", &tiny_opts()).unwrap();
         assert!(out.contains("OOI"));
         assert!(out.contains("GAGE"));
+    }
+
+    #[test]
+    fn traffic_sweep_runs_small() {
+        // Tiny slice of the heavy preset: enough to exercise the sweep
+        // without stressing CI wall-clock.
+        let opts = ExpOptions {
+            scale: 0.02,
+            days_factor: 0.5,
+            out_dir: None,
+            seed: None,
+        };
+        let out = run_experiment("traffic", &opts).unwrap();
+        assert!(out.contains("Traffic sweep"));
+        assert!(out.contains("100"));
     }
 }

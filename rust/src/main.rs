@@ -27,7 +27,7 @@ const USAGE: &str = "\
 repro — push-based data delivery framework (Qin et al. 2020 reproduction)
 
 USAGE:
-  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|all>
+  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|policies|all>
                    [--scale F] [--days F] [--out DIR] [--quick] [--seed N]
   repro analyze [--scale F]
   repro simulate --observatory <ooi|gage> [--strategy S] [--policy P]
@@ -143,7 +143,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         .get("observatory")
         .context("--observatory is required")?;
     let mut preset = presets::by_name(obs)
-        .with_context(|| format!("unknown observatory '{obs}' (ooi|gage|tiny)"))?;
+        .with_context(|| format!("unknown observatory '{obs}' (ooi|gage|heavy|tiny)"))?;
     preset.scale *= get_f64(flags, "scale", 1.0)?;
     if let Some(seed) = flags.get("seed") {
         preset.seed = seed.parse().context("--seed must be an integer")?;

@@ -56,6 +56,9 @@ pub struct RunMetrics {
     pub sum_elapsed: f64,
     /// Pre-fetch recall (set at end of run from the cache network).
     pub recall: f64,
+    /// Peak concurrent transfers in flight (scheduler load indicator;
+    /// the traffic-sweep experiment reports it alongside wall-clock).
+    pub peak_flows: u64,
     /// Wall-clock spent in the run (for the §Perf log).
     pub wall_secs: f64,
 }

@@ -2,9 +2,15 @@
 //!
 //! [`EventQueue`] is a time-ordered priority queue with FIFO tie-break
 //! (stable ordering makes simulations reproducible).  The coordinator's
-//! main loop merges this queue with [`FlowSim::next_completion`]
+//! unified event spine merges this queue with the indexed
+//! [`FlowSim::next_completion`] under `f64::total_cmp` ordering
 //! (transfer completions are dynamic — fair-share rates change as flows
-//! churn — so they are queried, not queued).
+//! churn — so they live in the flow simulator's own completion index,
+//! not here).
+//!
+//! Event times must be finite: [`EventQueue::push`] rejects NaN and
+//! ±∞ in release builds too, because a single NaN key would silently
+//! corrupt heap ordering for every later event.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -17,7 +23,7 @@ struct Item<T> {
 
 impl<T> PartialEq for Item<T> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.cmp(other) == Ordering::Equal
     }
 }
 
@@ -31,11 +37,13 @@ impl<T> PartialOrd for Item<T> {
 
 impl<T> Ord for Item<T> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for min-heap on (time, seq).
+        // Reverse for min-heap on (time, seq).  `total_cmp` is a total
+        // order over all f64 bit patterns — the old
+        // `partial_cmp(..).unwrap_or(Equal)` silently treated NaN as
+        // equal to everything, breaking heap invariants.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -69,8 +77,13 @@ impl<T> EventQueue<T> {
     }
 
     /// Schedule `payload` at absolute time `time`.
+    ///
+    /// # Panics
+    /// Panics (in release builds too) when `time` is NaN or infinite:
+    /// a non-finite key would poison the ordering of every later event,
+    /// which is far harder to debug than an immediate failure.
     pub fn push(&mut self, time: f64, payload: T) {
-        debug_assert!(time.is_finite(), "non-finite event time");
+        assert!(time.is_finite(), "non-finite event time: {time}");
         self.heap.push(Item {
             time,
             seq: self.seq,
@@ -125,6 +138,20 @@ mod tests {
         assert_eq!(q.peek_time(), Some(2.0));
         q.pop();
         assert_eq!(q.peek_time(), Some(5.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn rejects_infinite_time() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, ());
     }
 
     #[test]

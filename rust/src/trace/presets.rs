@@ -240,6 +240,25 @@ pub fn gage() -> PresetConfig {
     }
 }
 
+/// Heavy-load preset for scheduler stress runs: an OOI-like mix with a
+/// 10× user population over a short window, so thousands of transfers
+/// are in flight concurrently.  Combined with
+/// `SimConfig::traffic_factor` sweeps (the `traffic` experiment) it
+/// exercises 10-100× the concurrent-flow population of the seed
+/// traces — the regime where the pre-index O(n) completion scan made
+/// the event loop quadratic.
+pub fn heavy() -> PresetConfig {
+    let mut p = ooi();
+    p.name = "HEAVY";
+    p.duration_days = 2.0;
+    p.n_users = 4200;
+    p.n_sites = 96;
+    p.n_instrument_types = 32;
+    p.n_topics = 24;
+    p.seed = 0x4EA7_11;
+    p
+}
+
 /// Tiny preset for unit/integration tests: a few users, one day.
 pub fn tiny() -> PresetConfig {
     let mut p = ooi();
@@ -259,6 +278,7 @@ pub fn by_name(name: &str) -> Option<PresetConfig> {
     match name.to_ascii_lowercase().as_str() {
         "ooi" => Some(ooi()),
         "gage" => Some(gage()),
+        "heavy" => Some(heavy()),
         "tiny" => Some(tiny()),
         _ => None,
     }
@@ -326,7 +346,21 @@ mod tests {
     fn by_name_lookup() {
         assert!(by_name("OOI").is_some());
         assert!(by_name("gage").is_some());
+        assert!(by_name("heavy").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn heavy_preset_scales_population() {
+        let (hu, r, t, o) = heavy().user_counts();
+        let (ohu, or, ot, oo) = ooi().user_counts();
+        assert!(
+            hu + r + t + o >= 8 * (ohu + or + ot + oo),
+            "heavy should be ≥8× OOI's population"
+        );
+        // Shares still match the published OOI mixes.
+        let sum: f64 = heavy().continents.iter().map(|c| c.user_frac).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,158 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this vendored shim
+//! implements exactly the subset the workspace uses: [`Error`] with a
+//! context chain, the [`Result`] alias, the [`Context`] extension
+//! trait for `Result` and `Option`, and the [`anyhow!`] / [`bail!`]
+//! macros.  Like the real crate, `{:#}` formatting prints the whole
+//! context chain joined with `": "`, while `{}` prints only the
+//! outermost message.
+
+use std::fmt;
+
+/// Error with a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Prepend a context message (what `.context()` attaches).
+    fn wrap(mut self, context: String) -> Error {
+        self.chain.insert(0, context);
+        self
+    }
+
+    /// Iterate the context chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirror anyhow: Debug shows the full chain.
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+// The same coherence trick as the real crate: `Error` deliberately does
+// NOT implement `std::error::Error`, which keeps this blanket impl from
+// overlapping with `impl<T> From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` defaulting to [`Error`], as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failing `Result`s and empty `Option`s.
+pub trait Context<T> {
+    /// Wrap the error (or absent value) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Like [`Context::context`], with the message built lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "inner 42");
+        assert_eq!(format!("{e:#}"), "inner 42");
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "inner 42"]);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn from_std_error_keeps_sources() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "disk on fire");
+        let e: Error = io.into();
+        assert!(format!("{e:#}").contains("disk on fire"));
+    }
+}
