@@ -31,7 +31,7 @@ use crate::prefetch::mesh::MeshModel;
 use crate::prefetch::streaming::StreamRegistry;
 use crate::prefetch::{Action, Prediction, PrefetchModel, Strategy};
 use crate::simnet::topology::NetCondition;
-use crate::simnet::{EventQueue, FlowId, FlowSim, Pipe, Topology, SERVER};
+use crate::simnet::{EventQueue, FlowId, FlowSim, Pipe, Topology, TopologyKind, SERVER};
 use crate::trace::{StreamId, Trace, UserId};
 
 /// Full configuration of one simulation run.
@@ -42,6 +42,10 @@ pub struct SimConfig {
     /// Per-client-DTN cache capacity in bytes.
     pub cache_bytes: u64,
     pub net: NetCondition,
+    /// Network deployment the run rides on; the VDC star is the
+    /// single-hop degenerate case, hierarchical/federation presets
+    /// route transfers over shared interior links.
+    pub topology: TopologyKind,
     /// 1.0 = regular, 4.0 = heavy (month→week), 0.5 = low (§V-A3).
     pub traffic_factor: f64,
     /// Data placement strategy on/off (Table IV ablation).
@@ -66,6 +70,7 @@ impl Default for SimConfig {
             policy: PolicyKind::Lru,
             cache_bytes: 128 << 30,
             net: NetCondition::Best,
+            topology: TopologyKind::VdcStar,
             traffic_factor: 1.0,
             placement: true,
             rebuild_every: 6.0 * 3600.0,
@@ -201,10 +206,12 @@ pub fn run_with_backends(
         trace
     };
     let wan: [f64; 6] = continent_wan(trace);
+    let topology = cfg.topology.build(cfg.net, &wan);
+    let n_nodes = topology.n_nodes();
     let mut fw = Framework {
-        topology: Topology::vdc(cfg.net, &wan),
+        topology,
         caches: CacheNetwork::new(
-            crate::simnet::topology::N_DTNS,
+            n_nodes,
             if cfg.strategy.uses_cache() { cfg.cache_bytes } else { 0 },
             cfg.policy,
         ),
@@ -231,6 +238,25 @@ pub fn run_with_backends(
     fw.run_loop();
     let mut metrics = fw.metrics;
     metrics.recall = fw.caches.total_recall();
+    // Interior-link accounting (tiered topologies): bytes carried per
+    // labeled link over the simulated window.
+    let window = fw.now.max(trace.duration);
+    for tl in fw.topology.tier_links() {
+        let link = fw.topology.link_id(tl.from, tl.to);
+        let carried = fw.flows.link_bytes().get(&link).copied().unwrap_or(0.0);
+        let cap = fw.topology.link(tl.from, tl.to);
+        metrics.interior_util.push(crate::metrics::TierUtil {
+            tier: tl.tier,
+            from: tl.from,
+            to: tl.to,
+            carried_bytes: carried,
+            utilization: if cap > 0.0 && window > 0.0 {
+                carried / (cap * window)
+            } else {
+                0.0
+            },
+        });
+    }
     metrics.wall_secs = wall_start.elapsed().as_secs_f64();
     metrics
 }
@@ -465,18 +491,20 @@ impl<'t> Framework<'t> {
                 self.metrics.cache_bytes += per_chunk;
                 continue;
             }
-            // Peer lookup: best-connected peer; the virtual group's hub
-            // wins ties (it concentrates the group's hot data, so
-            // preferring it keeps its cache warm), but a faster peer is
-            // never passed over for a slower hub.
+            // Peer lookup: best-connected peer by routed-path
+            // bottleneck bandwidth; the virtual group's hub wins ties
+            // (it concentrates the group's hot data, so preferring it
+            // keeps its cache warm), but a faster peer is never passed
+            // over for a slower hub.  `total_cmp` keeps the ordering
+            // total (crate-wide f64 ordering policy; `partial_cmp`
+            // would panic on a NaN capacity).
             let peers = self.caches.peers_with(user_dtn, &key);
             let peer = peers
                 .into_iter()
                 .max_by(|&a, &b| {
-                    let la = self.topology.link(a, user_dtn);
-                    let lb = self.topology.link(b, user_dtn);
-                    la.partial_cmp(&lb)
-                        .unwrap()
+                    let la = self.topology.path_bw(a, user_dtn);
+                    let lb = self.topology.path_bw(b, user_dtn);
+                    la.total_cmp(&lb)
                         .then_with(|| (Some(a) == hub).cmp(&(Some(b) == hub)))
                         .then(b.cmp(&a)) // deterministic tie-break
                 });
@@ -494,14 +522,8 @@ impl<'t> Framework<'t> {
             let part_bytes = per_chunk * keys.len() as f64;
             self.req_states[i].any_peer = true;
             self.metrics.cache_bytes += part_bytes;
-            let fid = self.flows.start(
-                self.now,
-                part_bytes,
-                Pipe::Link {
-                    id: Topology::link_id(peer, user_dtn),
-                    capacity: self.topology.link(peer, user_dtn),
-                },
-            );
+            let pipe = self.dmz_pipe(peer, user_dtn);
+            let fid = self.flows.start(self.now, part_bytes, pipe);
             self.flow_ctx.insert(
                 fid,
                 FlowCtx::Peer {
@@ -525,17 +547,32 @@ impl<'t> Framework<'t> {
         }
     }
 
-    /// Estimated peer transfer vs observatory path cost (§IV-D).
+    /// Routed DMZ pipe between two DTNs — the delivery logic is
+    /// topology-agnostic: a single hop on the VDC star, multiple
+    /// fair-shared hops through hub/federation tiers.
+    fn dmz_pipe(&self, src: usize, dst: usize) -> Pipe {
+        let route = self.topology.route(src, dst);
+        debug_assert!(!route.is_empty(), "no DMZ route {src} -> {dst}");
+        Pipe::Path(route)
+    }
+
+    /// Estimated peer transfer vs observatory path cost (§IV-D), both
+    /// over their routed-path bottleneck bandwidth.  The observatory
+    /// side prices the *configured* service parameters — per-request
+    /// overhead and pool width from [`SimConfig`] — so Table-IV-style
+    /// service ablations steer peer-vs-observatory routing instead of
+    /// silently pricing against hardcoded defaults.
     fn peer_beats_observatory(&self, peer: usize, dest: usize, bytes: f64) -> bool {
-        let peer_bw = self.topology.link(peer, dest);
+        let peer_bw = self.topology.path_bw(peer, dest);
         if peer_bw <= 0.0 {
             return false;
         }
         let t_peer = bytes / peer_bw;
-        let queue_wait = (self.obs.queue_len() as f64 / 10.0)
-            * crate::coordinator::server::SERVICE_OVERHEAD;
-        let t_obs = bytes / self.topology.link(SERVER, dest).max(1.0)
-            + crate::coordinator::server::SERVICE_OVERHEAD
+        let queue_wait = (self.obs.queue_len() as f64
+            / crate::coordinator::server::N_SERVICE_PROCESSES as f64)
+            * self.cfg.obs_overhead;
+        let t_obs = bytes / self.topology.path_bw(SERVER, dest).max(1.0)
+            + self.cfg.obs_overhead
             + queue_wait;
         t_peer < t_obs
     }
@@ -583,11 +620,8 @@ impl<'t> Framework<'t> {
             Some(dtn) => Pipe::Dedicated {
                 rate: self.topology.wan(dtn).max(1.0),
             },
-            // Framework: DMZ link to the destination DTN.
-            None => Pipe::Link {
-                id: Topology::link_id(SERVER, dest),
-                capacity: self.topology.link(SERVER, dest),
-            },
+            // Framework: routed DMZ path to the destination DTN.
+            None => self.dmz_pipe(SERVER, dest),
         };
         let fid = self.flows.start(self.now, bytes.max(1.0), pipe);
         self.flow_ctx.insert(fid, FlowCtx::Serve { req, dest, chunks });
@@ -653,14 +687,8 @@ impl<'t> Framework<'t> {
             self.inflight.insert((dest, *k));
         }
         self.metrics.origin_bytes += bytes;
-        let fid = self.flows.start(
-            self.now,
-            bytes,
-            Pipe::Link {
-                id: Topology::link_id(SERVER, dest),
-                capacity: self.topology.link(SERVER, dest),
-            },
-        );
+        let pipe = self.dmz_pipe(SERVER, dest);
+        let fid = self.flows.start(self.now, bytes, pipe);
         self.flow_ctx.insert(fid, FlowCtx::Prefetch { dest, chunks });
     }
 
@@ -691,14 +719,8 @@ impl<'t> Framework<'t> {
                 self.inflight.insert((dest, *k));
             }
             self.metrics.origin_bytes += bytes;
-            let fid = self.flows.start(
-                self.now,
-                bytes,
-                Pipe::Link {
-                    id: Topology::link_id(SERVER, dest),
-                    capacity: self.topology.link(SERVER, dest),
-                },
-            );
+            let pipe = self.dmz_pipe(SERVER, dest);
+            let fid = self.flows.start(self.now, bytes, pipe);
             self.flow_ctx.insert(fid, FlowCtx::Push { dest, chunks });
         } else {
             self.registry.coalesced += 1;
@@ -746,14 +768,8 @@ impl<'t> Framework<'t> {
                 self.placement.replicated_bytes += size as f64;
                 self.placement.replicas_placed += 1;
                 self.metrics.placement_bytes += size as f64;
-                let fid = self.flows.start(
-                    self.now,
-                    size as f64,
-                    Pipe::Link {
-                        id: Topology::link_id(from, hub),
-                        capacity: self.topology.link(from, hub),
-                    },
-                );
+                let pipe = self.dmz_pipe(from, hub);
+                let fid = self.flows.start(self.now, size as f64, pipe);
                 self.flow_ctx.insert(
                     fid,
                     FlowCtx::Replicate {
@@ -949,6 +965,53 @@ mod tests {
         let cache = run_strategy(&trace, Strategy::CacheOnly);
         assert!(cache.origin_bytes <= none.origin_bytes * 1.01);
         assert!(cache.origin_bytes > 0.0);
+    }
+
+    #[test]
+    fn tiered_topologies_complete_and_report_interior_utilization() {
+        let trace = tiny_trace();
+        for topology in [
+            TopologyKind::Hierarchical,
+            TopologyKind::Federation {
+                core_gbps: 40.0,
+                regional_gbps: 20.0,
+                edge_gbps: 10.0,
+            },
+        ] {
+            for strategy in [Strategy::CacheOnly, Strategy::Hpm] {
+                let cfg = SimConfig {
+                    strategy,
+                    cache_bytes: 4 << 30,
+                    topology,
+                    ..Default::default()
+                };
+                let m = run(&trace, &cfg);
+                assert_eq!(
+                    m.requests_total as usize,
+                    trace.requests.len(),
+                    "{} on {}: requests finalized",
+                    strategy.name(),
+                    topology.name()
+                );
+                assert!(!m.interior_util.is_empty(), "{}", topology.name());
+                let mut any_carried = false;
+                for u in &m.interior_util {
+                    assert!(
+                        (0.0..=1.0 + 1e-6).contains(&u.utilization),
+                        "{} {}->{}: utilization {}",
+                        u.tier,
+                        u.from,
+                        u.to,
+                        u.utilization
+                    );
+                    any_carried |= u.carried_bytes > 0.0;
+                }
+                assert!(any_carried, "no bytes crossed the interior");
+            }
+        }
+        // The star has no labeled interior links.
+        let m = run_strategy(&trace, Strategy::Hpm);
+        assert!(m.interior_util.is_empty());
     }
 
     #[test]

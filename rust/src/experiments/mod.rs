@@ -19,7 +19,7 @@ use crate::cache::policy::PolicyKind;
 use crate::coordinator::{run, SimConfig};
 use crate::metrics::RunMetrics;
 use crate::prefetch::Strategy;
-use crate::simnet::NetCondition;
+use crate::simnet::{NetCondition, TopologyKind};
 use crate::trace::{generator, presets, Trace};
 use crate::util::table::Table;
 
@@ -58,16 +58,18 @@ impl ExpOptions {
     }
 }
 
-/// All experiment ids, in paper order, plus the `policies` extension
+/// All experiment ids, in paper order, plus the extensions: `policies`
 /// (the paper defers advanced eviction models to future work; we ship
-/// FIFO / SIZE / GDSF alongside LRU and LFU and compare all five).
+/// FIFO / SIZE / GDSF alongside LRU and LFU and compare all five) and
+/// `federation` (OSDF-style federation tier behind the observatory
+/// DMZ, sweeping core:regional:edge bandwidth ratios).
 /// The `traffic` stress sweep (heavy preset, 10-100× concurrency) is
 /// deliberately *not* in this list: `all` and the experiments bench
 /// iterate it, and the sweep's cost would dominate a paper-figures
 /// run — invoke it explicitly with `--id traffic`.
-pub const ALL_IDS: [&str; 15] = [
+pub const ALL_IDS: [&str; 16] = [
     "fig2", "table1", "table2", "fig3", "fig4", "fig9", "fig10", "fig11", "fig12", "table3",
-    "fig13", "table4", "table5", "headline", "policies",
+    "fig13", "table4", "table5", "headline", "policies", "federation",
 ];
 
 /// Paper-labeled cache-size axis for one observatory, scaled to the
@@ -132,6 +134,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Result<String> {
         "headline" => headline(opts),
         "traffic" => traffic_sweep(opts),
         "policies" => policies(opts),
+        "federation" => federation(opts),
         "all" => {
             let mut out = String::new();
             for id in ALL_IDS {
@@ -584,6 +587,85 @@ fn traffic_sweep(opts: &ExpOptions) -> Result<String> {
     Ok(t.render())
 }
 
+/// Extension: OSDF-style federation deployment (ISSUE 2).  The
+/// federation trace is served over the routed
+/// origin → DMZ → regional-cache → edge topology while the tier
+/// bandwidth ratio core:regional:edge sweeps from an overprovisioned
+/// core to an inverted hierarchy (fat edges behind a thin core).
+/// Reports delivery metrics plus interior-link utilization per tier —
+/// the saturation signal only a multi-hop network model can produce.
+fn federation(opts: &ExpOptions) -> Result<String> {
+    let trace = build_trace("federation", opts)?;
+    // (label, core, regional, edge) in Gbps; edge access is the 20 Gbps
+    // baseline, the ratio scales the tiers above it.
+    let ratios: [(&str, f64, f64, f64); 4] = [
+        ("4:2:1", 80.0, 40.0, 20.0),
+        ("2:2:1", 40.0, 40.0, 20.0),
+        ("1:1:1", 20.0, 20.0, 20.0),
+        ("1:2:4", 20.0, 40.0, 80.0),
+    ];
+    let mut t = Table::new(
+        "Federation sweep — tier bandwidth ratios (core:regional:edge), interior-link utilization",
+    )
+    .header(&[
+        "Ratio",
+        "Strategy",
+        "Thrpt (Mbps)",
+        "Origin frac",
+        "Core util",
+        "Reg util",
+        "Core vol",
+        "Reg vol",
+        "Wall (s)",
+    ]);
+    let mut csv = String::from(
+        "ratio,strategy,thrpt_mbps,origin_frac,core_util,regional_util,core_bytes,regional_bytes,wall_secs\n",
+    );
+    for (label, core, regional, edge) in ratios {
+        for strat in [Strategy::CacheOnly, Strategy::Hpm] {
+            let cfg = SimConfig {
+                strategy: strat,
+                policy: PolicyKind::Lru,
+                cache_bytes: 8 << 30,
+                topology: TopologyKind::Federation {
+                    core_gbps: core,
+                    regional_gbps: regional,
+                    edge_gbps: edge,
+                },
+                ..Default::default()
+            };
+            let m = run(&trace, &cfg);
+            let (core_util, core_bytes) = m.tier_summary("core");
+            let (reg_util, reg_bytes) = m.tier_summary("regional");
+            t.row(vec![
+                label.to_string(),
+                strat.name().to_string(),
+                format!("{:.2}", m.throughput_mbps()),
+                format!("{:.4}", m.origin_fraction()),
+                format!("{:.4}", core_util),
+                format!("{:.4}", reg_util),
+                crate::util::fmt_bytes(core_bytes),
+                crate::util::fmt_bytes(reg_bytes),
+                format!("{:.2}", m.wall_secs),
+            ]);
+            let _ = writeln!(
+                csv,
+                "{label},{},{:.3},{:.4},{:.5},{:.5},{:.0},{:.0},{:.3}",
+                strat.name(),
+                m.throughput_mbps(),
+                m.origin_fraction(),
+                core_util,
+                reg_util,
+                core_bytes,
+                reg_bytes,
+                m.wall_secs
+            );
+        }
+    }
+    write_csv(opts, "federation.csv", &csv)?;
+    Ok(t.render())
+}
+
 /// Extension: all five eviction policies at the smallest cache size
 /// (the paper compares only LRU/LFU and defers the rest, §V-B1).
 fn policies(opts: &ExpOptions) -> Result<String> {
@@ -669,6 +751,20 @@ mod tests {
         let out = run_experiment("headline", &tiny_opts()).unwrap();
         assert!(out.contains("OOI"));
         assert!(out.contains("GAGE"));
+    }
+
+    #[test]
+    fn federation_runs_small() {
+        let opts = ExpOptions {
+            scale: 0.05,
+            days_factor: 0.3,
+            out_dir: None,
+            seed: None,
+        };
+        let out = run_experiment("federation", &opts).unwrap();
+        assert!(out.contains("Federation sweep"));
+        assert!(out.contains("1:1:1"));
+        assert!(out.contains("Core util"));
     }
 
     #[test]

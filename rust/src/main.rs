@@ -27,11 +27,12 @@ const USAGE: &str = "\
 repro — push-based data delivery framework (Qin et al. 2020 reproduction)
 
 USAGE:
-  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|policies|all>
+  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|policies|federation|all>
                    [--scale F] [--days F] [--out DIR] [--quick] [--seed N]
   repro analyze [--scale F]
-  repro simulate --observatory <ooi|gage> [--strategy S] [--policy P]
+  repro simulate --observatory <ooi|gage|heavy|federation|tiny> [--strategy S] [--policy P]
                  [--cache-gb F] [--net best|medium|worst] [--traffic F]
+                 [--topology vdc|hierarchical|federation]
                  [--no-placement] [--scale F] [--seed N]
   repro generate-trace --observatory <ooi|gage> [--scale F] [--out FILE]
   repro runtime-check [--artifacts DIR]
@@ -143,7 +144,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         .get("observatory")
         .context("--observatory is required")?;
     let mut preset = presets::by_name(obs)
-        .with_context(|| format!("unknown observatory '{obs}' (ooi|gage|heavy|tiny)"))?;
+        .with_context(|| format!("unknown observatory '{obs}' (ooi|gage|heavy|federation|tiny)"))?;
     preset.scale *= get_f64(flags, "scale", 1.0)?;
     if let Some(seed) = flags.get("seed") {
         preset.seed = seed.parse().context("--seed must be an integer")?;
@@ -160,11 +161,17 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         None => NetCondition::Best,
         Some(n) => NetCondition::parse(n).with_context(|| format!("bad --net '{n}'"))?,
     };
+    let topology = match flags.get("topology") {
+        None => obsd::simnet::TopologyKind::VdcStar,
+        Some(t) => obsd::simnet::TopologyKind::parse(t)
+            .with_context(|| format!("bad --topology '{t}' (vdc|hierarchical|federation)"))?,
+    };
     let cfg = SimConfig {
         strategy,
         policy,
         cache_bytes: (get_f64(flags, "cache-gb", 8.0)? * (1u64 << 30) as f64) as u64,
         net,
+        topology,
         traffic_factor: get_f64(flags, "traffic", 1.0)?,
         placement: !flags.contains_key("no-placement"),
         ..Default::default()
@@ -194,6 +201,16 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         p * 100.0
     );
     println!("recall              {:.4}", m.recall);
+    for u in &m.interior_util {
+        println!(
+            "interior {:<9} {}->{}  util {:.4}  carried {}",
+            u.tier,
+            u.from,
+            u.to,
+            u.utilization,
+            obsd::util::fmt_bytes(u.carried_bytes)
+        );
+    }
     println!("wall clock          {:.2} s", m.wall_secs);
     Ok(())
 }

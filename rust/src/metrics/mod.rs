@@ -23,6 +23,20 @@ pub enum ServedBy {
     Observatory,
 }
 
+/// Utilization of one labeled interior link over a run (tiered
+/// topologies only; the VDC star has no interior).
+#[derive(Debug, Clone)]
+pub struct TierUtil {
+    /// Tier label from the topology ("core", "regional", ...).
+    pub tier: &'static str,
+    pub from: usize,
+    pub to: usize,
+    /// Bytes carried over the run (all flows crossing the link).
+    pub carried_bytes: f64,
+    /// `carried / (capacity × simulated window)` ∈ [0, 1].
+    pub utilization: f64,
+}
+
 /// Aggregated metrics for one simulation run.
 #[derive(Debug, Default, Clone)]
 pub struct RunMetrics {
@@ -59,6 +73,9 @@ pub struct RunMetrics {
     /// Peak concurrent transfers in flight (scheduler load indicator;
     /// the traffic-sweep experiment reports it alongside wall-clock).
     pub peak_flows: u64,
+    /// Interior-link utilization per labeled tier link (empty on the
+    /// star; populated for hierarchical/federation topologies).
+    pub interior_util: Vec<TierUtil>,
     /// Wall-clock spent in the run (for the §Perf log).
     pub wall_secs: f64,
 }
@@ -126,6 +143,19 @@ impl RunMetrics {
             self.served_local_cache as f64 / n,
             self.served_local_prefetch as f64 / n,
         )
+    }
+
+    /// Peak directed-link utilization and total carried bytes across a
+    /// tier's interior links (the hot direction dominates downstream
+    /// delivery, so the peak is the saturation signal).
+    pub fn tier_summary(&self, tier: &str) -> (f64, f64) {
+        let mut max_util = 0.0f64;
+        let mut bytes = 0.0;
+        for u in self.interior_util.iter().filter(|u| u.tier == tier) {
+            max_util = max_util.max(u.utilization);
+            bytes += u.carried_bytes;
+        }
+        (max_util, bytes)
     }
 
     /// Network-traffic reduction at the observatory vs a no-cache run

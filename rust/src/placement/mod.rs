@@ -14,7 +14,7 @@ pub mod kmeans;
 use std::collections::HashMap;
 
 use crate::cache::network::CacheNetwork;
-use crate::simnet::{Topology, N_DTNS, SERVER};
+use crate::simnet::{Topology, SERVER};
 use crate::trace::{Trace, UserId};
 use crate::util::rng::Rng;
 use kmeans::{ClusterBackend, DIM};
@@ -194,11 +194,16 @@ pub fn select_hub(
     if candidates.is_empty() {
         return SERVER;
     }
-    // Normalizers so the three terms are comparable.
-    let max_link: f64 = (1..N_DTNS)
-        .flat_map(|i| (1..N_DTNS).map(move |j| (i, j)))
+    // Normalizers so the three terms are comparable.  Peer throughput
+    // is the routed-path bottleneck bandwidth, so hub selection stays
+    // meaningful on hierarchical topologies where client DTNs have no
+    // direct links (on the single-hop star it equals the direct link).
+    let clients: Vec<usize> = topology.client_dtns().collect();
+    let max_link: f64 = clients
+        .iter()
+        .flat_map(|&i| clients.iter().map(move |&j| (i, j)))
         .filter(|(i, j)| i != j)
-        .map(|(i, j)| topology.link(i, j))
+        .map(|(i, j)| topology.path_bw(i, j))
         .fold(1.0, f64::max);
     let total_reqs: f64 = group
         .members
@@ -214,7 +219,7 @@ pub fn select_hub(
         let p: f64 = candidates
             .iter()
             .filter(|&&j| j != i)
-            .map(|&j| topology.link(i, j) / max_link)
+            .map(|&j| topology.path_bw(i, j) / max_link)
             .sum::<f64>()
             / (candidates.len().max(2) - 1) as f64;
         // U: resource availability = free cache fraction.
@@ -244,7 +249,7 @@ pub fn select_hub(
 mod tests {
     use super::*;
     use crate::cache::policy::PolicyKind;
-    use crate::simnet::NetCondition;
+    use crate::simnet::{NetCondition, N_DTNS};
     use crate::trace::{generator, presets};
 
     fn mk() -> (Trace, Topology, CacheNetwork) {

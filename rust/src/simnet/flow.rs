@@ -1,29 +1,41 @@
-//! Fluid-flow transfer model with per-link fair sharing.
+//! Fluid-flow transfer model with routed max-min fair sharing.
 //!
-//! Each transfer is a *flow* on one directed resource: either a DMZ
-//! link between two DTNs (fair-shared among concurrent flows) or a
-//! dedicated commodity-WAN pipe (fixed per-flow rate).  When the flow
-//! population on a link changes, all flows on that link are settled at
-//! the old rate and re-planned at the new rate — the classic
-//! progressive-filling fluid approximation, exact for single-hop paths
-//! like the VDC star/clique topology.
+//! Each transfer is a *flow* on one resource: a routed **path** of one
+//! or more directed DMZ links (shared with every other flow crossing
+//! any of them) or a dedicated commodity-WAN pipe at a fixed per-flow
+//! rate.  Rates are planned by progressive filling (water-filling)
+//! max-min fairness across all shared links: every flow's rate is the
+//! fill level of its bottleneck link — all flows rise together until a
+//! link saturates, flows through it freeze, and filling continues on
+//! the remaining links.  A length-1 path degenerates to the classic
+//! per-link fair share `capacity / n`, bit-for-bit, which is what the
+//! single-hop VDC star rides on.
+//!
+//! # Component-scoped replanning
+//!
+//! When the flow population on a link changes, exactly the flows in
+//! that link's *connected component* (flows transitively coupled
+//! through shared links) can change rate; everything outside keeps its
+//! plan.  Membership changes mark links dirty; the deferred replan
+//! discovers the affected component (links ↔ flows BFS from the dirty
+//! seeds), settles its flows at their old rates, and re-runs the
+//! water-filling for that component only.  On the single-hop star every
+//! component is one link, so this is exactly the per-link replan of
+//! the pre-routing scheduler.
 //!
 //! # Indexed completion scheduling
 //!
 //! Completion times are delivered through [`FlowSim::next_completion`],
 //! backed by a lazy-deletion binary heap keyed on
 //! `(completion_time, FlowId)` with a per-flow *version* counter: a
-//! link replan bumps the versions of that link's flows and pushes fresh
-//! heap entries, so stale entries are discarded on pop and a query is
-//! O(log n) amortized instead of the old O(n) scan over every active
-//! flow (which made the event loop O(n²) in concurrent transfers).
-//!
-//! Settle/replan work is batched per link: membership changes mark the
-//! link *dirty* and the replan runs once — at the next query, or when
-//! simulation time advances — so a burst of same-instant arrivals on
-//! one link settles and replans once instead of once per arrival.
-//! [`FlowSim::next_completion_linear`] keeps the brute-force scan as a
-//! property-test oracle and benchmark baseline.
+//! component replan bumps the versions of that component's flows and
+//! pushes fresh heap entries, so stale entries are discarded on pop and
+//! a query is O(log n) amortized instead of a linear scan over every
+//! active flow.  [`FlowSim::next_completion_linear`] keeps the
+//! brute-force scan as a property-test oracle and benchmark baseline,
+//! and [`FlowSim::max_min_oracle`] recomputes every routed flow's rate
+//! from scratch — the planning oracle the property tests hold the
+//! incremental planner to, bit-for-bit.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, HashSet};
@@ -32,18 +44,70 @@ use std::collections::{BinaryHeap, HashMap, HashSet};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FlowId(pub u64);
 
-/// The resource a flow rides on.
+/// Directed shared-link identifier (see `Topology::link_id`).
+pub type LinkId = usize;
+
+/// One hop of a routed path: a shared link and its capacity (bytes/s).
+/// Capacity is a property of the link — every route crossing a link
+/// must carry the same capacity for it.
 #[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hop {
+    pub link: LinkId,
+    pub capacity: f64,
+}
+
+/// An ordered multi-hop path of shared links, as resolved by
+/// `Topology::route`.  Empty routes mean "no network hop" (same node
+/// or unreachable) and cannot carry a flow.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Route {
+    pub hops: Vec<Hop>,
+}
+
+impl Route {
+    /// A single-hop route (the degenerate star case).
+    pub fn single(link: LinkId, capacity: f64) -> Self {
+        Self {
+            hops: vec![Hop { link, capacity }],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.hops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hops.is_empty()
+    }
+
+    /// Bottleneck capacity (bytes/s); 0 for an empty route.
+    pub fn bottleneck(&self) -> f64 {
+        if self.hops.is_empty() {
+            return 0.0;
+        }
+        self.hops
+            .iter()
+            .map(|h| h.capacity)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// The resource a flow rides on.
+#[derive(Debug, Clone, PartialEq)]
 pub enum Pipe {
-    /// Fair-shared DMZ link (by link id from `Topology::link_id`).
-    Link { id: usize, capacity: f64 },
+    /// Single fair-shared DMZ link — sugar for a one-hop [`Pipe::Path`].
+    Link { id: LinkId, capacity: f64 },
+    /// Routed path of fair-shared links (multi-hop max-min).
+    Path(Route),
     /// Dedicated pipe at a fixed rate (commodity WAN, user edge).
     Dedicated { rate: f64 },
 }
 
 #[derive(Debug, Clone)]
 struct Flow {
-    pipe: Pipe,
+    /// Shared links this flow occupies, in path order; empty for
+    /// dedicated pipes.
+    route: Route,
     bytes_left: f64,
     bytes_total: f64,
     rate: f64,
@@ -96,12 +160,15 @@ impl Ord for Pending {
     }
 }
 
-/// Per-link bookkeeping: resident flows plus the time the link was last
-/// settled (so a same-instant burst settles once).
-#[derive(Debug, Default)]
+/// Per-link bookkeeping: capacity plus resident flows.  The membership
+/// vector stays in ascending [`FlowId`] order (flows are appended with
+/// monotonically increasing ids and removal preserves order), which
+/// pins the freeze order inside the water-filling so the incremental
+/// planner and the from-scratch oracle do identical arithmetic.
+#[derive(Debug)]
 struct LinkState {
+    capacity: f64,
     flows: Vec<FlowId>,
-    settled_at: f64,
 }
 
 /// Fluid-flow simulator state.
@@ -109,17 +176,20 @@ struct LinkState {
 pub struct FlowSim {
     next_id: u64,
     flows: HashMap<FlowId, Flow>,
-    /// link id → flows currently on it.
-    link_flows: HashMap<usize, LinkState>,
+    /// link id → capacity and resident flows.
+    links: HashMap<LinkId, LinkState>,
     /// Lazy-deletion completion index.
     completions: BinaryHeap<Pending>,
-    /// Links whose rates need replanning (deferred to the next query
-    /// or time advance), in deterministic mark order.
-    dirty_links: Vec<usize>,
-    dirty_set: HashSet<usize>,
+    /// Links whose components need replanning (deferred to the next
+    /// query or time advance), in deterministic mark order.
+    dirty_links: Vec<LinkId>,
+    dirty_set: HashSet<LinkId>,
     /// Timestamp the dirty marks belong to; an operation at a later
     /// time flushes first so old rates never leak across an interval.
     dirty_at: f64,
+    /// Cumulative bytes carried per directed link (settled flow
+    /// progress; utilization reporting).
+    carried: HashMap<LinkId, f64>,
 }
 
 /// Result of completing a flow.
@@ -157,34 +227,60 @@ impl FlowSim {
         self.touch(now);
         let id = FlowId(self.next_id);
         self.next_id += 1;
-        let mut flow = Flow {
-            pipe,
-            bytes_left: bytes,
-            bytes_total: bytes,
-            rate: 0.0,
-            last_settle: now,
-            started: now,
-            version: 0,
-        };
-        match pipe {
-            Pipe::Link { id: link, .. } => {
-                self.settle_link(link, now);
-                self.flows.insert(id, flow);
-                let st = self.link_flows.entry(link).or_default();
-                st.settled_at = now;
-                st.flows.push(id);
-                self.mark_dirty(link, now);
-            }
+        let route = match pipe {
+            Pipe::Link { id, capacity } => Route::single(id, capacity),
+            Pipe::Path(route) => route,
             Pipe::Dedicated { rate } => {
-                flow.rate = rate.max(1.0);
+                let flow = Flow {
+                    route: Route::default(),
+                    bytes_left: bytes,
+                    bytes_total: bytes,
+                    rate: rate.max(1.0),
+                    last_settle: now,
+                    started: now,
+                    version: 0,
+                };
                 self.completions.push(Pending {
                     time: completion_time(&flow),
                     id,
                     version: 0,
                 });
                 self.flows.insert(id, flow);
+                return id;
             }
+        };
+        // Release-mode assert: a zero-hop flow would register on no
+        // links, never get water-filled or indexed, and silently never
+        // complete — corrupting request accounting (same rationale as
+        // EventQueue::push rejecting non-finite times in release).
+        assert!(!route.is_empty(), "routed flow needs at least one hop");
+        for hop in &route.hops {
+            let st = self.links.entry(hop.link).or_insert_with(|| LinkState {
+                capacity: hop.capacity,
+                flows: Vec::new(),
+            });
+            debug_assert!(
+                st.flows.is_empty() || st.capacity.to_bits() == hop.capacity.to_bits(),
+                "inconsistent capacity on link {}",
+                hop.link
+            );
+            st.capacity = hop.capacity;
+            debug_assert!(!st.flows.contains(&id), "route crosses link {} twice", hop.link);
+            st.flows.push(id);
+            self.mark_dirty(hop.link, now);
         }
+        self.flows.insert(
+            id,
+            Flow {
+                route,
+                bytes_left: bytes,
+                bytes_total: bytes,
+                rate: 0.0,
+                last_settle: now,
+                started: now,
+                version: 0,
+            },
+        );
         id
     }
 
@@ -221,13 +317,16 @@ impl FlowSim {
     }
 
     /// Complete a flow at `now` (the engine guarantees `now` is its
-    /// completion time).  Frees link share for the remaining flows.
+    /// completion time).  Frees share on every link of its route for
+    /// the remaining flows of the component.
     pub fn complete(&mut self, id: FlowId, now: f64) -> Option<Completed> {
         self.touch(now);
-        let flow = self.flows.remove(&id)?;
-        if let Pipe::Link { id: link, .. } = flow.pipe {
-            self.settle_link(link, now);
-            let emptied = match self.link_flows.get_mut(&link) {
+        let mut flow = self.flows.remove(&id)?;
+        // Final settle of the completing flow: byte accounting and
+        // per-link carried-bytes attribution up to `now`.
+        settle_flow(&mut flow, now, &mut self.carried);
+        for hop in &flow.route.hops {
+            let emptied = match self.links.get_mut(&hop.link) {
                 Some(st) => {
                     st.flows.retain(|&f| f != id);
                     st.flows.is_empty()
@@ -235,9 +334,9 @@ impl FlowSim {
                 None => false,
             };
             if emptied {
-                self.link_flows.remove(&link);
+                self.links.remove(&hop.link);
             } else {
-                self.mark_dirty(link, now);
+                self.mark_dirty(hop.link, now);
             }
         }
         Some(Completed {
@@ -246,6 +345,13 @@ impl FlowSim {
             started: flow.started,
             finished: now,
         })
+    }
+
+    /// Cumulative bytes carried per directed link (settled progress of
+    /// flows; a still-active flow's progress since its last settle is
+    /// attributed at its next settle or completion).
+    pub fn link_bytes(&self) -> &HashMap<LinkId, f64> {
+        &self.carried
     }
 
     /// Flush deferred replans if simulation time moved past the marks;
@@ -257,71 +363,197 @@ impl FlowSim {
         }
     }
 
-    fn mark_dirty(&mut self, link: usize, now: f64) {
+    fn mark_dirty(&mut self, link: LinkId, now: f64) {
         self.dirty_at = now;
         if self.dirty_set.insert(link) {
             self.dirty_links.push(link);
         }
     }
 
-    /// Replan every dirty link (once each, regardless of how many
-    /// membership changes marked it) and bound the completion index.
+    /// Replan the connected component(s) of every dirty link: discover
+    /// the affected flows (links ↔ flows BFS from the dirty seeds),
+    /// settle them at their old rates, water-fill new max-min rates,
+    /// bump versions, and index the new completion times.  Flows
+    /// outside the affected components keep their plan and their heap
+    /// entries stay fresh.
     fn flush(&mut self) {
         if self.dirty_links.is_empty() {
             return;
         }
-        let links = std::mem::take(&mut self.dirty_links);
+        let now = self.dirty_at;
+        let seeds = std::mem::take(&mut self.dirty_links);
         self.dirty_set.clear();
-        for link in links {
-            self.replan_link(link);
+
+        // Component discovery.
+        let mut comp_links: Vec<LinkId> = Vec::new();
+        let mut seen_links: HashSet<LinkId> = HashSet::new();
+        let mut comp_flows: Vec<FlowId> = Vec::new();
+        let mut seen_flows: HashSet<FlowId> = HashSet::new();
+        for l in seeds {
+            if seen_links.insert(l) {
+                comp_links.push(l);
+            }
+        }
+        let mut qi = 0;
+        while qi < comp_links.len() {
+            let l = comp_links[qi];
+            qi += 1;
+            let Some(st) = self.links.get(&l) else { continue };
+            for &fid in &st.flows {
+                if seen_flows.insert(fid) {
+                    comp_flows.push(fid);
+                    for hop in &self.flows[&fid].route.hops {
+                        if seen_links.insert(hop.link) {
+                            comp_links.push(hop.link);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Settle every affected flow at its old rate up to the replan
+        // instant, so the rate change never rewrites history.
+        {
+            let flows = &mut self.flows;
+            let carried = &mut self.carried;
+            for fid in &comp_flows {
+                if let Some(f) = flows.get_mut(fid) {
+                    settle_flow(f, now, carried);
+                }
+            }
+        }
+
+        // Water-fill the component and index the new plans.
+        let planned = self.progressive_fill(comp_links);
+        for (fid, rate) in planned {
+            if let Some(f) = self.flows.get_mut(&fid) {
+                f.rate = rate;
+                f.version += 1;
+                self.completions.push(Pending {
+                    time: completion_time(f),
+                    id: fid,
+                    version: f.version,
+                });
+            }
         }
         self.maybe_compact();
     }
 
-    /// Advance all flows on a link to `now` at their current rates.
-    /// No-op when the link already settled at `now` (burst batching).
-    fn settle_link(&mut self, link: usize, now: f64) {
-        let Some(st) = self.link_flows.get_mut(&link) else {
-            return;
-        };
-        debug_assert!(now >= st.settled_at, "settle going backwards");
-        if st.settled_at == now {
-            return;
-        }
-        st.settled_at = now;
-        for id in &st.flows {
-            if let Some(f) = self.flows.get_mut(id) {
-                let dt = (now - f.last_settle).max(0.0);
-                f.bytes_left = (f.bytes_left - f.rate * dt).max(0.0);
-                f.last_settle = now;
-            }
-        }
-    }
+    /// Progressive-filling max-min over the given links and every flow
+    /// resident on them: repeatedly find the bottleneck link (smallest
+    /// `residual / active`, ties to the lowest link id), freeze its
+    /// unfrozen flows at that fill level, and subtract their share from
+    /// every link they cross.  Returns `(flow, rate)` in freeze order.
+    ///
+    /// Determinism/bit-exactness contract (shared with
+    /// [`FlowSim::max_min_oracle`]): links are scanned in ascending id
+    /// order, flows freeze in ascending id order (the membership-vector
+    /// invariant), and a length-1 component plans exactly
+    /// `capacity / n` — the pre-routing per-link fair share.
+    fn progressive_fill(&self, mut link_ids: Vec<LinkId>) -> Vec<(FlowId, f64)> {
+        link_ids.retain(|l| self.links.contains_key(l));
+        link_ids.sort_unstable();
+        link_ids.dedup();
 
-    /// Recompute fair-share rates on a link, bump versions, and index
-    /// the new completion times.
-    fn replan_link(&mut self, link: usize) {
-        let Some(st) = self.link_flows.get(&link) else {
-            return;
-        };
-        let n = st.flows.len() as f64;
-        for id in &st.flows {
-            if let Some(f) = self.flows.get_mut(id) {
-                if let Pipe::Link { capacity, .. } = f.pipe {
-                    // Exact fair share: the old `(capacity / n).max(1.0)`
-                    // floor oversubscribed the link once flows
-                    // outnumbered capacity units — aggregate rate must
-                    // never exceed capacity.
-                    f.rate = if capacity > 0.0 { capacity / n } else { 0.0 };
-                    f.version += 1;
-                    self.completions.push(Pending {
-                        time: completion_time(f),
-                        id: *id,
-                        version: f.version,
-                    });
+        // Fast path: a single-link component — the entire VDC star and
+        // the dominant case elsewhere.  Identical arithmetic to one
+        // round of the general loop below (level = capacity / n, every
+        // resident frozen at it, membership order).
+        if link_ids.len() == 1 {
+            let st = &self.links[&link_ids[0]];
+            let level = st.capacity / st.flows.len() as f64;
+            return st.flows.iter().map(|&fid| (fid, level)).collect();
+        }
+
+        // Index the component: links by position, flows by slot.
+        let members: Vec<&[FlowId]> = link_ids
+            .iter()
+            .map(|l| self.links[l].flows.as_slice())
+            .collect();
+        let mut residual: Vec<f64> = link_ids.iter().map(|l| self.links[l].capacity).collect();
+        let mut flow_ids: Vec<FlowId> = Vec::new();
+        let mut slot_of: HashMap<FlowId, usize> = HashMap::new();
+        for mem in &members {
+            for &fid in *mem {
+                if !slot_of.contains_key(&fid) {
+                    slot_of.insert(fid, flow_ids.len());
+                    flow_ids.push(fid);
                 }
             }
         }
+        let mem_slots: Vec<Vec<usize>> = members
+            .iter()
+            .map(|mem| mem.iter().map(|f| slot_of[f]).collect())
+            .collect();
+        let pos_of: HashMap<LinkId, usize> = link_ids
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| (l, i))
+            .collect();
+        let route_pos: Vec<Vec<usize>> = flow_ids
+            .iter()
+            .map(|fid| {
+                self.flows[fid]
+                    .route
+                    .hops
+                    .iter()
+                    .map(|h| pos_of[&h.link])
+                    .collect()
+            })
+            .collect();
+
+        // Water-filling.
+        let mut active: Vec<usize> = mem_slots.iter().map(|m| m.len()).collect();
+        let mut frozen = vec![false; flow_ids.len()];
+        let mut out: Vec<(FlowId, f64)> = Vec::with_capacity(flow_ids.len());
+        loop {
+            let mut level = f64::INFINITY;
+            let mut bl = usize::MAX;
+            for li in 0..link_ids.len() {
+                if active[li] == 0 {
+                    continue;
+                }
+                let share = residual[li] / active[li] as f64;
+                if bl == usize::MAX || share.total_cmp(&level) == Ordering::Less {
+                    level = share;
+                    bl = li;
+                }
+            }
+            if bl == usize::MAX {
+                break;
+            }
+            // Sequential subtraction can leave ~ulp-negative residual
+            // dust on a link whose members froze elsewhere; never plan
+            // a negative (or NaN) rate from it.  Exact for every
+            // regular level (positive stays bit-identical).
+            let level = level.max(0.0);
+            for &fi in &mem_slots[bl] {
+                if frozen[fi] {
+                    continue;
+                }
+                frozen[fi] = true;
+                out.push((flow_ids[fi], level));
+                for &li in &route_pos[fi] {
+                    active[li] -= 1;
+                    residual[li] -= level;
+                }
+            }
+        }
+        out
+    }
+
+    /// Brute-force max-min oracle: recompute the rate of **every**
+    /// routed flow from scratch (global water-filling over all links).
+    /// The incremental per-component planner must agree with this
+    /// bit-for-bit — rates depend only on a component's membership and
+    /// capacities, and both sides share
+    /// [`FlowSim::progressive_fill`]'s deterministic freeze order.
+    pub fn max_min_oracle(&mut self) -> Vec<(FlowId, f64)> {
+        self.flush();
+        let all_links: Vec<LinkId> = self.links.keys().copied().collect();
+        let mut rates = self.progressive_fill(all_links);
+        rates.sort_unstable_by_key(|(id, _)| *id);
+        rates
     }
 
     /// Rebuild the heap when stale entries dominate, keeping memory
@@ -347,6 +579,24 @@ impl FlowSim {
     }
 }
 
+/// Advance one flow to `now` at its current rate: byte accounting
+/// (identical arithmetic to the pre-routing per-link settle) plus
+/// carried-bytes attribution on every link of its route.
+fn settle_flow(f: &mut Flow, now: f64, carried: &mut HashMap<LinkId, f64>) {
+    let dt = (now - f.last_settle).max(0.0);
+    if dt > 0.0 && f.rate > 0.0 {
+        // Attribution is capped at the bytes actually remaining so link
+        // counters never overshoot; the flow's own accounting keeps the
+        // historical clamp-to-zero arithmetic.
+        let moved = (f.rate * dt).min(f.bytes_left);
+        for hop in &f.route.hops {
+            *carried.entry(hop.link).or_insert(0.0) += moved;
+        }
+        f.bytes_left = (f.bytes_left - f.rate * dt).max(0.0);
+    }
+    f.last_settle = now;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -355,6 +605,13 @@ mod tests {
         id: 1,
         capacity: 1000.0,
     };
+
+    /// A routed pipe over `links`, all at capacity `cap`.
+    fn path(links: &[LinkId], cap: f64) -> Pipe {
+        Pipe::Path(Route {
+            hops: links.iter().map(|&l| Hop { link: l, capacity: cap }).collect(),
+        })
+    }
 
     #[test]
     fn single_flow_full_capacity() {
@@ -431,22 +688,8 @@ mod tests {
     #[test]
     fn different_links_independent() {
         let mut sim = FlowSim::new();
-        let a = sim.start(
-            0.0,
-            1000.0,
-            Pipe::Link {
-                id: 1,
-                capacity: 1000.0,
-            },
-        );
-        let b = sim.start(
-            0.0,
-            1000.0,
-            Pipe::Link {
-                id: 2,
-                capacity: 1000.0,
-            },
-        );
+        let a = sim.start(0.0, 1000.0, Pipe::Link { id: 1, capacity: 1000.0 });
+        let b = sim.start(0.0, 1000.0, Pipe::Link { id: 2, capacity: 1000.0 });
         assert_eq!(sim.rate(a), 1000.0);
         assert_eq!(sim.rate(b), 1000.0);
     }
@@ -478,11 +721,8 @@ mod tests {
         // Regression: 10 flows on a 4 B/s link.  The old 1 B/s rate
         // floor planned 10 B/s aggregate — 2.5× the link capacity.
         let mut sim = FlowSim::new();
-        let pipe = Pipe::Link {
-            id: 9,
-            capacity: 4.0,
-        };
-        let ids: Vec<FlowId> = (0..10).map(|_| sim.start(0.0, 100.0, pipe)).collect();
+        let pipe = Pipe::Link { id: 9, capacity: 4.0 };
+        let ids: Vec<FlowId> = (0..10).map(|_| sim.start(0.0, 100.0, pipe.clone())).collect();
         let total: f64 = ids.iter().map(|&id| sim.rate(id)).sum();
         assert!(total <= 4.0 + 1e-9, "aggregate {total} exceeds capacity");
         assert!((sim.rate(ids[0]) - 0.4).abs() < 1e-12);
@@ -491,28 +731,202 @@ mod tests {
         assert!((t - 250.0).abs() < 1e-9);
     }
 
+    // ------------------------------------------------------------------
+    // Routed multi-hop planning
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn bottleneck_sets_multi_hop_rate() {
+        // One flow over links 1 (cap 1000) and 2 (cap 250): the
+        // bottleneck rules.
+        let mut sim = FlowSim::new();
+        let f = sim.start(
+            0.0,
+            1000.0,
+            Pipe::Path(Route {
+                hops: vec![
+                    Hop { link: 1, capacity: 1000.0 },
+                    Hop { link: 2, capacity: 250.0 },
+                ],
+            }),
+        );
+        assert_eq!(sim.rate(f), 250.0);
+        let (t, _) = sim.next_completion().unwrap();
+        assert!((t - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn water_filling_textbook_example() {
+        // f1 on link A only; f2 on A and B.  A: cap 10, B: cap 4.
+        // Filling: B saturates first (level 4) → f2 = 4; the leftover
+        // A headroom goes to f1 → f1 = 6.  Classic max-min, not 5/5.
+        let mut sim = FlowSim::new();
+        let f1 = sim.start(0.0, 1e6, path(&[0], 10.0));
+        let f2 = sim.start(
+            0.0,
+            1e6,
+            Pipe::Path(Route {
+                hops: vec![Hop { link: 0, capacity: 10.0 }, Hop { link: 1, capacity: 4.0 }],
+            }),
+        );
+        assert!((sim.rate(f2) - 4.0).abs() < 1e-12);
+        assert!((sim.rate(f1) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn component_replan_leaves_other_components_untouched() {
+        // Flows on links {0,1} form one component, flows on {5} another.
+        let mut sim = FlowSim::new();
+        let a = sim.start(0.0, 1e6, path(&[0, 1], 100.0));
+        let b = sim.start(0.0, 1e6, path(&[1], 100.0));
+        let c = sim.start(0.0, 1e6, path(&[5], 100.0));
+        let _ = sim.next_completion();
+        let vc_before = sim.flows[&c].version;
+        // Perturb the {0,1} component only.
+        let d = sim.start(1.0, 1e6, path(&[0], 100.0));
+        let _ = sim.next_completion();
+        assert_eq!(
+            sim.flows[&c].version, vc_before,
+            "uncoupled component was invalidated"
+        );
+        for id in [a, b, d] {
+            assert!(sim.flows[&id].version > 0);
+        }
+        // Sanity: the shared-link component did replan: a is squeezed
+        // on link 0 (50) and link 1 (shared with b).
+        assert!((sim.rate(a) - 50.0).abs() < 1e-12);
+        assert!((sim.rate(b) - 50.0).abs() < 1e-12);
+        assert!((sim.rate(c) - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn carried_bytes_attributed_per_link() {
+        let mut sim = FlowSim::new();
+        let f = sim.start(0.0, 1000.0, path(&[3, 4], 100.0));
+        let (t, _) = sim.next_completion().unwrap();
+        sim.complete(f, t).unwrap();
+        assert!((sim.link_bytes()[&3] - 1000.0).abs() < 1e-9);
+        assert!((sim.link_bytes()[&4] - 1000.0).abs() < 1e-9);
+    }
+
+    /// Start a random routed flow over 1-3 distinct links of a fixed
+    /// 6-link fabric (per-link capacities fixed for the whole case, as
+    /// real topologies guarantee).
+    fn start_random_routed(
+        sim: &mut FlowSim,
+        rng: &mut crate::util::rng::Rng,
+        caps: &[f64],
+        now: f64,
+    ) -> FlowId {
+        let n_hops = 1 + rng.below(3);
+        let mut links: Vec<LinkId> = Vec::new();
+        while links.len() < n_hops {
+            let l = rng.below(caps.len());
+            if !links.contains(&l) {
+                links.push(l);
+            }
+        }
+        let hops = links
+            .iter()
+            .map(|&l| Hop { link: l, capacity: caps[l] })
+            .collect();
+        sim.start(now, rng.range(1.0, 5000.0), Pipe::Path(Route { hops }))
+    }
+
+    /// Property (ISSUE 2a): a length-1 path plans exactly the PR 1
+    /// single-link fair share `capacity / n`, bit-for-bit.
+    #[test]
+    fn prop_single_hop_matches_per_link_fair_share() {
+        crate::util::prop::check("flow-single-hop-pr1-parity", |rng| {
+            let caps: Vec<f64> = (0..4).map(|_| rng.range(0.5, 2000.0)).collect();
+            let mut sim = FlowSim::new();
+            let mut now = 0.0;
+            for _ in 0..150 {
+                if rng.chance(0.6) || sim.active() == 0 {
+                    now += rng.range(0.0, 1.0);
+                    let l = rng.below(4);
+                    sim.start(
+                        now,
+                        rng.range(1.0, 3000.0),
+                        Pipe::Link { id: l, capacity: caps[l] },
+                    );
+                } else {
+                    let (t, id) = sim.next_completion().unwrap();
+                    now = t.max(now);
+                    sim.complete(id, now).unwrap();
+                }
+                let _ = sim.next_completion(); // force replan
+                for (l, &cap) in caps.iter().enumerate() {
+                    let Some(st) = sim.links.get(&l) else { continue };
+                    let expect = cap / st.flows.len() as f64;
+                    for fid in &st.flows {
+                        assert_eq!(
+                            sim.flows[fid].rate.to_bits(),
+                            expect.to_bits(),
+                            "link {l}: planned {} vs fair share {}",
+                            sim.flows[fid].rate,
+                            expect
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    /// Property: the incremental per-component planner agrees with the
+    /// from-scratch global max-min oracle, bit-for-bit, under random
+    /// multi-hop workloads.
+    #[test]
+    fn prop_planner_matches_max_min_oracle() {
+        crate::util::prop::check("flow-planner-vs-maxmin-oracle", |rng| {
+            let caps: Vec<f64> = (0..6).map(|_| rng.range(0.5, 500.0)).collect();
+            let mut sim = FlowSim::new();
+            let mut now = 0.0;
+            for _ in 0..120 {
+                if rng.chance(0.6) || sim.active() == 0 {
+                    now += rng.range(0.0, 1.0);
+                    start_random_routed(&mut sim, rng, &caps, now);
+                } else {
+                    let (t, id) = sim.next_completion().unwrap();
+                    now = t.max(now);
+                    sim.complete(id, now).unwrap();
+                }
+                let oracle = sim.max_min_oracle();
+                assert_eq!(oracle.len(), sim.active());
+                for (fid, rate) in oracle {
+                    assert_eq!(
+                        sim.flows[&fid].rate.to_bits(),
+                        rate.to_bits(),
+                        "flow {fid:?}: planner {} vs oracle {}",
+                        sim.flows[&fid].rate,
+                        rate
+                    );
+                }
+            }
+        });
+    }
+
     /// Property: the indexed completion query agrees with the
     /// brute-force linear-scan oracle — bit-for-bit times and identical
-    /// tie-breaks — under random start/complete/replan workloads.
+    /// tie-breaks — under random multi-hop start/complete workloads.
     #[test]
     fn prop_indexed_matches_linear_oracle() {
         crate::util::prop::check("flow-index-vs-oracle", |rng| {
+            let caps: Vec<f64> = (0..6).map(|_| rng.range(0.5, 2000.0)).collect();
             let mut sim = FlowSim::new();
             let mut now = 0.0;
             for _ in 0..200 {
                 if rng.chance(0.55) || sim.active() == 0 {
                     now += rng.range(0.0, 1.5);
-                    let pipe = if rng.chance(0.8) {
-                        Pipe::Link {
-                            id: rng.below(4),
-                            capacity: rng.range(0.5, 2000.0),
-                        }
+                    if rng.chance(0.8) {
+                        start_random_routed(&mut sim, rng, &caps, now);
                     } else {
-                        Pipe::Dedicated {
-                            rate: rng.range(1.0, 500.0),
-                        }
-                    };
-                    sim.start(now, rng.range(1.0, 5000.0), pipe);
+                        sim.start(
+                            now,
+                            rng.range(1.0, 5000.0),
+                            Pipe::Dedicated { rate: rng.range(1.0, 500.0) },
+                        );
+                    }
                 } else {
                     let (t, id) = sim.next_completion().unwrap();
                     now = t.max(now);
@@ -534,29 +948,22 @@ mod tests {
         });
     }
 
-    /// Property: after every perturbation, the aggregate planned rate
-    /// on each link never exceeds its capacity (regression for the
-    /// 1 B/s floor, which oversubscribed saturated links).
+    /// Property (ISSUE 2b): after every perturbation, the aggregate
+    /// planned rate on each link never exceeds its capacity — now under
+    /// multi-hop routes, where a link's residents include flows
+    /// bottlenecked elsewhere.
     #[test]
     fn prop_link_rates_never_exceed_capacity() {
         crate::util::prop::check("flow-no-oversubscription", |rng| {
-            // Fixed per-link capacities, deliberately tiny so flow
-            // counts exceed capacity units.
-            let caps: Vec<f64> = (0..3).map(|_| rng.range(0.5, 50.0)).collect();
+            // Deliberately tiny capacities so flow counts exceed
+            // capacity units.
+            let caps: Vec<f64> = (0..5).map(|_| rng.range(0.5, 50.0)).collect();
             let mut sim = FlowSim::new();
             let mut now = 0.0;
             for _ in 0..120 {
                 if rng.chance(0.7) || sim.active() == 0 {
                     now += rng.range(0.0, 1.0);
-                    let link = rng.below(3);
-                    sim.start(
-                        now,
-                        rng.range(1.0, 200.0),
-                        Pipe::Link {
-                            id: link,
-                            capacity: caps[link],
-                        },
-                    );
+                    start_random_routed(&mut sim, rng, &caps, now);
                 } else {
                     let (t, id) = sim.next_completion().unwrap();
                     now = t.max(now);
@@ -565,7 +972,7 @@ mod tests {
                 let _ = sim.next_completion(); // force replan of dirty links
                 for (link, &cap) in caps.iter().enumerate() {
                     let sum: f64 = sim
-                        .link_flows
+                        .links
                         .get(&link)
                         .map(|st| st.flows.iter().map(|id| sim.flows[id].rate).sum())
                         .unwrap_or(0.0);
@@ -578,15 +985,19 @@ mod tests {
         });
     }
 
-    /// Property: total bytes delivered equals total bytes requested, and
-    /// completions are causally ordered, under random workloads.
+    /// Property (ISSUE 2c): total bytes delivered equals total bytes
+    /// requested, completions are causally ordered, and per-link
+    /// carried bytes account exactly for every routed byte — under
+    /// random multi-hop workloads with replans.
     #[test]
     fn prop_byte_conservation() {
         crate::util::prop::check("flow-byte-conservation", |rng| {
+            let caps: Vec<f64> = (0..4).map(|_| rng.range(100.0, 2000.0)).collect();
             let mut sim = FlowSim::new();
             let mut now = 0.0;
             let mut submitted = 0.0;
             let mut delivered = 0.0;
+            let mut routed_hop_bytes = 0.0;
             let mut pending = 0usize;
             for _ in 0..100 {
                 if rng.chance(0.6) || pending == 0 {
@@ -606,18 +1017,16 @@ mod tests {
                     }
                     now = next_now;
                     let bytes = rng.range(10.0, 5000.0);
-                    let pipe = if rng.chance(0.7) {
-                        Pipe::Link {
-                            id: rng.below(3),
-                            capacity: rng.range(100.0, 2000.0),
-                        }
+                    if rng.chance(0.7) {
+                        let id = start_random_routed(&mut sim, rng, &caps, now);
+                        // A routed byte is carried once per hop crossed.
+                        let hops = sim.flows[&id].route.len() as f64;
+                        routed_hop_bytes += sim.flows[&id].bytes_total * hops;
+                        submitted += sim.flows[&id].bytes_total;
                     } else {
-                        Pipe::Dedicated {
-                            rate: rng.range(10.0, 500.0),
-                        }
-                    };
-                    sim.start(now, bytes, pipe);
-                    submitted += bytes;
+                        sim.start(now, bytes, Pipe::Dedicated { rate: rng.range(10.0, 500.0) });
+                        submitted += bytes;
+                    }
                     pending += 1;
                 } else {
                     let (t, id) = sim.next_completion().unwrap();
@@ -637,6 +1046,13 @@ mod tests {
             assert!(
                 (submitted - delivered).abs() < 1e-6 * submitted.max(1.0),
                 "submitted {submitted} delivered {delivered}"
+            );
+            // Every routed byte is attributed on every hop it crossed:
+            // Σ per-link carried = Σ (flow bytes × hops) once drained.
+            let carried: f64 = sim.link_bytes().values().sum();
+            assert!(
+                (carried - routed_hop_bytes).abs() < 1e-6 * routed_hop_bytes.max(1.0),
+                "carried {carried} vs hop-bytes {routed_hop_bytes}"
             );
         });
     }

@@ -1,9 +1,10 @@
-//! VDC network simulator (paper §V-A1).
+//! Routed network simulator (paper §V-A1 generalized to tiers).
 //!
-//! * [`topology`] — the 7-DTN Fig. 8 bandwidth matrix, commodity-WAN
-//!   rates per continent, and network-condition scaling (§V-A3).
-//! * [`flow`] — fluid fair-share transfer model over DMZ links and
-//!   dedicated WAN pipes.
+//! * [`topology`] — the Fig. 8 VDC star plus hierarchical and
+//!   OSDF-style federation presets, with multi-hop route resolution
+//!   and network-condition scaling (§V-A3).
+//! * [`flow`] — fluid transfer model with routed max-min (water-
+//!   filling) fair sharing over shared links, and dedicated WAN pipes.
 //! * [`engine`] — discrete-event queue primitives.
 //!
 //! The observatory service model (task queue + 10 service processes)
@@ -15,5 +16,5 @@ pub mod flow;
 pub mod topology;
 
 pub use engine::EventQueue;
-pub use flow::{Completed, FlowId, FlowSim, Pipe};
-pub use topology::{NetCondition, Topology, N_DTNS, SERVER};
+pub use flow::{Completed, FlowId, FlowSim, Hop, LinkId, Pipe, Route};
+pub use topology::{NetCondition, TierLink, Topology, TopologyKind, N_CLIENT_DTNS, N_DTNS, SERVER};

@@ -1,23 +1,47 @@
-//! VDC network topology (paper Fig. 7-8).
+//! Network topologies: the VDC star (paper Fig. 7-8) plus hierarchical
+//! and federated tiers, with multi-hop route resolution.
 //!
-//! Seven DTNs: node 0 is the observatory-side server DTN, nodes 1-6
-//! are client DTNs hosting the six continents' users.  The paper caps
-//! client-DTN bandwidth between 10 and 40 Gbps (Fig. 8, emulating
-//! GAGE's measured per-continent WAN performance); the exact matrix in
-//! the paper is a figure without published numbers, so we reconstruct
-//! a heterogeneous matrix with the same range and ordering.
+//! The paper's framework rides on "emerging in-network capabilities"
+//! (§IV); the topology layer models three deployments of them:
+//!
+//! * [`Topology::vdc`] — the seven-DTN Fig. 7-8 fabric: node 0 is the
+//!   observatory-side server DTN, nodes 1-6 host the six continents'
+//!   users, and every pair is directly linked (10-40 Gbps,
+//!   reconstructed from Fig. 8's range and Fig. 2's ordering).  Every
+//!   route is a single hop — the degenerate case of the routed model,
+//!   and the bit-exact baseline every refactor must reproduce.
+//! * [`Topology::hierarchical`] — edge DTN → regional hub → core: the
+//!   six client DTNs keep their Fig. 8 access bandwidths but attach to
+//!   two regional hub DTNs whose uplinks to the observatory core are
+//!   oversubscribed, so concurrent transfers contend on shared
+//!   interior links.
+//! * [`Topology::federation`] — an OSDF-style federation tier behind
+//!   the observatory DMZ (cf. arXiv:2105.00964, arXiv:2605.15437):
+//!   origin → DMZ export DTN → regional federation caches → edges,
+//!   with explicit per-tier bandwidths so experiments can sweep the
+//!   core:regional:edge ratio.
+//!
+//! Routes are resolved from a hop-count-shortest next-hop table (BFS
+//! with ascending-node tie-breaks, so resolution is deterministic);
+//! [`Topology::route`] materializes the ordered [`Hop`] path a flow
+//! occupies and [`Topology::path_bw`] its bottleneck bandwidth.
 //!
 //! Separately from the DMZ fabric, every user has a *commodity WAN*
 //! path to the observatory (the paper's "current observatory data
 //! delivery") whose throughput is the continent's Fig. 2 average —
 //! this is what the No-Cache baseline rides on.
 
+use crate::simnet::flow::{Hop, Route};
 use crate::util::gbps_to_bytes_per_sec;
 
 /// Number of DTNs in the simulated VDC (Fig. 7).
 pub const N_DTNS: usize = 7;
-/// The observatory-side server DTN.
+/// The observatory-side server DTN (node 0 in every preset).
 pub const SERVER: usize = 0;
+/// Client DTNs hosting the six continents' users are nodes
+/// `1..=N_CLIENT_DTNS` in every preset, so the trace layer's
+/// continent→DTN mapping is topology-independent.
+pub const N_CLIENT_DTNS: usize = 6;
 /// Users connect to their local DTN at 100 Gbps (paper §V-A1).
 pub const USER_EDGE_GBPS: f64 = 100.0;
 
@@ -61,17 +85,93 @@ impl NetCondition {
     }
 }
 
-/// Symmetric DTN-to-DTN bandwidth matrix plus per-continent commodity
-/// WAN rates.
+/// Which topology a simulation runs over.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum TopologyKind {
+    /// Fig. 7-8 single-hop star/clique — the degenerate routed case.
+    #[default]
+    VdcStar,
+    /// Three-tier edge → regional hub → core.
+    Hierarchical,
+    /// OSDF-style federation behind the observatory DMZ, with explicit
+    /// per-tier bandwidths in Gbps.
+    Federation {
+        core_gbps: f64,
+        regional_gbps: f64,
+        edge_gbps: f64,
+    },
+}
+
+impl TopologyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::VdcStar => "vdc",
+            TopologyKind::Hierarchical => "hierarchical",
+            TopologyKind::Federation { .. } => "federation",
+        }
+    }
+
+    /// Parse a topology name (CLI); `federation` gets the default
+    /// 80:40:20 Gbps tiers — sweeps set explicit values via the enum.
+    pub fn parse(s: &str) -> Option<TopologyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "vdc" | "star" => Some(TopologyKind::VdcStar),
+            "hier" | "hierarchical" => Some(TopologyKind::Hierarchical),
+            "federation" | "osdf" => Some(TopologyKind::Federation {
+                core_gbps: 80.0,
+                regional_gbps: 40.0,
+                edge_gbps: 20.0,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Build the topology under a network condition, with per-continent
+    /// commodity-WAN rates in Mbps.
+    pub fn build(&self, cond: NetCondition, wan_mbps: &[f64; N_CLIENT_DTNS]) -> Topology {
+        match *self {
+            TopologyKind::VdcStar => Topology::vdc(cond, wan_mbps),
+            TopologyKind::Hierarchical => Topology::hierarchical(cond, wan_mbps),
+            TopologyKind::Federation {
+                core_gbps,
+                regional_gbps,
+                edge_gbps,
+            } => Topology::federation(cond, wan_mbps, core_gbps, regional_gbps, edge_gbps),
+        }
+    }
+}
+
+/// One directed infrastructure link with a tier label, for
+/// interior-utilization reporting (federation experiment).
+#[derive(Debug, Clone)]
+pub struct TierLink {
+    pub tier: &'static str,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// A routed network: direct-link capacity matrix, hop-count-shortest
+/// next-hop table, per-continent commodity WAN rates, and tier labels
+/// on interior links.
 #[derive(Debug, Clone)]
 pub struct Topology {
-    /// `bw[i][j]` in bytes/second (0 on the diagonal).
-    bw: [[f64; N_DTNS]; N_DTNS],
+    n: usize,
+    /// `bw[i * n + j]` in bytes/second; 0 = no direct link.
+    bw: Vec<f64>,
+    /// `next_hop[src * n + dst]` = first node after `src` on the
+    /// shortest path to `dst`; `usize::MAX` when unreachable/diagonal.
+    next_hop: Vec<usize>,
+    /// Bottleneck bandwidth of the routed path per (src, dst); 0 on
+    /// the diagonal and for unreachable pairs.  Precomputed because
+    /// peer selection queries it per candidate per chunk.
+    pbw: Vec<f64>,
     /// Commodity WAN bytes/second for users of each client DTN
-    /// (index 1..N_DTNS; index 0 unused).
-    wan: [f64; N_DTNS],
+    /// (non-client nodes hold 0).
+    wan: Vec<f64>,
     /// User ↔ local DTN edge, bytes/second.
     user_edge: f64,
+    /// Directed interior links with tier labels (empty on the star).
+    tiers: Vec<TierLink>,
 }
 
 /// Client DTN → server bandwidth in Gbps (Fig. 8 reconstruction:
@@ -79,41 +179,201 @@ pub struct Topology {
 /// NA, EU, AS, SA, AF, OC on DTNs 1..6).
 const SERVER_LINK_GBPS: [f64; 6] = [40.0, 40.0, 10.0, 20.0, 10.0, 30.0];
 
+/// Core uplink of each regional hub in the hierarchical preset (Gbps).
+/// Region A's edges sum to 90 Gbps of access capacity, so the 60 Gbps
+/// core uplink is 1.5:1 oversubscribed — interior contention is real.
+const HIER_CORE_GBPS: f64 = 60.0;
+
 impl Topology {
     /// The Fig. 8 VDC topology under a network condition, with
     /// per-continent WAN rates in Mbps (from the trace preset).
-    pub fn vdc(cond: NetCondition, wan_mbps: &[f64; 6]) -> Self {
+    /// Every node pair is directly linked: all routes are one hop.
+    pub fn vdc(cond: NetCondition, wan_mbps: &[f64; N_CLIENT_DTNS]) -> Self {
         let f = cond.factor();
-        let mut bw = [[0.0; N_DTNS]; N_DTNS];
-        for i in 1..N_DTNS {
+        let n = N_DTNS;
+        let mut bw = vec![0.0; n * n];
+        for i in 1..n {
             let gbps = SERVER_LINK_GBPS[i - 1] * f;
-            bw[SERVER][i] = gbps_to_bytes_per_sec(gbps);
-            bw[i][SERVER] = bw[SERVER][i];
+            bw[SERVER * n + i] = gbps_to_bytes_per_sec(gbps);
+            bw[i * n + SERVER] = bw[SERVER * n + i];
         }
         // Peer links: limited by the slower endpoint, with a 20% path
         // penalty (multi-hop regional fabric).
-        for i in 1..N_DTNS {
-            for j in (i + 1)..N_DTNS {
+        for i in 1..n {
+            for j in (i + 1)..n {
                 let gbps = SERVER_LINK_GBPS[i - 1].min(SERVER_LINK_GBPS[j - 1]) * 0.8 * f;
-                bw[i][j] = gbps_to_bytes_per_sec(gbps);
-                bw[j][i] = bw[i][j];
+                bw[i * n + j] = gbps_to_bytes_per_sec(gbps);
+                bw[j * n + i] = bw[i * n + j];
             }
         }
-        let mut wan = [0.0; N_DTNS];
+        Self::assemble(n, bw, cond, wan_mbps, Vec::new())
+    }
+
+    /// Three-tier hierarchy: observatory core (node 0) — two regional
+    /// hub DTNs (nodes 7, 8) — six edge client DTNs (nodes 1..6, region
+    /// A = {1,2,3} on hub 7, region B = {4,5,6} on hub 8).  Edge access
+    /// links keep the Fig. 8 per-continent bandwidths; hub uplinks to
+    /// the core are oversubscribed, so the interior is shared.
+    pub fn hierarchical(cond: NetCondition, wan_mbps: &[f64; N_CLIENT_DTNS]) -> Self {
+        let f = cond.factor();
+        let n = 9;
+        let (hub_a, hub_b) = (7, 8);
+        let mut bw = vec![0.0; n * n];
+        let mut set = |i: usize, j: usize, gbps: f64| {
+            bw[i * n + j] = gbps_to_bytes_per_sec(gbps * f);
+            bw[j * n + i] = bw[i * n + j];
+        };
+        set(SERVER, hub_a, HIER_CORE_GBPS);
+        set(SERVER, hub_b, HIER_CORE_GBPS);
+        for edge in 1..=N_CLIENT_DTNS {
+            let hub = if edge <= 3 { hub_a } else { hub_b };
+            set(edge, hub, SERVER_LINK_GBPS[edge - 1]);
+        }
+        let tiers = directed_tiers(&[
+            ("core", SERVER, hub_a),
+            ("core", SERVER, hub_b),
+        ]);
+        Self::assemble(n, bw, cond, wan_mbps, tiers)
+    }
+
+    /// OSDF-style federation: observatory origin (node 0) exports
+    /// through a DMZ DTN (node 7) into two regional federation caches
+    /// (nodes 8, 9) that serve the six edge client DTNs (nodes 1..6,
+    /// region A = {1,2,3} on cache 8, region B = {4,5,6} on cache 9).
+    /// Tier bandwidths are explicit so experiments sweep the
+    /// core:regional:edge ratio.
+    pub fn federation(
+        cond: NetCondition,
+        wan_mbps: &[f64; N_CLIENT_DTNS],
+        core_gbps: f64,
+        regional_gbps: f64,
+        edge_gbps: f64,
+    ) -> Self {
+        let f = cond.factor();
+        let n = 10;
+        let (dmz, cache_a, cache_b) = (7, 8, 9);
+        let mut bw = vec![0.0; n * n];
+        let mut set = |i: usize, j: usize, gbps: f64| {
+            bw[i * n + j] = gbps_to_bytes_per_sec(gbps * f);
+            bw[j * n + i] = bw[i * n + j];
+        };
+        set(SERVER, dmz, core_gbps);
+        set(dmz, cache_a, regional_gbps);
+        set(dmz, cache_b, regional_gbps);
+        for edge in 1..=N_CLIENT_DTNS {
+            let cache = if edge <= 3 { cache_a } else { cache_b };
+            set(edge, cache, edge_gbps);
+        }
+        let tiers = directed_tiers(&[
+            ("core", SERVER, dmz),
+            ("regional", dmz, cache_a),
+            ("regional", dmz, cache_b),
+        ]);
+        Self::assemble(n, bw, cond, wan_mbps, tiers)
+    }
+
+    fn assemble(
+        n: usize,
+        bw: Vec<f64>,
+        cond: NetCondition,
+        wan_mbps: &[f64; N_CLIENT_DTNS],
+        tiers: Vec<TierLink>,
+    ) -> Self {
+        let mut wan = vec![0.0; n];
         for (i, mbps) in wan_mbps.iter().enumerate() {
             // Commodity WAN also degrades with the network condition.
-            wan[i + 1] = mbps * f * 1e6 / 8.0;
+            wan[i + 1] = mbps * cond.factor() * 1e6 / 8.0;
+        }
+        let next_hop = build_next_hop(n, &bw);
+        // Path-bottleneck matrix: same min-fold the route's
+        // `Route::bottleneck` performs, walking the next-hop chain.
+        let mut pbw = vec![0.0; n * n];
+        for src in 0..n {
+            for dst in 0..n {
+                if src == dst {
+                    continue;
+                }
+                let mut min_bw = f64::INFINITY;
+                let mut at = src;
+                while at != dst {
+                    let nh = next_hop[at * n + dst];
+                    if nh == usize::MAX {
+                        min_bw = 0.0;
+                        break;
+                    }
+                    min_bw = min_bw.min(bw[at * n + nh]);
+                    at = nh;
+                }
+                pbw[src * n + dst] = min_bw;
+            }
         }
         Self {
+            n,
             bw,
+            next_hop,
+            pbw,
             wan,
             user_edge: gbps_to_bytes_per_sec(USER_EDGE_GBPS),
+            tiers,
         }
     }
 
-    /// DMZ link bandwidth between two DTNs (bytes/s).
+    pub fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Client DTNs hosting users, in continent order (always nodes
+    /// `1..=N_CLIENT_DTNS`; see [`crate::trace::Continent::dtn`]).
+    pub fn client_dtns(&self) -> std::ops::RangeInclusive<usize> {
+        1..=N_CLIENT_DTNS
+    }
+
+    /// Direct link bandwidth between two adjacent DTNs (bytes/s);
+    /// 0 when they are not directly connected.
     pub fn link(&self, from: usize, to: usize) -> f64 {
-        self.bw[from][to]
+        self.bw[from * self.n + to]
+    }
+
+    /// Directed link id for flow bookkeeping.
+    pub fn link_id(&self, from: usize, to: usize) -> usize {
+        from * self.n + to
+    }
+
+    /// Endpoints of a directed link id (inverse of [`Topology::link_id`]).
+    pub fn link_ends(&self, link: usize) -> (usize, usize) {
+        (link / self.n, link % self.n)
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.n * self.n
+    }
+
+    /// Resolve the routed path `src → dst`: the ordered shared links a
+    /// transfer occupies.  Empty when `src == dst` or unreachable
+    /// (check [`Route::is_empty`] before starting a flow).
+    pub fn route(&self, src: usize, dst: usize) -> Route {
+        let mut hops = Vec::new();
+        let mut at = src;
+        while at != dst {
+            let nh = self.next_hop[at * self.n + dst];
+            if nh == usize::MAX {
+                return Route::default();
+            }
+            hops.push(Hop {
+                link: self.link_id(at, nh),
+                capacity: self.link(at, nh),
+            });
+            at = nh;
+        }
+        Route { hops }
+    }
+
+    /// Bottleneck bandwidth of the routed path `src → dst` (bytes/s);
+    /// 0 when `src == dst` or unreachable.  On the single-hop VDC star
+    /// this equals [`Topology::link`].  Bit-identical to
+    /// `self.route(src, dst).bottleneck()`, precomputed.
+    pub fn path_bw(&self, src: usize, dst: usize) -> f64 {
+        self.pbw[src * self.n + dst]
     }
 
     /// Commodity WAN bandwidth for a client DTN's users (bytes/s).
@@ -126,23 +386,69 @@ impl Topology {
         self.user_edge
     }
 
-    /// Directed link id for flow bookkeeping.
-    pub fn link_id(from: usize, to: usize) -> usize {
-        from * N_DTNS + to
+    /// Directed interior links with tier labels (empty on the star).
+    pub fn tier_links(&self) -> &[TierLink] {
+        &self.tiers
     }
+}
 
-    pub fn n_links() -> usize {
-        N_DTNS * N_DTNS
+/// Both directions of each labeled undirected interior link.
+fn directed_tiers(links: &[(&'static str, usize, usize)]) -> Vec<TierLink> {
+    links
+        .iter()
+        .flat_map(|&(tier, a, b)| {
+            [
+                TierLink { tier, from: a, to: b },
+                TierLink { tier, from: b, to: a },
+            ]
+        })
+        .collect()
+}
+
+/// Hop-count-shortest next-hop table via BFS from every source,
+/// visiting neighbors in ascending node order so tie-breaks (and hence
+/// routes) are deterministic.
+fn build_next_hop(n: usize, bw: &[f64]) -> Vec<usize> {
+    let mut next = vec![usize::MAX; n * n];
+    let mut parent = vec![usize::MAX; n];
+    let mut queue = std::collections::VecDeque::new();
+    for src in 0..n {
+        parent.fill(usize::MAX);
+        parent[src] = src;
+        queue.clear();
+        queue.push_back(src);
+        while let Some(u) = queue.pop_front() {
+            for v in 0..n {
+                if bw[u * n + v] > 0.0 && parent[v] == usize::MAX {
+                    parent[v] = u;
+                    queue.push_back(v);
+                }
+            }
+        }
+        for dst in 0..n {
+            if dst == src || parent[dst] == usize::MAX {
+                continue;
+            }
+            let mut hop = dst;
+            while parent[hop] != src {
+                hop = parent[hop];
+            }
+            next[src * n + dst] = hop;
+        }
     }
+    next
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    const WAN: [f64; 6] = [25.0, 18.0, 0.568, 2.3, 1.2, 22.0];
+
     #[test]
     fn vdc_matrix_symmetric_and_in_range() {
-        let t = Topology::vdc(NetCondition::Best, &[25.0, 18.0, 0.568, 2.3, 1.2, 22.0]);
+        let t = Topology::vdc(NetCondition::Best, &WAN);
+        assert_eq!(t.n_nodes(), N_DTNS);
         for i in 0..N_DTNS {
             assert_eq!(t.link(i, i), 0.0);
             for j in 0..N_DTNS {
@@ -156,11 +462,31 @@ mod tests {
     }
 
     #[test]
+    fn vdc_routes_are_single_hop_with_direct_capacity() {
+        // Migration-safety invariant: the star is the degenerate routed
+        // case — every route is exactly the direct link.
+        let t = Topology::vdc(NetCondition::Best, &WAN);
+        for i in 0..N_DTNS {
+            for j in 0..N_DTNS {
+                if i == j {
+                    assert!(t.route(i, j).is_empty());
+                    continue;
+                }
+                let r = t.route(i, j);
+                assert_eq!(r.hops.len(), 1, "{i}->{j}");
+                assert_eq!(r.hops[0].link, t.link_id(i, j));
+                assert_eq!(r.hops[0].capacity.to_bits(), t.link(i, j).to_bits());
+                assert_eq!(t.path_bw(i, j).to_bits(), t.link(i, j).to_bits());
+            }
+        }
+        assert!(t.tier_links().is_empty());
+    }
+
+    #[test]
     fn conditions_scale_bandwidth() {
-        let wan = [25.0, 18.0, 0.568, 2.3, 1.2, 22.0];
-        let best = Topology::vdc(NetCondition::Best, &wan);
-        let med = Topology::vdc(NetCondition::Medium, &wan);
-        let worst = Topology::vdc(NetCondition::Worst, &wan);
+        let best = Topology::vdc(NetCondition::Best, &WAN);
+        let med = Topology::vdc(NetCondition::Medium, &WAN);
+        let worst = Topology::vdc(NetCondition::Worst, &WAN);
         assert!((med.link(0, 1) / best.link(0, 1) - 0.5).abs() < 1e-9);
         assert!((worst.link(0, 1) / best.link(0, 1) - 0.01).abs() < 1e-9);
         assert!((worst.wan(1) / best.wan(1) - 0.01).abs() < 1e-9);
@@ -168,7 +494,7 @@ mod tests {
 
     #[test]
     fn wan_is_much_slower_than_dmz() {
-        let t = Topology::vdc(NetCondition::Best, &[25.0, 18.0, 0.568, 2.3, 1.2, 22.0]);
+        let t = Topology::vdc(NetCondition::Best, &WAN);
         for dtn in 1..N_DTNS {
             assert!(t.wan(dtn) < t.link(SERVER, dtn) / 100.0);
         }
@@ -177,13 +503,115 @@ mod tests {
     }
 
     #[test]
-    fn link_ids_unique() {
+    fn link_ids_unique_and_invertible() {
+        let t = Topology::vdc(NetCondition::Best, &WAN);
         let mut seen = std::collections::HashSet::new();
         for i in 0..N_DTNS {
             for j in 0..N_DTNS {
-                assert!(seen.insert(Topology::link_id(i, j)));
+                let id = t.link_id(i, j);
+                assert!(seen.insert(id));
+                assert_eq!(t.link_ends(id), (i, j));
             }
         }
-        assert!(seen.len() <= Topology::n_links());
+        assert!(seen.len() <= t.n_links());
+    }
+
+    #[test]
+    fn hierarchical_routes_server_to_edge_via_hub() {
+        let t = Topology::hierarchical(NetCondition::Best, &WAN);
+        assert_eq!(t.n_nodes(), 9);
+        for edge in 1..=N_CLIENT_DTNS {
+            let r = t.route(SERVER, edge);
+            assert_eq!(r.hops.len(), 2, "server->{edge}");
+            let hub = if edge <= 3 { 7 } else { 8 };
+            assert_eq!(r.hops[0].link, t.link_id(SERVER, hub));
+            assert_eq!(r.hops[1].link, t.link_id(hub, edge));
+            // Bottleneck is the slower of core uplink and edge access.
+            assert_eq!(
+                t.path_bw(SERVER, edge),
+                t.link(SERVER, hub).min(t.link(hub, edge))
+            );
+        }
+        // Same-region peers route through the hub only (2 hops);
+        // cross-region peers traverse the core (4 hops).
+        assert_eq!(t.route(1, 2).hops.len(), 2);
+        assert_eq!(t.route(1, 4).hops.len(), 4);
+        assert_eq!(t.tier_links().len(), 4); // two core links, both directions
+    }
+
+    #[test]
+    fn federation_tier_capacities_and_depth() {
+        let t = Topology::federation(NetCondition::Best, &WAN, 100.0, 40.0, 20.0);
+        assert_eq!(t.n_nodes(), 10);
+        // Origin → edge crosses core, regional, edge tiers in order.
+        let r = t.route(SERVER, 1);
+        assert_eq!(r.hops.len(), 3);
+        assert!((r.hops[0].capacity - gbps_to_bytes_per_sec(100.0)).abs() < 1e-3);
+        assert!((r.hops[1].capacity - gbps_to_bytes_per_sec(40.0)).abs() < 1e-3);
+        assert!((r.hops[2].capacity - gbps_to_bytes_per_sec(20.0)).abs() < 1e-3);
+        assert_eq!(t.path_bw(SERVER, 1), gbps_to_bytes_per_sec(20.0));
+        // Interior tiers: 1 core + 2 regional undirected links, both
+        // directions each.
+        assert_eq!(t.tier_links().len(), 6);
+        let cores = t.tier_links().iter().filter(|l| l.tier == "core").count();
+        assert_eq!(cores, 2);
+        // Same-region peer short-circuits through the regional cache.
+        assert_eq!(t.route(2, 3).hops.len(), 2);
+        assert_eq!(t.route(1, 6).hops.len(), 4);
+    }
+
+    #[test]
+    fn routes_compose_consistently() {
+        // Walking next hops from any intermediate node still reaches
+        // the destination with decreasing hop counts (no loops).
+        for t in [
+            Topology::hierarchical(NetCondition::Best, &WAN),
+            Topology::federation(NetCondition::Best, &WAN, 50.0, 25.0, 10.0),
+        ] {
+            for src in 0..t.n_nodes() {
+                for dst in 0..t.n_nodes() {
+                    let r = t.route(src, dst);
+                    if src == dst {
+                        assert!(r.is_empty());
+                        continue;
+                    }
+                    assert!(!r.is_empty(), "{src}->{dst} unreachable");
+                    assert!(r.hops.len() < t.n_nodes());
+                    assert_eq!(t.path_bw(src, dst).to_bits(), r.bottleneck().to_bits());
+                    // Hops chain: each link ends where the next begins.
+                    let mut at = src;
+                    for hop in &r.hops {
+                        let (a, b) = t.link_ends(hop.link);
+                        assert_eq!(a, at);
+                        assert!(hop.capacity > 0.0);
+                        at = b;
+                    }
+                    assert_eq!(at, dst);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topology_kind_builds_and_names() {
+        assert_eq!(TopologyKind::default(), TopologyKind::VdcStar);
+        let kinds = [
+            TopologyKind::VdcStar,
+            TopologyKind::Hierarchical,
+            TopologyKind::Federation {
+                core_gbps: 80.0,
+                regional_gbps: 40.0,
+                edge_gbps: 20.0,
+            },
+        ];
+        for k in kinds {
+            let t = k.build(NetCondition::Best, &WAN);
+            assert!(t.n_nodes() >= N_DTNS);
+            assert!(!k.name().is_empty());
+            // Clients are always nodes 1..=6.
+            for c in t.client_dtns() {
+                assert!(t.path_bw(SERVER, c) > 0.0);
+            }
+        }
     }
 }

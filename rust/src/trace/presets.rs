@@ -259,6 +259,54 @@ pub fn heavy() -> PresetConfig {
     p
 }
 
+/// Federation preset: the OOI instrument mix served to an OSDF-style
+/// federated user base (cf. arXiv:2105.00964's cache-sharing study and
+/// the OSDF operations paper) — open-science consumers are global, so
+/// the continent distribution is much flatter than OOI's US-centric
+/// mix.  Pair with `TopologyKind::Federation` (the `federation`
+/// experiment sweeps its tier-bandwidth ratios).
+pub fn federation() -> PresetConfig {
+    let mut p = ooi();
+    p.name = "FEDERATION";
+    p.duration_days = 4.0;
+    p.n_users = 600;
+    p.n_topics = 16;
+    p.continents = [
+        ContinentProfile {
+            continent: Continent::NorthAmerica,
+            user_frac: 0.24,
+            wan_mbps: 25.0,
+        },
+        ContinentProfile {
+            continent: Continent::Europe,
+            user_frac: 0.22,
+            wan_mbps: 18.0,
+        },
+        ContinentProfile {
+            continent: Continent::Asia,
+            user_frac: 0.22,
+            wan_mbps: 0.568,
+        },
+        ContinentProfile {
+            continent: Continent::SouthAmerica,
+            user_frac: 0.12,
+            wan_mbps: 2.3,
+        },
+        ContinentProfile {
+            continent: Continent::Africa,
+            user_frac: 0.10,
+            wan_mbps: 1.2,
+        },
+        ContinentProfile {
+            continent: Continent::Oceania,
+            user_frac: 0.10,
+            wan_mbps: 22.0,
+        },
+    ];
+    p.seed = 0xFED_0001;
+    p
+}
+
 /// Tiny preset for unit/integration tests: a few users, one day.
 pub fn tiny() -> PresetConfig {
     let mut p = ooi();
@@ -279,6 +327,7 @@ pub fn by_name(name: &str) -> Option<PresetConfig> {
         "ooi" => Some(ooi()),
         "gage" => Some(gage()),
         "heavy" => Some(heavy()),
+        "federation" => Some(federation()),
         "tiny" => Some(tiny()),
         _ => None,
     }
@@ -290,10 +339,22 @@ mod tests {
 
     #[test]
     fn continent_fracs_sum_to_one() {
-        for p in [ooi(), gage()] {
+        for p in [ooi(), gage(), federation()] {
             let sum: f64 = p.continents.iter().map(|c| c.user_frac).sum();
             assert!((sum - 1.0).abs() < 1e-9, "{}: {}", p.name, sum);
         }
+    }
+
+    #[test]
+    fn federation_preset_is_flatter_than_ooi() {
+        let max_frac = |p: &PresetConfig| {
+            p.continents
+                .iter()
+                .map(|c| c.user_frac)
+                .fold(0.0, f64::max)
+        };
+        assert!(max_frac(&federation()) < max_frac(&ooi()) / 2.0);
+        assert!(by_name("federation").is_some());
     }
 
     #[test]
