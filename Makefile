@@ -1,0 +1,18 @@
+# Build entry points that span the Python (Layer 1+2) and Rust
+# (Layer 3) halves of the stack.  The Rust crate builds and tests
+# without any of this (`cd rust && cargo build --release && cargo test`);
+# `make artifacts` is the optional one-time AOT step that lets the
+# PJRT runtime replace the pure-Rust prediction fallbacks.
+
+.PHONY: artifacts test bench
+
+# Lower the JAX/Pallas models to HLO text + manifest.json under
+# rust/artifacts/ (the runtime's default search path).
+artifacts:
+	cd python && python -m compile.aot --out ../rust/artifacts/model.hlo.txt
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo bench

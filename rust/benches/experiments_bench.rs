@@ -13,6 +13,7 @@ fn main() {
     b.warmup = Duration::from_millis(1);
     b.measure = Duration::from_millis(1);
     b.min_samples = 1;
+    b.min_warmup_iters = 1;
     println!("== experiments_bench (reduced scale) ==");
     let opts = ExpOptions {
         scale: 0.3,

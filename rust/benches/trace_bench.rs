@@ -1,0 +1,63 @@
+//! Trace-pipeline benchmark: materialized generation (collect every
+//! request into a sorted vector) vs the streaming arrival source
+//! (per-user lazy generators merged through the `(ts, UserId)` heap)
+//! at large user counts.
+//!
+//! Wall-clock is comparable by construction — the streaming path runs
+//! the identical synthesis, swapping the global sort for heap merges,
+//! and both sides pay the same calibration dry run — the difference is
+//! residency: the materialized path holds every request of the run at
+//! once, the streaming path one pending request per active user.
+//! `--quick` drops the population 10×.
+
+use obsd::trace::source::StreamingTrace;
+use obsd::trace::{generator, presets};
+use obsd::util::bench::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n_users = if quick { 10_000 } else { 100_000 };
+    let cfg = presets::scale(n_users);
+
+    // Generation at this scale is seconds-long; one warmup + one
+    // measured run per case.
+    let mut b = Bencher::new();
+    b.warmup = Duration::from_millis(1);
+    b.measure = Duration::from_millis(1);
+    b.min_samples = 1;
+    b.min_warmup_iters = 1;
+
+    println!("== trace_bench ({n_users} users, scale preset) ==");
+    let mut n_materialized = 0usize;
+    b.bench("generate/materialized", || {
+        let t = generator::generate(&cfg);
+        n_materialized = t.requests.len();
+        n_materialized
+    });
+    let mut n_streamed = 0usize;
+    let mut peak_active = 0usize;
+    b.bench("generate/streaming_drain", || {
+        let st = StreamingTrace::new(&cfg);
+        let mut src = st.source();
+        let mut n = 0usize;
+        peak_active = 0;
+        while src.next_request().is_some() {
+            n += 1;
+            peak_active = peak_active.max(src.active_users());
+        }
+        n_streamed = n;
+        n
+    });
+    assert_eq!(
+        n_materialized, n_streamed,
+        "streaming and materialized pipelines diverged"
+    );
+    println!(
+        "requests: {n_materialized} total; streaming peak residency: {peak_active} pending \
+         (one per active user) vs the full request vector"
+    );
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_trace.json", b.to_json()).ok();
+}

@@ -17,6 +17,7 @@
 //! replicates hot chunks to local data hubs.
 
 use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
 
 use crate::cache::network::CacheNetwork;
 use crate::cache::policy::PolicyKind;
@@ -32,7 +33,9 @@ use crate::prefetch::streaming::StreamRegistry;
 use crate::prefetch::{Action, Prediction, PrefetchModel, Strategy};
 use crate::simnet::topology::NetCondition;
 use crate::simnet::{EventQueue, FlowId, FlowSim, Pipe, Topology, TopologyKind, SERVER};
-use crate::trace::{StreamId, Trace, UserId};
+use crate::trace::presets::PresetConfig;
+use crate::trace::source::{ArrivalSource, StreamingTrace};
+use crate::trace::{Request, StreamId, Trace, UserId};
 
 /// Full configuration of one simulation run.
 #[derive(Debug, Clone)]
@@ -95,13 +98,66 @@ enum Event {
 }
 
 /// One step popped off the unified event spine: the three time sources
-/// (sorted trace arrivals, queued events, indexed flow completions)
+/// (time-ordered arrivals, queued events, indexed flow completions)
 /// merged under `f64::total_cmp`.  Ties resolve completion ≤ event ≤
 /// arrival, matching the historical loop so runs stay reproducible.
 enum Step {
     Completion(FlowId),
     Queued(Event),
-    Arrival(usize),
+    Arrival(usize, Request),
+}
+
+/// The arrival leg of the event spine: where demand requests come from.
+///
+/// `Slice` walks a materialized, time-sorted [`Trace`] request vector —
+/// the historical path, O(total requests) resident.  `Stream` peeks and
+/// pops the lazy [`ArrivalSource`] merge heap directly — O(active
+/// users) resident, which is what makes million-user sweeps fit in
+/// memory.  Both yield the identical `(index, Request)` sequence for
+/// the same preset and seed (pinned by parity tests).
+enum ArrivalLeg<'t> {
+    Slice {
+        reqs: &'t [Request],
+        next: usize,
+    },
+    Stream {
+        src: ArrivalSource<'t>,
+        next_idx: usize,
+        /// Traffic compression (`SimConfig::traffic_factor`), applied
+        /// per request exactly as `Trace::with_traffic_factor` does.
+        factor: f64,
+    },
+}
+
+impl ArrivalLeg<'_> {
+    fn peek_ts(&self) -> Option<f64> {
+        match self {
+            ArrivalLeg::Slice { reqs, next } => reqs.get(*next).map(|r| r.ts),
+            // Same division `compress_time` performs on pop, so the
+            // peeked time is bit-identical to the popped request's.
+            ArrivalLeg::Stream { src, factor, .. } => src
+                .peek_ts()
+                .map(|t| if *factor != 1.0 { t / *factor } else { t }),
+        }
+    }
+
+    fn pop(&mut self) -> Option<(usize, Request)> {
+        match self {
+            ArrivalLeg::Slice { reqs, next } => {
+                let r = reqs.get(*next)?.clone();
+                *next += 1;
+                Some((*next - 1, r))
+            }
+            ArrivalLeg::Stream { src, next_idx, factor } => {
+                let mut r = src.next_request()?;
+                if *factor != 1.0 {
+                    r.compress_time(*factor);
+                }
+                *next_idx += 1;
+                Some((*next_idx - 1, r))
+            }
+        }
+    }
 }
 
 /// Why a flow is in the air.
@@ -119,7 +175,36 @@ enum FlowCtx {
     Replicate { dest: usize, chunks: Vec<ChunkKey> },
 }
 
-/// Per-demand-request progress.
+/// Multiplicative hasher for the dense sequential arrival indices
+/// keying `req_states` — that map is consulted several times per chunk
+/// on the simulator's hottest path, where SipHash would be pure
+/// overhead.  Deterministic by construction (no per-process seeding).
+#[derive(Default)]
+struct SeqHasher(u64);
+
+impl Hasher for SeqHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        // FNV-1a fallback for non-integer keys (unused in practice).
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01B3);
+        }
+    }
+
+    fn write_usize(&mut self, i: usize) {
+        // Fibonacci multiplicative spread of sequential indices.
+        self.0 = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    }
+}
+
+type ReqStateMap = HashMap<usize, ReqState, BuildHasherDefault<SeqHasher>>;
+
+/// Per-demand-request progress.  States are created on arrival and
+/// dropped on finalize, so the resident set tracks requests *in
+/// flight*, not the whole trace (`RunMetrics::peak_req_states`).
 struct ReqState {
     submitted: f64,
     bytes: f64,
@@ -128,7 +213,6 @@ struct ReqState {
     any_peer: bool,
     local_cache_bytes: f64,
     local_prefetch_bytes: f64,
-    done: bool,
 }
 
 /// Observatory task payload: which request part to ship where.
@@ -148,17 +232,23 @@ pub struct Framework<'t> {
     topology: Topology,
     caches: CacheNetwork,
     obs: crate::coordinator::server::Observatory<usize>,
-    obs_tasks: Vec<ObsTask>,
+    /// Slab of observatory tasks: slots are recycled through
+    /// `free_tasks` once served, so residency tracks the queue depth
+    /// rather than the run's task history.
+    obs_tasks: Vec<Option<ObsTask>>,
+    free_tasks: Vec<usize>,
     model: Option<Box<dyn PrefetchModel>>,
     placement: Placement,
     registry: StreamRegistry,
     flows: FlowSim,
     flow_ctx: HashMap<FlowId, FlowCtx>,
     events: EventQueue<Event>,
-    /// Cursor into the time-sorted trace requests (arrivals are merged
-    /// into the event loop directly instead of heaping ~10^6 entries).
-    next_arrival: usize,
-    req_states: Vec<ReqState>,
+    /// Arrival leg of the event spine (materialized slice or streaming
+    /// source) — arrivals merge into the loop directly instead of
+    /// heaping ~10^6 entries.
+    arrivals: ArrivalLeg<'t>,
+    /// Live per-request progress, keyed by arrival index.
+    req_states: ReqStateMap,
     /// Chunks with an in-flight transfer toward a DTN (dedup).
     inflight: HashSet<(usize, ChunkKey)>,
     pub metrics: RunMetrics,
@@ -188,16 +278,32 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> RunMetrics {
     )
 }
 
+/// Run one simulation over the **streaming** arrival source: demand is
+/// pulled lazily from per-user generators instead of a materialized
+/// request vector, so memory scales with the number of users *active at
+/// once* rather than the total request count — the entry point for
+/// million-user sweeps (`repro experiment --id scale`).
+///
+/// For any preset and seed this is bit-identical to generating the
+/// trace and calling [`run`] (pinned by parity tests).
+pub fn run_streaming(preset: &PresetConfig, cfg: &SimConfig) -> RunMetrics {
+    run_streaming_with_backends(
+        preset,
+        cfg,
+        Box::new(RustArima::new()),
+        Box::new(RustKmeans),
+    )
+}
+
 /// Run one simulation with explicit predictor / clustering backends
 /// (the AOT PJRT engine plugs in here — see `rust/tests/` and
-/// `examples/ooi_e2e.rs`).
+/// `rust/examples/ooi_e2e.rs`).
 pub fn run_with_backends(
     trace: &Trace,
     cfg: &SimConfig,
     predictor: Box<dyn GapPredictor>,
     cluster: Box<dyn ClusterBackend>,
 ) -> RunMetrics {
-    let wall_start = std::time::Instant::now();
     let scaled;
     let trace = if (cfg.traffic_factor - 1.0).abs() > 1e-9 {
         scaled = trace.with_traffic_factor(cfg.traffic_factor);
@@ -205,6 +311,46 @@ pub fn run_with_backends(
     } else {
         trace
     };
+    let arrivals = ArrivalLeg::Slice {
+        reqs: &trace.requests,
+        next: 0,
+    };
+    run_inner(trace, arrivals, cfg, predictor, cluster)
+}
+
+/// [`run_streaming`] with explicit prediction backends.
+pub fn run_streaming_with_backends(
+    preset: &PresetConfig,
+    cfg: &SimConfig,
+    predictor: Box<dyn GapPredictor>,
+    cluster: Box<dyn ClusterBackend>,
+) -> RunMetrics {
+    let st = StreamingTrace::new(preset);
+    let scaled;
+    let (world, factor) = if (cfg.traffic_factor - 1.0).abs() > 1e-9 {
+        // Scale the world (rates, chunking, duration) here; the arrival
+        // leg compresses each request's timeline as it is pulled.
+        scaled = st.world.with_traffic_factor(cfg.traffic_factor);
+        (&scaled, cfg.traffic_factor)
+    } else {
+        (&st.world, 1.0)
+    };
+    let arrivals = ArrivalLeg::Stream {
+        src: st.source(),
+        next_idx: 0,
+        factor,
+    };
+    run_inner(world, arrivals, cfg, predictor, cluster)
+}
+
+fn run_inner<'t>(
+    trace: &'t Trace,
+    arrivals: ArrivalLeg<'t>,
+    cfg: &SimConfig,
+    predictor: Box<dyn GapPredictor>,
+    cluster: Box<dyn ClusterBackend>,
+) -> RunMetrics {
+    let wall_start = std::time::Instant::now();
     let wan: [f64; 6] = continent_wan(trace);
     let topology = cfg.topology.build(cfg.net, &wan);
     let n_nodes = topology.n_nodes();
@@ -221,14 +367,15 @@ pub fn run_with_backends(
             cfg.obs_io_bps,
         ),
         obs_tasks: Vec::new(),
+        free_tasks: Vec::new(),
         model: build_model(cfg.strategy, predictor),
         placement: Placement::new(cluster, 16, cfg.seed ^ 0x9E37),
         registry: StreamRegistry::new(),
         flows: FlowSim::new(),
         flow_ctx: HashMap::new(),
         events: EventQueue::new(),
-        next_arrival: 0,
-        req_states: Vec::with_capacity(trace.requests.len()),
+        arrivals,
+        req_states: ReqStateMap::default(),
         inflight: HashSet::new(),
         metrics: RunMetrics::new(),
         now: 0.0,
@@ -275,19 +422,6 @@ fn continent_wan(trace: &Trace) -> [f64; 6] {
 
 impl<'t> Framework<'t> {
     fn run_loop(&mut self) {
-        // Request states (arrivals are merged from the sorted trace).
-        for r in self.trace.requests.iter() {
-            self.req_states.push(ReqState {
-                submitted: r.ts,
-                bytes: 0.0,
-                pending_parts: 0,
-                any_origin: false,
-                any_peer: false,
-                local_cache_bytes: 0.0,
-                local_prefetch_bytes: 0.0,
-                done: false,
-            });
-        }
         if self.model.is_some() {
             let mut t = self.cfg.rebuild_every;
             while t < self.trace.duration {
@@ -311,8 +445,8 @@ impl<'t> Framework<'t> {
             match step {
                 Step::Completion(fid) => self.on_flow_complete(fid),
                 Step::Queued(ev) => self.on_event(ev),
-                Step::Arrival(i) => {
-                    self.on_arrival(i);
+                Step::Arrival(i, req) => {
+                    self.on_arrival(i, req);
                     self.drain_arrival_burst(t);
                 }
             }
@@ -328,12 +462,7 @@ impl<'t> Framework<'t> {
     /// the simulation has fully drained (no arrival, no queued event,
     /// and no flow that can ever finish).
     fn next_step(&mut self) -> Option<(f64, Step)> {
-        let t_arr = self
-            .trace
-            .requests
-            .get(self.next_arrival)
-            .map(|r| r.ts)
-            .unwrap_or(f64::INFINITY);
+        let t_arr = self.arrivals.peek_ts().unwrap_or(f64::INFINITY);
         let t_event = self.events.peek_time().unwrap_or(f64::INFINITY);
         let flow = self.flows.next_completion();
         let t_flow = flow.map(|(t, _)| t).unwrap_or(f64::INFINITY);
@@ -349,9 +478,8 @@ impl<'t> Framework<'t> {
             let (t, ev) = self.events.pop().unwrap();
             Some((t, Step::Queued(ev)))
         } else {
-            let i = self.next_arrival;
-            self.next_arrival += 1;
-            Some((t_arr, Step::Arrival(i)))
+            let (i, req) = self.arrivals.pop().expect("peeked arrival");
+            Some((t_arr, Step::Arrival(i, req)))
         }
     }
 
@@ -363,8 +491,8 @@ impl<'t> Framework<'t> {
     /// `t`, so completion ordering is unaffected.
     fn drain_arrival_burst(&mut self, t: f64) {
         loop {
-            match self.trace.requests.get(self.next_arrival) {
-                Some(r) if r.ts == t => {}
+            match self.arrivals.peek_ts() {
+                Some(ts) if ts == t => {}
                 _ => break,
             }
             if let Some(te) = self.events.peek_time() {
@@ -372,9 +500,8 @@ impl<'t> Framework<'t> {
                     break;
                 }
             }
-            let i = self.next_arrival;
-            self.next_arrival += 1;
-            self.on_arrival(i);
+            let (i, req) = self.arrivals.pop().expect("peeked arrival");
+            self.on_arrival(i, req);
         }
     }
 
@@ -396,9 +523,22 @@ impl<'t> Framework<'t> {
         }
     }
 
-    fn on_arrival(&mut self, i: usize) {
-        let req = self.trace.requests[i].clone();
+    fn on_arrival(&mut self, i: usize, req: Request) {
         let user_dtn = self.trace.user(req.user).dtn();
+        self.req_states.insert(
+            i,
+            ReqState {
+                submitted: req.ts,
+                bytes: 0.0,
+                pending_parts: 0,
+                any_origin: false,
+                any_peer: false,
+                local_cache_bytes: 0.0,
+                local_prefetch_bytes: 0.0,
+            },
+        );
+        let live = self.req_states.len() as u64;
+        self.metrics.peak_req_states = self.metrics.peak_req_states.max(live);
 
         // Feed the engines (all framework strategies).
         if self.cfg.strategy.uses_prefetch() {
@@ -417,10 +557,11 @@ impl<'t> Framework<'t> {
             // data ships over the user's commodity WAN — today's
             // delivery practice, no publication awareness at the edge.
             let bytes = req.bytes(&self.trace.streams);
-            self.req_states[i].bytes = bytes;
+            self.rstate(i).bytes = bytes;
             self.submit_obs_task(i, user_dtn, Vec::new(), bytes, Some(user_dtn));
-            self.req_states[i].pending_parts = 1;
-            self.req_states[i].any_origin = true;
+            let st = self.rstate(i);
+            st.pending_parts = 1;
+            st.any_origin = true;
             return;
         }
 
@@ -466,7 +607,7 @@ impl<'t> Framework<'t> {
             0.0
         };
         bytes += tail_bytes;
-        self.req_states[i].bytes = bytes;
+        self.rstate(i).bytes = bytes;
         if chunks.is_empty() && tail_bytes == 0.0 {
             // Nothing published in range and no tail: catalog answers
             // locally ("no new data yet").
@@ -484,9 +625,9 @@ impl<'t> Framework<'t> {
             if let Some(origin) = self.caches.access(user_dtn, &key) {
                 match origin {
                     Origin::Prefetch | Origin::Stream => {
-                        self.req_states[i].local_prefetch_bytes += per_chunk
+                        self.rstate(i).local_prefetch_bytes += per_chunk
                     }
-                    _ => self.req_states[i].local_cache_bytes += per_chunk,
+                    _ => self.rstate(i).local_cache_bytes += per_chunk,
                 }
                 self.metrics.cache_bytes += per_chunk;
                 continue;
@@ -520,7 +661,7 @@ impl<'t> Framework<'t> {
 
         for (peer, keys) in peer_parts {
             let part_bytes = per_chunk * keys.len() as f64;
-            self.req_states[i].any_peer = true;
+            self.rstate(i).any_peer = true;
             self.metrics.cache_bytes += part_bytes;
             let pipe = self.dmz_pipe(peer, user_dtn);
             let fid = self.flows.start(self.now, part_bytes, pipe);
@@ -536,11 +677,11 @@ impl<'t> Framework<'t> {
         }
         if !missing.is_empty() || tail_bytes > 0.0 {
             let part_bytes = per_chunk * missing.len() as f64 + tail_bytes;
-            self.req_states[i].any_origin = true;
+            self.rstate(i).any_origin = true;
             self.submit_obs_task(i, user_dtn, missing, part_bytes, None);
             parts += 1;
         }
-        self.req_states[i].pending_parts = parts;
+        self.rstate(i).pending_parts = parts;
         if parts == 0 {
             // Fully local: served at the user edge.
             self.finalize_request(i);
@@ -577,6 +718,11 @@ impl<'t> Framework<'t> {
         t_peer < t_obs
     }
 
+    /// Live request state for arrival `i` (must not be finalized yet).
+    fn rstate(&mut self, i: usize) -> &mut ReqState {
+        self.req_states.get_mut(&i).expect("live request state")
+    }
+
     fn submit_obs_task(
         &mut self,
         req: usize,
@@ -585,14 +731,23 @@ impl<'t> Framework<'t> {
         bytes: f64,
         wan_dtn: Option<usize>,
     ) {
-        let task_id = self.obs_tasks.len();
-        self.obs_tasks.push(ObsTask {
+        let task = ObsTask {
             req,
             dest,
             chunks,
             bytes,
             wan_dtn,
-        });
+        };
+        let task_id = match self.free_tasks.pop() {
+            Some(id) => {
+                self.obs_tasks[id] = Some(task);
+                id
+            }
+            None => {
+                self.obs_tasks.push(Some(task));
+                self.obs_tasks.len() - 1
+            }
+        };
         self.obs.submit(task_id, bytes, self.now);
         self.try_start_service();
     }
@@ -611,9 +766,15 @@ impl<'t> Framework<'t> {
 
     fn on_service_done(&mut self, task: usize) {
         self.obs.release();
-        let t = &self.obs_tasks[task];
-        let (req, dest, bytes, wan) = (t.req, t.dest, t.bytes, t.wan_dtn);
-        let chunks = t.chunks.clone();
+        let t = self.obs_tasks[task].take().expect("live obs task");
+        self.free_tasks.push(task);
+        let ObsTask {
+            req,
+            dest,
+            chunks,
+            bytes,
+            wan_dtn: wan,
+        } = t;
         self.metrics.origin_bytes += bytes;
         let pipe = match wan {
             // NoCache: commodity WAN, dedicated per-flow rate.
@@ -835,17 +996,22 @@ impl<'t> Framework<'t> {
     }
 
     fn part_done(&mut self, req: usize) {
-        let st = &mut self.req_states[req];
+        let Some(st) = self.req_states.get_mut(&req) else {
+            return; // already finalized
+        };
         st.pending_parts = st.pending_parts.saturating_sub(1);
-        if st.pending_parts == 0 && !st.done {
+        if st.pending_parts == 0 {
             self.finalize_request(req);
         }
     }
 
     fn finalize_request(&mut self, req: usize) {
+        // Removing the state marks the request done and releases its
+        // residency (the peak is what the scale sweep reports).
+        let Some(st) = self.req_states.remove(&req) else {
+            return; // already finalized
+        };
         let user_edge = self.topology.user_edge();
-        let st = &mut self.req_states[req];
-        st.done = true;
         // Final hop: DTN → user at the 100 Gbps edge (or already included
         // for NoCache, where the WAN flow ends at the user).
         let edge_time = if self.cfg.strategy.uses_cache() {
@@ -1022,5 +1188,138 @@ mod tests {
         assert_eq!(a.requests_total, b.requests_total);
         assert!((a.throughput.mean() - b.throughput.mean()).abs() < 1e-9);
         assert!((a.origin_bytes - b.origin_bytes).abs() < 1e-9);
+    }
+
+    /// Bit-exact `RunMetrics` equality (everything but wall-clock).
+    fn assert_metrics_eq(a: &RunMetrics, b: &RunMetrics, label: &str) {
+        let counters = [
+            ("requests_total", a.requests_total, b.requests_total),
+            (
+                "requests_to_observatory",
+                a.requests_to_observatory,
+                b.requests_to_observatory,
+            ),
+            ("served_local_cache", a.served_local_cache, b.served_local_cache),
+            (
+                "served_local_prefetch",
+                a.served_local_prefetch,
+                b.served_local_prefetch,
+            ),
+            ("served_peer", a.served_peer, b.served_peer),
+            ("peak_flows", a.peak_flows, b.peak_flows),
+            ("peak_req_states", a.peak_req_states, b.peak_req_states),
+            ("throughput.count", a.throughput.count, b.throughput.count),
+            ("latency.count", a.latency.count, b.latency.count),
+        ];
+        for (name, x, y) in counters {
+            assert_eq!(x, y, "{label}: {name}");
+        }
+        let floats = [
+            ("origin_bytes", a.origin_bytes, b.origin_bytes),
+            ("cache_bytes", a.cache_bytes, b.cache_bytes),
+            ("placement_bytes", a.placement_bytes, b.placement_bytes),
+            ("sum_bytes", a.sum_bytes, b.sum_bytes),
+            ("sum_elapsed", a.sum_elapsed, b.sum_elapsed),
+            ("recall", a.recall, b.recall),
+            ("throughput.sum", a.throughput.sum, b.throughput.sum),
+            ("latency.sum", a.latency.sum, b.latency.sum),
+            ("peer_throughput.sum", a.peer_throughput.sum, b.peer_throughput.sum),
+        ];
+        for (name, x, y) in floats {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}: {name}");
+        }
+        assert_eq!(a.interior_util.len(), b.interior_util.len(), "{label}: tiers");
+        for (x, y) in a.interior_util.iter().zip(&b.interior_util) {
+            assert_eq!(x.tier, y.tier, "{label}: tier label");
+            assert_eq!(
+                x.carried_bytes.to_bits(),
+                y.carried_bytes.to_bits(),
+                "{label}: carried {} {}->{}",
+                x.tier,
+                x.from,
+                x.to
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_run_matches_materialized_run() {
+        // The tentpole parity pin: the streaming arrival leg and the
+        // materialized trace produce bit-identical metrics for the same
+        // preset + seed, across strategies and topologies.
+        let mut preset = presets::tiny();
+        preset.duration_days = 2.0;
+        let trace = generator::generate(&preset);
+        let federation = TopologyKind::Federation {
+            core_gbps: 40.0,
+            regional_gbps: 20.0,
+            edge_gbps: 10.0,
+        };
+        for (strategy, topology) in [
+            (Strategy::NoCache, TopologyKind::VdcStar),
+            (Strategy::Hpm, TopologyKind::VdcStar),
+            (Strategy::CacheOnly, federation),
+        ] {
+            let cfg = SimConfig {
+                strategy,
+                cache_bytes: 4 << 30,
+                topology,
+                rebuild_every: 6.0 * 3600.0,
+                recluster_every: 12.0 * 3600.0,
+                ..Default::default()
+            };
+            let materialized = run(&trace, &cfg);
+            let streamed = run_streaming(&preset, &cfg);
+            assert_metrics_eq(
+                &materialized,
+                &streamed,
+                &format!("{} on {}", strategy.name(), topology.name()),
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_run_matches_materialized_under_traffic_factor() {
+        let mut preset = presets::tiny();
+        preset.duration_days = 1.0;
+        let trace = generator::generate(&preset);
+        let cfg = SimConfig {
+            strategy: Strategy::CacheOnly,
+            cache_bytes: 2 << 30,
+            traffic_factor: 4.0,
+            ..Default::default()
+        };
+        let materialized = run(&trace, &cfg);
+        let streamed = run_streaming(&preset, &cfg);
+        assert_metrics_eq(&materialized, &streamed, "traffic_factor=4");
+    }
+
+    #[test]
+    fn streaming_keeps_request_state_sparse() {
+        // The memory claim behind the scale sweep: live request state
+        // tracks requests in flight, not the trace size.
+        let preset = presets::scale(2_000);
+        let cfg = SimConfig {
+            strategy: Strategy::CacheOnly,
+            cache_bytes: 4 << 30,
+            obs_overhead: 0.02,
+            obs_io_bps: 1e9,
+            ..Default::default()
+        };
+        let m = run_streaming(&preset, &cfg);
+        let trace = generator::generate(&preset);
+        assert_eq!(
+            m.requests_total as usize,
+            trace.requests.len(),
+            "streaming run finalized every generated request"
+        );
+        assert!(m.requests_total > 500, "scale(2000) too small: {}", m.requests_total);
+        assert!(m.peak_req_states >= 1);
+        assert!(
+            m.peak_req_states < m.requests_total / 2,
+            "peak resident request state {} not sparse vs {} total",
+            m.peak_req_states,
+            m.requests_total
+        );
     }
 }

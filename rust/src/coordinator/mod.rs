@@ -15,4 +15,4 @@
 pub mod framework;
 pub mod server;
 
-pub use framework::{run, Framework, SimConfig};
+pub use framework::{run, run_streaming, Framework, SimConfig};

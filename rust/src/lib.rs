@@ -17,7 +17,8 @@
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! * [`trace`] — observatory data model, synthetic OOI/GAGE trace
-//!   generators, request classification (paper §III).
+//!   generators, the streaming per-user arrival source
+//!   ([`trace::source`]), request classification (paper §III).
 //! * [`cache`] — chunked cache stores, eviction policies, the
 //!   distributed cache network (§IV-C).
 //! * [`simnet`] — 7-DTN VDC topology, fluid-flow transfers,

@@ -17,7 +17,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use obsd::cache::policy::PolicyKind;
-use obsd::coordinator::{run, SimConfig};
+use obsd::coordinator::{run, run_streaming, SimConfig};
 use obsd::experiments::{self, ExpOptions};
 use obsd::prefetch::Strategy;
 use obsd::simnet::NetCondition;
@@ -27,16 +27,22 @@ const USAGE: &str = "\
 repro — push-based data delivery framework (Qin et al. 2020 reproduction)
 
 USAGE:
-  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|policies|federation|all>
+  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|scale|policies|federation|all>
                    [--scale F] [--days F] [--out DIR] [--quick] [--seed N]
   repro analyze [--scale F]
-  repro simulate --observatory <ooi|gage|heavy|federation|tiny> [--strategy S] [--policy P]
+  repro simulate --observatory <ooi|gage|heavy|federation|scale|tiny> [--strategy S] [--policy P]
                  [--cache-gb F] [--net best|medium|worst] [--traffic F]
                  [--topology vdc|hierarchical|federation]
+                 [--users N] [--streaming]
                  [--no-placement] [--scale F] [--seed N]
   repro generate-trace --observatory <ooi|gage> [--scale F] [--out FILE]
   repro runtime-check [--artifacts DIR]
   repro help
+
+`--users N` overrides the preset's user population; `--streaming` runs
+the simulation over the lazy arrival source (O(active-users) memory —
+required for million-user populations) instead of materializing the
+trace first.  Both paths are bit-identical for the same seed.
 ";
 
 fn main() {
@@ -56,7 +62,7 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
             bail!("unexpected argument '{a}' (flags are --name value)");
         };
         // Boolean flags.
-        if matches!(key, "quick" | "no-placement") {
+        if matches!(key, "quick" | "no-placement" | "streaming") {
             flags.insert(key.to_string(), "true".to_string());
             i += 1;
             continue;
@@ -143,9 +149,13 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let obs = flags
         .get("observatory")
         .context("--observatory is required")?;
-    let mut preset = presets::by_name(obs)
-        .with_context(|| format!("unknown observatory '{obs}' (ooi|gage|heavy|federation|tiny)"))?;
+    let mut preset = presets::by_name(obs).with_context(|| {
+        format!("unknown observatory '{obs}' (ooi|gage|heavy|federation|scale|tiny)")
+    })?;
     preset.scale *= get_f64(flags, "scale", 1.0)?;
+    if let Some(users) = flags.get("users") {
+        preset.n_users = users.parse().context("--users must be an integer")?;
+    }
     if let Some(seed) = flags.get("seed") {
         preset.seed = seed.parse().context("--seed must be an integer")?;
     }
@@ -176,17 +186,30 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         placement: !flags.contains_key("no-placement"),
         ..Default::default()
     };
-    eprintln!("generating {obs} trace ...");
-    let trace = generator::generate(&preset);
-    eprintln!(
-        "simulating {} requests, strategy={}, policy={}, cache={}, net={} ...",
-        trace.requests.len(),
-        strategy.name(),
-        policy.name(),
-        obsd::util::fmt_bytes(cfg.cache_bytes as f64),
-        net.name()
-    );
-    let m = run(&trace, &cfg);
+    let m = if flags.contains_key("streaming") {
+        let (hu, r, t, o) = preset.user_counts();
+        eprintln!(
+            "streaming {} users ({obs}), strategy={}, policy={}, cache={}, net={} ...",
+            hu + r + t + o,
+            strategy.name(),
+            policy.name(),
+            obsd::util::fmt_bytes(cfg.cache_bytes as f64),
+            net.name()
+        );
+        run_streaming(&preset, &cfg)
+    } else {
+        eprintln!("generating {obs} trace ...");
+        let trace = generator::generate(&preset);
+        eprintln!(
+            "simulating {} requests, strategy={}, policy={}, cache={}, net={} ...",
+            trace.requests.len(),
+            strategy.name(),
+            policy.name(),
+            obsd::util::fmt_bytes(cfg.cache_bytes as f64),
+            net.name()
+        );
+        run(&trace, &cfg)
+    };
     println!("requests            {}", m.requests_total);
     println!("throughput (mean)   {:.2} Mbps", m.throughput_mbps());
     println!("throughput (volume) {:.2} Mbps", m.agg_throughput_mbps());
@@ -201,6 +224,8 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         p * 100.0
     );
     println!("recall              {:.4}", m.recall);
+    println!("peak req-state      {}", m.peak_req_states);
+    println!("peak flows          {}", m.peak_flows);
     for u in &m.interior_util {
         println!(
             "interior {:<9} {}->{}  util {:.4}  carried {}",

@@ -73,6 +73,11 @@ pub struct RunMetrics {
     /// Peak concurrent transfers in flight (scheduler load indicator;
     /// the traffic-sweep experiment reports it alongside wall-clock).
     pub peak_flows: u64,
+    /// Peak live per-request states in the coordinator — requests
+    /// arrived but not yet finalized.  With the streaming arrival
+    /// source this is the resident demand footprint of a run (the
+    /// scale sweep reports it against the total request count).
+    pub peak_req_states: u64,
     /// Interior-link utilization per labeled tier link (empty on the
     /// star; populated for hierarchical/federation topologies).
     pub interior_util: Vec<TierUtil>,

@@ -3,7 +3,7 @@
 //! [`EventQueue`] is a time-ordered priority queue with FIFO tie-break
 //! (stable ordering makes simulations reproducible).  The coordinator's
 //! unified event spine merges this queue with the indexed
-//! [`FlowSim::next_completion`] under `f64::total_cmp` ordering
+//! [`crate::simnet::FlowSim::next_completion`] under `f64::total_cmp` ordering
 //! (transfer completions are dynamic — fair-share rates change as flows
 //! churn — so they live in the flow simulator's own completion index,
 //! not here).

@@ -546,8 +546,8 @@ impl FlowSim {
     /// routed flow from scratch (global water-filling over all links).
     /// The incremental per-component planner must agree with this
     /// bit-for-bit — rates depend only on a component's membership and
-    /// capacities, and both sides share
-    /// [`FlowSim::progressive_fill`]'s deterministic freeze order.
+    /// capacities, and both sides share `progressive_fill`'s
+    /// deterministic freeze order.
     pub fn max_min_oracle(&mut self) -> Vec<(FlowId, f64)> {
         self.flush();
         let all_links: Vec<LinkId> = self.links.keys().copied().collect();

@@ -16,376 +16,35 @@
 //!
 //! Human per-request observation ranges are *calibrated* so the total
 //! human volume share matches Table I's ≈10%.
+//!
+//! All four phases live in [`super::source`]: phases 1-2 run eagerly,
+//! phases 3-4 are lazy per-user generators merged in `(ts, UserId)`
+//! order under `f64::total_cmp` (the crate-wide total-order policy —
+//! the old materialize-then-sort pipeline ordered by `partial_cmp` on
+//! the timestamp alone).  [`generate`] is the materialized wrapper:
+//! it collects the streaming source into the request vector, so the
+//! two pipelines are bit-exact by construction.
 
 use crate::trace::presets::PresetConfig;
-use crate::trace::{
-    Continent, Request, Site, SiteId, Stream, StreamId, Trace, User, UserId, UserKind,
-};
-use crate::util::rng::Rng;
+use crate::trace::source::StreamingTrace;
+use crate::trace::Trace;
 
-/// A research topic: a region of sites plus a set of instrument types,
-/// shared across human users to create mineable association patterns.
-#[derive(Debug, Clone)]
-struct Topic {
-    center_site: usize,
-    radius: f64,
-    instrument_types: Vec<u32>,
-}
-
-/// Per-user program-behaviour parameters (ground truth).
-#[derive(Debug, Clone)]
-struct ProgramProfile {
-    period: f64,
-    window: f64,
-    phase: f64,
-    streams: Vec<StreamId>,
-}
-
-/// Generate a complete trace from a preset.
+/// Generate a complete materialized trace from a preset by draining the
+/// streaming arrival source.
 pub fn generate(cfg: &PresetConfig) -> Trace {
-    let mut rng = Rng::new(cfg.seed);
-    let duration = cfg.duration_secs();
-
-    // ---- Phase 1: geography ------------------------------------------------
-    let sites = gen_sites(cfg, &mut rng);
-    let streams = gen_streams(cfg, &sites, &mut rng);
-    assert!(!streams.is_empty(), "preset produced no streams");
-
-    // Index: site -> streams, instrument_type -> streams.
-    let mut by_site: Vec<Vec<usize>> = vec![Vec::new(); sites.len()];
-    for (i, s) in streams.iter().enumerate() {
-        by_site[s.site.0 as usize].push(i);
-    }
-
-    // ---- Phase 2: users ----------------------------------------------------
-    let (n_hu, n_reg, n_rt, n_ov) = cfg.user_counts();
-    let mut users = Vec::new();
-    let mut kinds = Vec::new();
-    for _ in 0..n_hu {
-        kinds.push(UserKind::Human);
-    }
-    for _ in 0..n_reg {
-        kinds.push(UserKind::ProgramRegular);
-    }
-    for _ in 0..n_rt {
-        kinds.push(UserKind::ProgramRealtime);
-    }
-    for _ in 0..n_ov {
-        kinds.push(UserKind::ProgramOverlapping);
-    }
-    rng.shuffle(&mut kinds);
-    for (i, kind) in kinds.iter().enumerate() {
-        let c = pick_continent(cfg, &mut rng);
-        let (cx, cy) = c.center();
-        users.push(User {
-            id: UserId(i as u32),
-            continent: c,
-            x: cx + rng.gauss(0.0, 8.0),
-            y: cy + rng.gauss(0.0, 5.0),
-            kind: *kind,
-        });
-    }
-
-    // ---- Phase 3+4: requests ----------------------------------------------
-    let topics = gen_topics(cfg, &sites, &mut rng);
-    let mut requests: Vec<Request> = Vec::new();
-
-    // Program users first (their volume determines the human calibration).
-    let mut program_bytes = 0.0;
-    for user in users.iter().filter(|u| u.kind.is_program()) {
-        let mut urng = rng.fork(user.id.0 as u64);
-        let profile = gen_program_profile(cfg, user.kind, &streams, &mut urng);
-        program_bytes += emit_program_requests(
-            user.id,
-            &profile,
-            user.kind == UserKind::ProgramRealtime,
-            cfg.chunk_secs,
-            duration,
-            &streams,
-            &mut urng,
-            &mut requests,
-        );
-    }
-
-    // Calibrate the human observation-range so HU volume hits Table I.
-    let hu_volume_target = program_bytes * (1.0 - cfg.pu_volume_frac) / cfg.pu_volume_frac;
-    let expected_hu_reqs = (n_hu as f64)
-        * cfg.human_sessions_per_day
-        * cfg.duration_days
-        * cfg.human_reqs_per_session;
-    let mean_rate = streams.iter().map(|s| s.byte_rate).sum::<f64>() / streams.len() as f64;
-    let human_range_secs =
-        (hu_volume_target / (expected_hu_reqs.max(1.0) * mean_rate)).clamp(60.0, 14.0 * 86_400.0);
-
-    for user in users.iter().filter(|u| !u.kind.is_program()) {
-        let mut urng = rng.fork(0x4855_0000 | user.id.0 as u64);
-        emit_human_requests(
-            cfg,
-            user.id,
-            duration,
-            human_range_secs,
-            &topics,
-            &sites,
-            &by_site,
-            &streams,
-            &mut urng,
-            &mut requests,
-        );
-    }
-
-    requests.sort_by(|a, b| a.ts.partial_cmp(&b.ts).unwrap());
-
-    let trace = Trace {
-        observatory: cfg.name.to_string(),
-        duration,
-        chunk_secs: cfg.chunk_secs,
-        sites,
-        streams,
-        users,
-        requests,
-    };
+    let st = StreamingTrace::new(cfg);
+    let requests = st.source().collect();
+    let mut trace = st.into_world();
+    trace.requests = requests;
     trace.validate();
     trace
-}
-
-fn pick_continent(cfg: &PresetConfig, rng: &mut Rng) -> Continent {
-    let weights: Vec<f64> = cfg.continents.iter().map(|c| c.user_frac).collect();
-    cfg.continents[rng.weighted(&weights)].continent
-}
-
-fn gen_sites(cfg: &PresetConfig, rng: &mut Rng) -> Vec<Site> {
-    // Jittered grid, so "nearby" has meaning for Fig. 4-style browsing.
-    let side = (cfg.n_sites as f64).sqrt().ceil() as usize;
-    let mut sites = Vec::with_capacity(cfg.n_sites);
-    for i in 0..cfg.n_sites {
-        let gx = (i % side) as f64;
-        let gy = (i / side) as f64;
-        sites.push(Site {
-            id: SiteId(i as u32),
-            x: gx * 10.0 + rng.range(-2.0, 2.0),
-            y: gy * 10.0 + rng.range(-2.0, 2.0),
-        });
-    }
-    sites
-}
-
-fn gen_streams(cfg: &PresetConfig, sites: &[Site], rng: &mut Rng) -> Vec<Stream> {
-    let mut streams = Vec::new();
-    for site in sites {
-        for ty in 0..cfg.n_instrument_types {
-            if rng.chance(cfg.deployment_density) {
-                streams.push(Stream {
-                    id: StreamId(streams.len() as u32),
-                    site: site.id,
-                    instrument_type: ty as u32,
-                    byte_rate: rng.log_normal(cfg.byte_rate_mu, cfg.byte_rate_sigma),
-                });
-            }
-        }
-    }
-    if streams.is_empty() {
-        // Degenerate density: guarantee at least one stream per site.
-        for site in sites {
-            streams.push(Stream {
-                id: StreamId(streams.len() as u32),
-                site: site.id,
-                instrument_type: 0,
-                byte_rate: rng.log_normal(cfg.byte_rate_mu, cfg.byte_rate_sigma),
-            });
-        }
-    }
-    streams
-}
-
-fn gen_topics(cfg: &PresetConfig, sites: &[Site], rng: &mut Rng) -> Vec<Topic> {
-    (0..cfg.n_topics)
-        .map(|_| {
-            let n_types = rng.int_range(2, 5.min(cfg.n_instrument_types) + 1);
-            let types = rng
-                .sample_indices(cfg.n_instrument_types, n_types)
-                .into_iter()
-                .map(|t| t as u32)
-                .collect();
-            Topic {
-                center_site: rng.below(sites.len()),
-                radius: rng.range(12.0, 30.0),
-                instrument_types: types,
-            }
-        })
-        .collect()
-}
-
-fn gen_program_profile(
-    cfg: &PresetConfig,
-    kind: UserKind,
-    streams: &[Stream],
-    rng: &mut Rng,
-) -> ProgramProfile {
-    // Zipf-popular stream choice: many programs monitor the same
-    // popular instruments, so fresh data fetched for one user's poll
-    // often serves another's (cross-user cache sharing).
-    let n_streams = rng.int_range(1, 4);
-    let mut stream_ids: Vec<StreamId> = Vec::with_capacity(n_streams);
-    while stream_ids.len() < n_streams {
-        let s = StreamId(rng.zipf(streams.len(), 1.1) as u32);
-        if !stream_ids.contains(&s) {
-            stream_ids.push(s);
-        }
-    }
-    let (period, window) = match kind {
-        UserKind::ProgramRegular => {
-            let p = cfg.regular_periods[rng.below(cfg.regular_periods.len())];
-            (p, p)
-        }
-        UserKind::ProgramRealtime => (cfg.realtime_period, cfg.realtime_period),
-        UserKind::ProgramOverlapping => {
-            let p = cfg.regular_periods[rng.below(cfg.regular_periods.len())];
-            // Window/period ratio centered on the preset's overlap factor
-            // (keeps Table II's ~90% duplicate share).
-            let k = (cfg.overlap_factor * rng.range(0.7, 1.3)).max(2.0);
-            (p, p * k)
-        }
-        UserKind::Human => unreachable!("human users use session synthesis"),
-    };
-    ProgramProfile {
-        period,
-        window,
-        phase: rng.range(0.0, period),
-        streams: stream_ids,
-    }
-}
-
-/// Emit the moving-window request sequence for one program user;
-/// returns the total bytes requested.
-fn emit_program_requests(
-    user: UserId,
-    profile: &ProgramProfile,
-    realtime: bool,
-    chunk_secs: f64,
-    duration: f64,
-    streams: &[Stream],
-    rng: &mut Rng,
-    out: &mut Vec<Request>,
-) -> f64 {
-    let mut bytes = 0.0;
-    let mut ts = profile.phase;
-    while ts < duration {
-        // Small submission jitter (cron drift, network delay) — this is
-        // exactly what the ARIMA predictor has to absorb (§IV-A2).
-        let jitter = rng.gauss(0.0, profile.period * 0.01);
-        let t = (ts + jitter).max(0.0).min(duration);
-        // Regular/overlapping scripts align with the observatory's
-        // publication cadence (§III-D: "users develop programs that
-        // download the most recently updated data at these regular
-        // intervals") — their window ends at the last published batch.
-        // Real-time monitors poll for the freshest samples regardless.
-        let end = if realtime {
-            t.max(1.0)
-        } else {
-            ((t / chunk_secs).floor() * chunk_secs).max(chunk_secs)
-        };
-        for sid in &profile.streams {
-            // Moving window ending at the data edge in observation time.
-            let range = crate::trace::TimeRange::new((end - profile.window).max(0.0), end);
-            if range.duration() <= 0.0 {
-                continue;
-            }
-            bytes += range.duration() * streams[sid.0 as usize].byte_rate;
-            out.push(Request {
-                user,
-                ts: t,
-                stream: *sid,
-                range,
-            });
-        }
-        ts += profile.period;
-    }
-    bytes
-}
-
-/// Emit topic-driven browsing sessions for one human user.
-#[allow(clippy::too_many_arguments)]
-fn emit_human_requests(
-    cfg: &PresetConfig,
-    user: UserId,
-    duration: f64,
-    range_secs: f64,
-    topics: &[Topic],
-    sites: &[Site],
-    by_site: &[Vec<usize>],
-    streams: &[Stream],
-    rng: &mut Rng,
-    out: &mut Vec<Request>,
-) {
-    // Each user sticks to 1-2 preferred topics (stable interests make
-    // the association rules mineable).
-    let n_fav = rng.int_range(1, 3);
-    let favs = rng.sample_indices(topics.len(), n_fav);
-    let session_rate = cfg.human_sessions_per_day / 86_400.0;
-    let mut t = rng.exp(session_rate);
-    while t < duration {
-        let topic = &topics[favs[rng.below(favs.len())]];
-        let center = &sites[topic.center_site];
-        // Sites within the topic radius, sorted by proximity — the
-        // "horizontal" correlation of Fig. 4.
-        let mut nearby: Vec<usize> = sites
-            .iter()
-            .filter(|s| {
-                let dx = s.x - center.x;
-                let dy = s.y - center.y;
-                (dx * dx + dy * dy).sqrt() <= topic.radius
-            })
-            .map(|s| s.id.0 as usize)
-            .collect();
-        if nearby.is_empty() {
-            nearby.push(topic.center_site);
-        }
-        let n_reqs = (rng.exp(1.0 / cfg.human_reqs_per_session).ceil() as usize).clamp(1, 40);
-        let mut session_t = t;
-        for _ in 0..n_reqs {
-            let site = nearby[rng.zipf(nearby.len(), 1.3)];
-            // Prefer the topic's instrument types at this site — the
-            // "vertical" correlation of Fig. 4.
-            let candidates: Vec<usize> = by_site[site]
-                .iter()
-                .copied()
-                .filter(|&si| topic.instrument_types.contains(&streams[si].instrument_type))
-                .collect();
-            let stream_idx = if !candidates.is_empty() {
-                candidates[rng.below(candidates.len())]
-            } else if !by_site[site].is_empty() {
-                by_site[site][rng.below(by_site[site].len())]
-            } else {
-                continue;
-            };
-            // Humans browse *recent* data most of the time.
-            let lookback = rng.exp(1.0 / (3.0 * 86_400.0)).min(session_t.max(60.0));
-            let end = (session_t - lookback).max(range_secs.min(session_t.max(60.0)));
-            let dur = (range_secs * rng.range(0.3, 2.0)).max(60.0);
-            let start = (end - dur).max(0.0);
-            if end <= start {
-                continue;
-            }
-            out.push(Request {
-                user,
-                ts: session_t,
-                stream: StreamId(stream_idx as u32),
-                range: crate::trace::TimeRange::new(start, end),
-            });
-            // Think time between clicks.
-            session_t += rng.exp(1.0 / 45.0);
-            if session_t >= duration {
-                break;
-            }
-        }
-        t += rng.exp(session_rate);
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::trace::presets;
+    use crate::trace::{presets, Request, Trace, UserKind};
+    use crate::util::prop;
 
     fn small_ooi() -> Trace {
         let mut cfg = presets::ooi();
@@ -412,6 +71,66 @@ mod tests {
             assert_eq!(x.ts, y.ts);
             assert_eq!(x.stream, y.stream);
         }
+    }
+
+    #[test]
+    fn prop_generation_is_deterministic() {
+        // Same preset + seed ⇒ identical streams, users and requests,
+        // across independent generator instantiations — the trust
+        // prerequisite for the streaming-vs-materialized parity tests.
+        prop::check("generator-determinism", |rng| {
+            let mut cfg = presets::tiny();
+            cfg.seed = rng.next_u64();
+            cfg.scale = rng.range(0.3, 1.2);
+            let a = generate(&cfg);
+            let b = generate(&cfg);
+            assert_eq!(a.streams.len(), b.streams.len());
+            for (s, t) in a.streams.iter().zip(&b.streams) {
+                assert_eq!(s.site, t.site);
+                assert_eq!(s.byte_rate.to_bits(), t.byte_rate.to_bits());
+            }
+            assert_eq!(a.users.len(), b.users.len());
+            for (u, v) in a.users.iter().zip(&b.users) {
+                assert_eq!(u.kind, v.kind);
+                assert_eq!(u.continent, v.continent);
+                assert_eq!(u.x.to_bits(), v.x.to_bits());
+            }
+            assert_eq!(a.requests.len(), b.requests.len());
+            for (x, y) in a.requests.iter().zip(&b.requests) {
+                assert_eq!(x.user, y.user);
+                assert_eq!(x.ts.to_bits(), y.ts.to_bits());
+                assert_eq!(x.stream, y.stream);
+                assert_eq!(x.range.start.to_bits(), y.range.start.to_bits());
+                assert_eq!(x.range.end.to_bits(), y.range.end.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn scale_grows_request_count() {
+        // The `scale` knob multiplies the user population; request
+        // counts must grow monotonically with it (the axis the scale
+        // sweep relies on).  Adjacent steps are 4× apart so the
+        // population effect dominates per-user variance (request count
+        // per program user varies ~3× with its drawn stream count):
+        // for this seed the counts are ≈7.3k / 19k / 65k, so each
+        // bound below holds with a 2×+ margin.
+        let counts: Vec<usize> = [0.5, 2.0, 8.0]
+            .iter()
+            .map(|&s| {
+                let mut cfg = presets::tiny();
+                cfg.scale = s;
+                generate(&cfg).requests.len()
+            })
+            .collect();
+        assert!(
+            counts[0] < counts[1] && counts[1] < counts[2],
+            "request counts not monotone in scale: {counts:?}"
+        );
+        assert!(
+            counts[2] > counts[0] * 4,
+            "16x more users grew the trace sublinearly: {counts:?}"
+        );
     }
 
     #[test]

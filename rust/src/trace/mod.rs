@@ -5,10 +5,17 @@
 //! DESIGN.md §2).  A [`Trace`] carries the full ground truth — streams,
 //! sites, users and a time-ordered request list — which both the
 //! analysis experiments (§III tables/figures) and the simulator consume.
+//!
+//! Demand is produced by the streaming arrival pipeline in [`source`]:
+//! per-user lazy request generators merged in `(ts, UserId)` order.
+//! [`generator::generate`] materializes that source into a [`Trace`]
+//! for the analysis experiments; the coordinator can also consume the
+//! source directly at O(active-users) memory for million-user sweeps.
 
 pub mod classifier;
 pub mod generator;
 pub mod presets;
+pub mod source;
 
 use crate::util::rng::Rng;
 
@@ -174,6 +181,16 @@ impl Request {
     pub fn bytes(&self, streams: &[Stream]) -> f64 {
         self.range.duration() * streams[self.stream.0 as usize].byte_rate
     }
+
+    /// Compress this request's timeline by `factor` (§V-A3) — the
+    /// per-request half of [`Trace::with_traffic_factor`], shared with
+    /// the coordinator's streaming arrival leg so the two paths cannot
+    /// drift.
+    pub fn compress_time(&mut self, factor: f64) {
+        self.ts /= factor;
+        self.range.start /= factor;
+        self.range.end /= factor;
+    }
 }
 
 /// A complete access trace plus the observatory ground truth.
@@ -240,9 +257,7 @@ impl Trace {
     pub fn with_traffic_factor(&self, factor: f64) -> Trace {
         let mut t = self.clone();
         for r in &mut t.requests {
-            r.ts /= factor;
-            r.range.start /= factor;
-            r.range.end /= factor;
+            r.compress_time(factor);
         }
         for s in &mut t.streams {
             s.byte_rate *= factor;

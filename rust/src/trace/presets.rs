@@ -307,6 +307,34 @@ pub fn federation() -> PresetConfig {
     p
 }
 
+/// Scale-sweep preset: an OOI-like instrument mix served to an
+/// arbitrarily large user population over a short window — the axis
+/// the streaming arrival source opens (`repro experiment --id scale`
+/// sweeps 1 k → 1 M users).
+///
+/// Versus OOI the program mix is shifted toward regular/overlapping
+/// pollers (realtime down to 3%): at millions of users a 60-second
+/// realtime fleet alone would dominate the request budget, and the
+/// publication-aligned pollers are the population whose cross-user
+/// cache sharing the sweep is probing.  Shares within the preset still
+/// track Table I (program users 13.3% of the population, ≈90% of
+/// volume by construction).
+pub fn scale(n_users: usize) -> PresetConfig {
+    let mut p = ooi();
+    p.name = "SCALE";
+    p.duration_days = 0.1; // ~2.4 h: wall-clock stays sweepable at 1 M users
+    p.n_users = n_users;
+    p.program_mix = ProgramMix {
+        regular: 0.62,
+        realtime: 0.03,
+        overlapping: 0.35,
+    };
+    p.regular_periods = &[600.0, 3_600.0, 7_200.0];
+    p.n_topics = 24;
+    p.seed = 0x5CA1_E001;
+    p
+}
+
 /// Tiny preset for unit/integration tests: a few users, one day.
 pub fn tiny() -> PresetConfig {
     let mut p = ooi();
@@ -328,6 +356,7 @@ pub fn by_name(name: &str) -> Option<PresetConfig> {
         "gage" => Some(gage()),
         "heavy" => Some(heavy()),
         "federation" => Some(federation()),
+        "scale" => Some(scale(100_000)),
         "tiny" => Some(tiny()),
         _ => None,
     }
@@ -408,7 +437,26 @@ mod tests {
         assert!(by_name("OOI").is_some());
         assert!(by_name("gage").is_some());
         assert!(by_name("heavy").is_some());
+        assert!(by_name("scale").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn scale_preset_parameterizes_population() {
+        for n in [1_000usize, 50_000, 1_000_000] {
+            let p = scale(n);
+            let (hu, r, t, o) = p.user_counts();
+            let total = hu + r + t + o;
+            // Rounding keeps the population within a whisker of n.
+            assert!(
+                (total as f64 - n as f64).abs() / n as f64 < 0.01,
+                "scale({n}) produced {total} users"
+            );
+            let m = p.program_mix;
+            assert!((m.regular + m.realtime + m.overlapping - 1.0).abs() < 1e-9);
+            let sum: f64 = p.continents.iter().map(|c| c.user_frac).sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -52,6 +52,11 @@ pub struct Bencher {
     pub warmup: Duration,
     pub measure: Duration,
     pub min_samples: usize,
+    /// Floor on warmup iterations.  The default (3) stabilizes
+    /// microbenchmarks; seconds-scale cases (whole experiments, large
+    /// trace generation) set 1 so a "single-shot" configuration really
+    /// runs the closure twice (one warmup + one sample), not four times.
+    pub min_warmup_iters: u64,
     results: Vec<Measurement>,
 }
 
@@ -77,6 +82,7 @@ impl Bencher {
                 Duration::from_millis(1500)
             },
             min_samples: 10,
+            min_warmup_iters: 3,
             results: Vec::new(),
         }
     }
@@ -87,7 +93,7 @@ impl Bencher {
         // Warmup + per-iteration estimate.
         let warm_start = Instant::now();
         let mut warm_iters = 0u64;
-        while warm_start.elapsed() < self.warmup || warm_iters < 3 {
+        while warm_start.elapsed() < self.warmup || warm_iters < self.min_warmup_iters.max(1) {
             std::hint::black_box(f());
             warm_iters += 1;
         }
@@ -119,7 +125,8 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
-    /// Like [`bench`] but annotates with elements/second throughput.
+    /// Like [`Bencher::bench`] but annotates with elements/second
+    /// throughput.
     pub fn bench_throughput<T>(
         &mut self,
         name: &str,
