@@ -4,15 +4,38 @@
 # `make artifacts` is the optional one-time AOT step that lets the
 # PJRT runtime replace the pure-Rust prediction fallbacks.
 
-.PHONY: artifacts test bench
+.PHONY: artifacts artifacts-quick test bench smoke
 
 # Lower the JAX/Pallas models to HLO text + manifest.json under
 # rust/artifacts/ (the runtime's default search path).
 artifacts:
 	cd python && python -m compile.aot --out ../rust/artifacts/model.hlo.txt
 
+# Quick mode for CI smoke runs: build the AOT artifacts when the JAX
+# stack is importable, skip gracefully otherwise (the runtime falls
+# back to the pure-Rust predictors either way).
+artifacts-quick:
+	@if python3 -c "import jax" 2>/dev/null; then \
+		$(MAKE) artifacts; \
+	else \
+		echo "artifacts-quick: jax unavailable, skipping AOT (pure-Rust fallback)"; \
+	fi
+
 test:
 	cd rust && cargo test -q
 
 bench:
 	cd rust && cargo bench
+
+# Scenario smoke (wired into CI): one preset and one non-preset axis
+# combination (markov + gdsf + federation + streaming) run end-to-end
+# with `--quick --json`; scripts/check_report.py asserts the RunReport
+# JSON parses with the expected keys.
+smoke: artifacts-quick
+	cd rust && cargo build --release
+	rust/target/release/repro simulate --observatory tiny --quick --json \
+		> /tmp/obsd_smoke_preset.json
+	rust/target/release/repro simulate --observatory tiny --quick --json \
+		--model markov --policy gdsf --topology federation --streaming \
+		> /tmp/obsd_smoke_combo.json
+	python3 scripts/check_report.py /tmp/obsd_smoke_preset.json /tmp/obsd_smoke_combo.json

@@ -3,8 +3,8 @@
 //! throughput target is ≥ 1 M simulated requests/minute (DESIGN.md §6).
 
 use obsd::cache::policy::PolicyKind;
-use obsd::coordinator::{run, SimConfig};
 use obsd::prefetch::Strategy;
+use obsd::scenario::{Runner, Scenario};
 use obsd::simnet::{EventQueue, FlowId, FlowSim, Hop, Pipe, Route};
 use obsd::trace::{generator, presets};
 use obsd::util::bench::Bencher;
@@ -149,18 +149,16 @@ fn main() {
     let mut cfg_t = presets::tiny();
     cfg_t.duration_days = 2.0;
     let trace = generator::generate(&cfg_t);
+    let runner = Runner::new();
     for strategy in [Strategy::CacheOnly, Strategy::Hpm] {
-        let cfg = SimConfig {
-            strategy,
-            policy: PolicyKind::Lru,
-            cache_bytes: 2 << 30,
-            ..Default::default()
-        };
+        let mut sc = Scenario::preset(strategy);
+        sc.policy = PolicyKind::Lru;
+        sc.cache_bytes = 2 << 30;
         b.bench_throughput(
             &format!("endtoend/{}", strategy.name().replace(' ', "")),
             trace.requests.len() as f64,
             "req",
-            || run(&trace, &cfg).requests_total,
+            || runner.run_trace(&trace, &sc).metrics.requests_total,
         );
     }
 

@@ -14,11 +14,10 @@
 //! ```
 
 use obsd::cache::policy::PolicyKind;
-use obsd::coordinator::framework::run_with_backends;
-use obsd::coordinator::{run, SimConfig};
-use obsd::placement::kmeans::RustKmeans;
+use obsd::prefetch::arima::GapPredictor;
 use obsd::prefetch::Strategy;
 use obsd::runtime::{artifacts_available, Engine};
+use obsd::scenario::{Runner, Scenario};
 use obsd::trace::{generator, presets};
 use obsd::util::table::Table;
 
@@ -47,11 +46,22 @@ fn main() {
         println!("WARNING: artifacts/ missing (run `make artifacts`) — pure-Rust fallback");
     }
 
-    let cfg = |strategy| SimConfig {
-        strategy,
-        policy: PolicyKind::Lru,
-        cache_bytes: 4 << 30,
-        ..Default::default()
+    let scenario = |strategy| {
+        let mut sc = Scenario::preset(strategy);
+        sc.policy = PolicyKind::Lru;
+        sc.cache_bytes = 4 << 30;
+        sc
+    };
+    // One runner serves the whole grid: the predictor factory is lazy,
+    // so the PJRT engine is only loaded (once per run, compile time
+    // excluded from the simulated metrics — the Wall column) for the
+    // cells whose model consumes a gap predictor (MD2, HPM).
+    let runner = if use_pjrt {
+        Runner::new().with_predictor(|| -> Box<dyn GapPredictor> {
+            Box::new(Engine::load_default().expect("artifact load"))
+        })
+    } else {
+        Runner::new()
     };
 
     let mut table = Table::new("OOI end-to-end results (LRU, 4 GB/DTN, best network)").header(&[
@@ -67,15 +77,8 @@ fn main() {
     let mut baseline_thrpt = 0.0;
     let mut hpm_summary = None;
     for strategy in Strategy::ALL {
-        // The PJRT engine is consumed per run (Box<dyn GapPredictor>);
-        // compile once per strategy — compile time is excluded from the
-        // simulated metrics and shown in the Wall column.
-        let m = if use_pjrt && strategy.uses_prefetch() {
-            let engine = Engine::load_default().expect("artifact load");
-            run_with_backends(&trace, &cfg(strategy), Box::new(engine), Box::new(RustKmeans))
-        } else {
-            run(&trace, &cfg(strategy))
-        };
+        let sc = scenario(strategy);
+        let m = runner.run_trace(&trace, &sc).metrics;
         if strategy == Strategy::NoCache {
             baseline_bytes = m.origin_bytes;
             baseline_thrpt = m.throughput_mbps();

@@ -7,8 +7,8 @@
 //! ```
 
 use obsd::cache::policy::PolicyKind;
-use obsd::coordinator::{run, SimConfig};
 use obsd::prefetch::Strategy;
+use obsd::scenario::{Runner, Scenario};
 use obsd::trace::{generator, presets};
 use obsd::util::table::Table;
 
@@ -33,19 +33,15 @@ fn main() {
         "Replicated",
         "Groups engaged",
     ]);
+    let runner = Runner::new();
     for gb in [0.25f64, 0.5, 1.0, 2.0] {
         let size = (gb * (1u64 << 30) as f64) as u64;
         let mk = |placement: bool| {
-            run(
-                &trace,
-                &SimConfig {
-                    strategy: Strategy::Hpm,
-                    policy: PolicyKind::Lru,
-                    cache_bytes: size,
-                    placement,
-                    ..Default::default()
-                },
-            )
+            let mut sc = Scenario::preset(Strategy::Hpm);
+            sc.policy = PolicyKind::Lru;
+            sc.cache_bytes = size;
+            sc.placement = placement;
+            runner.run_trace(&trace, &sc).metrics
         };
         let wo = mk(false);
         let w = mk(true);

@@ -1,14 +1,14 @@
 //! Quickstart: generate a small synthetic observatory trace, run the
-//! push-based delivery framework against the No-Cache baseline, and
-//! print the headline metrics.
+//! push-based delivery framework against the No-Cache baseline through
+//! the scenario API, and print the headline metrics.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use obsd::cache::policy::PolicyKind;
-use obsd::coordinator::{run, SimConfig};
 use obsd::prefetch::Strategy;
+use obsd::scenario::{Runner, Scenario};
 use obsd::trace::{generator, presets};
 
 fn main() {
@@ -23,19 +23,15 @@ fn main() {
         trace.duration / 3600.0
     );
 
-    // 2. Run the baseline and the framework.
-    let base_cfg = SimConfig {
-        strategy: Strategy::NoCache,
-        ..Default::default()
-    };
-    let hpm_cfg = SimConfig {
-        strategy: Strategy::Hpm,
-        policy: PolicyKind::Lru,
-        cache_bytes: 2 << 30, // 2 GB per client DTN
-        ..Default::default()
-    };
-    let base = run(&trace, &base_cfg);
-    let hpm = run(&trace, &hpm_cfg);
+    // 2. Run the baseline and the framework: two preset points of the
+    //    composable scenario space (delivery × model × cache × ...).
+    let runner = Runner::new();
+    let base_sc = Scenario::preset(Strategy::NoCache);
+    let mut hpm_sc = Scenario::preset(Strategy::Hpm);
+    hpm_sc.policy = PolicyKind::Lru;
+    hpm_sc.cache_bytes = 2 << 30; // 2 GB per client DTN
+    let base = runner.run_trace(&trace, &base_sc).metrics;
+    let hpm = runner.run_trace(&trace, &hpm_sc).metrics;
 
     // 3. Compare.
     println!("\n                         No Cache        HPM framework");

@@ -9,8 +9,8 @@
 //! ```
 
 use obsd::cache::policy::PolicyKind;
-use obsd::coordinator::{run, SimConfig};
 use obsd::prefetch::Strategy;
+use obsd::scenario::{Runner, Scenario};
 use obsd::trace::presets;
 use obsd::trace::{generator, UserKind};
 
@@ -39,14 +39,12 @@ fn main() {
         trace.requests.len()
     );
 
+    let runner = Runner::new();
     for strategy in [Strategy::NoCache, Strategy::CacheOnly, Strategy::Hpm] {
-        let cfg = SimConfig {
-            strategy,
-            policy: PolicyKind::Lru,
-            cache_bytes: 2 << 30,
-            ..Default::default()
-        };
-        let m = run(&trace, &cfg);
+        let mut sc = Scenario::preset(strategy);
+        sc.policy = PolicyKind::Lru;
+        sc.cache_bytes = 2 << 30;
+        let m = runner.run_trace(&trace, &sc).metrics;
         let (c, p) = m.local_fractions();
         println!(
             "\n{:<11}  origin requests {:>6.1}%   throughput {:>10.2} Mbps   queue latency {:>7.4} s\n             local service {:>6.1}% ({:.1}% cached, {:.1}% pushed/pre-fetched)",

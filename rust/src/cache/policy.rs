@@ -54,15 +54,10 @@ impl PolicyKind {
         }
     }
 
+    /// [`FromStr`](std::str::FromStr) as an `Option` (legacy signature;
+    /// callers that want the alias-listing error use `s.parse()`).
     pub fn parse(s: &str) -> Option<PolicyKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "lru" => Some(PolicyKind::Lru),
-            "lfu" => Some(PolicyKind::Lfu),
-            "fifo" => Some(PolicyKind::Fifo),
-            "size" => Some(PolicyKind::Size),
-            "gdsf" => Some(PolicyKind::Gdsf),
-            _ => None,
-        }
+        s.parse().ok()
     }
 
     pub fn name(&self) -> &'static str {
@@ -73,6 +68,24 @@ impl PolicyKind {
             PolicyKind::Size => "SIZE",
             PolicyKind::Gdsf => "GDSF",
         }
+    }
+}
+
+impl std::str::FromStr for PolicyKind {
+    type Err = crate::util::parse::ParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        crate::util::parse::lookup(
+            "policy",
+            s,
+            &[
+                (&["lru"], PolicyKind::Lru),
+                (&["lfu"], PolicyKind::Lfu),
+                (&["fifo"], PolicyKind::Fifo),
+                (&["size"], PolicyKind::Size),
+                (&["gdsf"], PolicyKind::Gdsf),
+            ],
+        )
     }
 }
 

@@ -37,7 +37,45 @@ use crate::trace::presets::PresetConfig;
 use crate::trace::source::{ArrivalSource, StreamingTrace};
 use crate::trace::{Request, StreamId, Trace, UserId};
 
-/// Full configuration of one simulation run.
+/// Distilled engine configuration: exactly what the discrete-event
+/// core needs to run, with the strategy axis already lowered to a
+/// capability flag (`uses_cache`) plus the prebuilt model passed
+/// alongside.  Both front doors lower into this — the composable
+/// [`crate::scenario::Scenario`] via [`crate::scenario::Runner`], and
+/// the legacy [`SimConfig`] via [`run`]/[`run_streaming`] — which is
+/// what the preset parity tests pin against each other.
+#[derive(Debug, Clone)]
+pub struct RunParams {
+    /// Client DTNs cache chunks (framework delivery); off = the
+    /// direct-WAN baseline where every request hits the observatory.
+    pub uses_cache: bool,
+    pub policy: PolicyKind,
+    /// Per-client-DTN cache capacity in bytes.
+    pub cache_bytes: u64,
+    pub net: NetCondition,
+    pub topology: TopologyKind,
+    /// 1.0 = regular, 4.0 = heavy (month→week), 0.5 = low (§V-A3).
+    pub traffic_factor: f64,
+    /// Data placement strategy on/off (Table IV ablation).
+    pub placement: bool,
+    /// Association-rule / model rebuild period (seconds).
+    pub rebuild_every: f64,
+    /// Virtual-group recluster period (seconds).
+    pub recluster_every: f64,
+    /// Max chunks replicated to hubs per recluster tick.
+    pub replicate_budget: usize,
+    /// Observatory service: fixed per-request overhead (seconds).
+    pub obs_overhead: f64,
+    /// Observatory service: storage read rate per process (bytes/s).
+    pub obs_io_bps: f64,
+    pub seed: u64,
+}
+
+/// Legacy full configuration of one simulation run, keyed by the
+/// closed [`Strategy`] grid.  New code builds a
+/// [`crate::scenario::Scenario`] instead; this type survives as the
+/// pre-refactor surface the preset parity tests pin bit-identical
+/// metrics against (and as a shim for straggler callers).
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     pub strategy: Strategy,
@@ -64,6 +102,28 @@ pub struct SimConfig {
     /// Observatory service: storage read rate per process (bytes/s).
     pub obs_io_bps: f64,
     pub seed: u64,
+}
+
+impl SimConfig {
+    /// Lower the closed-grid config into the engine's capability
+    /// params (the model is built separately by [`build_model`]).
+    pub fn params(&self) -> RunParams {
+        RunParams {
+            uses_cache: self.strategy.uses_cache(),
+            policy: self.policy,
+            cache_bytes: self.cache_bytes,
+            net: self.net,
+            topology: self.topology,
+            traffic_factor: self.traffic_factor,
+            placement: self.placement,
+            rebuild_every: self.rebuild_every,
+            recluster_every: self.recluster_every,
+            replicate_budget: self.replicate_budget,
+            obs_overhead: self.obs_overhead,
+            obs_io_bps: self.obs_io_bps,
+            seed: self.seed,
+        }
+    }
 }
 
 impl Default for SimConfig {
@@ -227,7 +287,7 @@ struct ObsTask {
 
 /// The assembled framework for one run.
 pub struct Framework<'t> {
-    pub cfg: SimConfig,
+    pub cfg: RunParams,
     trace: &'t Trace,
     topology: Topology,
     caches: CacheNetwork,
@@ -304,18 +364,7 @@ pub fn run_with_backends(
     predictor: Box<dyn GapPredictor>,
     cluster: Box<dyn ClusterBackend>,
 ) -> RunMetrics {
-    let scaled;
-    let trace = if (cfg.traffic_factor - 1.0).abs() > 1e-9 {
-        scaled = trace.with_traffic_factor(cfg.traffic_factor);
-        &scaled
-    } else {
-        trace
-    };
-    let arrivals = ArrivalLeg::Slice {
-        reqs: &trace.requests,
-        next: 0,
-    };
-    run_inner(trace, arrivals, cfg, predictor, cluster)
+    run_core(trace, &cfg.params(), build_model(cfg.strategy, predictor), cluster)
 }
 
 /// [`run_streaming`] with explicit prediction backends.
@@ -325,13 +374,47 @@ pub fn run_streaming_with_backends(
     predictor: Box<dyn GapPredictor>,
     cluster: Box<dyn ClusterBackend>,
 ) -> RunMetrics {
+    run_streaming_core(preset, &cfg.params(), build_model(cfg.strategy, predictor), cluster)
+}
+
+/// Materialized-trace core entry: capability params + prebuilt model.
+/// Everything above this point — legacy [`run`]/[`run_with_backends`]
+/// and the scenario [`crate::scenario::Runner`] — lowers to here.
+pub fn run_core(
+    trace: &Trace,
+    params: &RunParams,
+    model: Option<Box<dyn PrefetchModel>>,
+    cluster: Box<dyn ClusterBackend>,
+) -> RunMetrics {
+    let scaled;
+    let trace = if (params.traffic_factor - 1.0).abs() > 1e-9 {
+        scaled = trace.with_traffic_factor(params.traffic_factor);
+        &scaled
+    } else {
+        trace
+    };
+    let arrivals = ArrivalLeg::Slice {
+        reqs: &trace.requests,
+        next: 0,
+    };
+    run_inner(trace, arrivals, params, model, cluster)
+}
+
+/// Streaming-arrival core entry: capability params + prebuilt model
+/// over the lazy per-user source ([`crate::trace::source`]).
+pub fn run_streaming_core(
+    preset: &PresetConfig,
+    params: &RunParams,
+    model: Option<Box<dyn PrefetchModel>>,
+    cluster: Box<dyn ClusterBackend>,
+) -> RunMetrics {
     let st = StreamingTrace::new(preset);
     let scaled;
-    let (world, factor) = if (cfg.traffic_factor - 1.0).abs() > 1e-9 {
+    let (world, factor) = if (params.traffic_factor - 1.0).abs() > 1e-9 {
         // Scale the world (rates, chunking, duration) here; the arrival
         // leg compresses each request's timeline as it is pulled.
-        scaled = st.world.with_traffic_factor(cfg.traffic_factor);
-        (&scaled, cfg.traffic_factor)
+        scaled = st.world.with_traffic_factor(params.traffic_factor);
+        (&scaled, params.traffic_factor)
     } else {
         (&st.world, 1.0)
     };
@@ -340,14 +423,14 @@ pub fn run_streaming_with_backends(
         next_idx: 0,
         factor,
     };
-    run_inner(world, arrivals, cfg, predictor, cluster)
+    run_inner(world, arrivals, params, model, cluster)
 }
 
 fn run_inner<'t>(
     trace: &'t Trace,
     arrivals: ArrivalLeg<'t>,
-    cfg: &SimConfig,
-    predictor: Box<dyn GapPredictor>,
+    cfg: &RunParams,
+    model: Option<Box<dyn PrefetchModel>>,
     cluster: Box<dyn ClusterBackend>,
 ) -> RunMetrics {
     let wall_start = std::time::Instant::now();
@@ -358,7 +441,7 @@ fn run_inner<'t>(
         topology,
         caches: CacheNetwork::new(
             n_nodes,
-            if cfg.strategy.uses_cache() { cfg.cache_bytes } else { 0 },
+            if cfg.uses_cache { cfg.cache_bytes } else { 0 },
             cfg.policy,
         ),
         obs: crate::coordinator::server::Observatory::with_params(
@@ -368,7 +451,7 @@ fn run_inner<'t>(
         ),
         obs_tasks: Vec::new(),
         free_tasks: Vec::new(),
-        model: build_model(cfg.strategy, predictor),
+        model,
         placement: Placement::new(cluster, 16, cfg.seed ^ 0x9E37),
         registry: StreamRegistry::new(),
         flows: FlowSim::new(),
@@ -429,7 +512,7 @@ impl<'t> Framework<'t> {
                 t += self.cfg.rebuild_every;
             }
         }
-        if self.cfg.placement && self.cfg.strategy.uses_prefetch() {
+        if self.cfg.placement && self.model.is_some() {
             let mut t = self.cfg.recluster_every;
             while t < self.trace.duration {
                 self.events.push(t, Event::Recluster);
@@ -540,8 +623,8 @@ impl<'t> Framework<'t> {
         let live = self.req_states.len() as u64;
         self.metrics.peak_req_states = self.metrics.peak_req_states.max(live);
 
-        // Feed the engines (all framework strategies).
-        if self.cfg.strategy.uses_prefetch() {
+        // Feed the engines (every prefetching scenario).
+        if self.model.is_some() {
             let site = self.trace.site(self.trace.stream(req.stream).site);
             let (sx, sy) = (site.x, site.y);
             self.placement.observe(req.user, sx, sy, req.stream.0);
@@ -552,7 +635,7 @@ impl<'t> Framework<'t> {
             }
         }
 
-        if !self.cfg.strategy.uses_cache() {
+        if !self.cfg.uses_cache {
             // NoCache: the full request goes to the observatory and the
             // data ships over the user's commodity WAN — today's
             // delivery practice, no publication awareness at the edge.
@@ -581,7 +664,7 @@ impl<'t> Framework<'t> {
             .min(req.range.duration())
             .max(0.0);
 
-        if self.cfg.strategy.uses_prefetch() {
+        if self.model.is_some() {
             // Framework with push engine: publication-aware clients.
             // A request reaching into the live window is served "latest
             // published batch" semantics — the newest closed chunk.
@@ -601,7 +684,7 @@ impl<'t> Framework<'t> {
         // the client DTN forwards one request for everything missing) —
         // exactly the pull-based polling traffic the streaming
         // mechanism eliminates (§IV-B).
-        let tail_bytes = if !self.cfg.strategy.uses_prefetch() && tail_secs > 0.0 {
+        let tail_bytes = if self.model.is_none() && tail_secs > 0.0 {
             (tail_secs * rate).max(1.0)
         } else {
             0.0
@@ -985,7 +1068,7 @@ impl<'t> Framework<'t> {
     }
 
     fn insert_chunks(&mut self, dest: usize, chunks: &[ChunkKey], origin: Origin) {
-        if !self.cfg.strategy.uses_cache() {
+        if !self.cfg.uses_cache {
             return;
         }
         for key in chunks {
@@ -1014,7 +1097,7 @@ impl<'t> Framework<'t> {
         let user_edge = self.topology.user_edge();
         // Final hop: DTN → user at the 100 Gbps edge (or already included
         // for NoCache, where the WAN flow ends at the user).
-        let edge_time = if self.cfg.strategy.uses_cache() {
+        let edge_time = if self.cfg.uses_cache {
             st.bytes / user_edge
         } else {
             0.0
@@ -1192,54 +1275,8 @@ mod tests {
 
     /// Bit-exact `RunMetrics` equality (everything but wall-clock).
     fn assert_metrics_eq(a: &RunMetrics, b: &RunMetrics, label: &str) {
-        let counters = [
-            ("requests_total", a.requests_total, b.requests_total),
-            (
-                "requests_to_observatory",
-                a.requests_to_observatory,
-                b.requests_to_observatory,
-            ),
-            ("served_local_cache", a.served_local_cache, b.served_local_cache),
-            (
-                "served_local_prefetch",
-                a.served_local_prefetch,
-                b.served_local_prefetch,
-            ),
-            ("served_peer", a.served_peer, b.served_peer),
-            ("peak_flows", a.peak_flows, b.peak_flows),
-            ("peak_req_states", a.peak_req_states, b.peak_req_states),
-            ("throughput.count", a.throughput.count, b.throughput.count),
-            ("latency.count", a.latency.count, b.latency.count),
-        ];
-        for (name, x, y) in counters {
-            assert_eq!(x, y, "{label}: {name}");
-        }
-        let floats = [
-            ("origin_bytes", a.origin_bytes, b.origin_bytes),
-            ("cache_bytes", a.cache_bytes, b.cache_bytes),
-            ("placement_bytes", a.placement_bytes, b.placement_bytes),
-            ("sum_bytes", a.sum_bytes, b.sum_bytes),
-            ("sum_elapsed", a.sum_elapsed, b.sum_elapsed),
-            ("recall", a.recall, b.recall),
-            ("throughput.sum", a.throughput.sum, b.throughput.sum),
-            ("latency.sum", a.latency.sum, b.latency.sum),
-            ("peer_throughput.sum", a.peer_throughput.sum, b.peer_throughput.sum),
-        ];
-        for (name, x, y) in floats {
-            assert_eq!(x.to_bits(), y.to_bits(), "{label}: {name}");
-        }
-        assert_eq!(a.interior_util.len(), b.interior_util.len(), "{label}: tiers");
-        for (x, y) in a.interior_util.iter().zip(&b.interior_util) {
-            assert_eq!(x.tier, y.tier, "{label}: tier label");
-            assert_eq!(
-                x.carried_bytes.to_bits(),
-                y.carried_bytes.to_bits(),
-                "{label}: carried {} {}->{}",
-                x.tier,
-                x.from,
-                x.to
-            );
-        }
+        let diffs = a.diff_bits(b);
+        assert!(diffs.is_empty(), "{label}: {diffs:?}");
     }
 
     #[test]

@@ -8,11 +8,14 @@
 //!   (pre-fetching + streaming), the placement engine, and the
 //!   discrete-event main loop over the fluid-flow network.
 //!
-//! The same driver runs every strategy of the evaluation grid
-//! ([`crate::prefetch::Strategy`]), which is how the experiment
-//! harnesses reproduce the paper's tables and figures.
+//! The same driver runs every point of the composable scenario space
+//! ([`crate::scenario::Scenario`]); the paper's five-strategy grid
+//! survives as named presets, which is how the experiment harnesses
+//! reproduce the paper's tables and figures.
 
 pub mod framework;
 pub mod server;
 
-pub use framework::{run, run_streaming, Framework, SimConfig};
+pub use framework::{
+    run, run_core, run_streaming, run_streaming_core, Framework, RunParams, SimConfig,
+};

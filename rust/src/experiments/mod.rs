@@ -1,9 +1,16 @@
 //! Experiment harnesses: one per paper table/figure (DESIGN.md §4).
 //!
 //! Every harness regenerates the same rows/series the paper reports,
-//! printing an aligned table and (optionally) writing CSV into an
-//! output directory.  Invoke via `repro experiment --id <id>` or the
-//! bench targets.
+//! printing an aligned table and (optionally) writing artifacts into an
+//! output directory: the historical CSV plus a machine-readable
+//! `<id>.json` of [`RunReport`]s (full scenario echo + metrics), so
+//! trajectories can diff runs.  Invoke via `repro experiment --id <id>`
+//! or the bench targets.
+//!
+//! Simulation sweeps are declared as [`ScenarioGrid`]s over the
+//! composable scenario axes (DESIGN.md §8): the grid expands the
+//! cartesian product, the [`Runner`] executes every cell over one
+//! shared trace, and the harness only formats rows.
 //!
 //! Cache sizes: the synthetic traces are scaled-down replicas of the
 //! real logs (DESIGN.md §2), so the paper's absolute cache sizes are
@@ -16,11 +23,12 @@ use std::fmt::Write as _;
 use anyhow::{bail, Result};
 
 use crate::cache::policy::PolicyKind;
-use crate::coordinator::{run, run_streaming, SimConfig};
-use crate::metrics::RunMetrics;
 use crate::prefetch::Strategy;
+use crate::scenario::{ModelSpec, RunReport, Runner, Scenario, ScenarioGrid, WorkloadSpec};
 use crate::simnet::{NetCondition, TopologyKind};
 use crate::trace::{generator, presets, Trace};
+use crate::util::json::Json;
+use crate::util::parse::{normalize, ParseError};
 use crate::util::table::Table;
 
 /// Options shared by all experiment harnesses.
@@ -30,7 +38,7 @@ pub struct ExpOptions {
     pub scale: f64,
     /// Trace duration multiplier.
     pub days_factor: f64,
-    /// Write CSV artifacts here (created if missing).
+    /// Write CSV + RunReport JSON artifacts here (created if missing).
     pub out_dir: Option<std::path::PathBuf>,
     /// Seed override.
     pub seed: Option<u64>,
@@ -74,6 +82,35 @@ pub const ALL_IDS: [&str; 16] = [
     "fig13", "table4", "table5", "headline", "policies", "federation",
 ];
 
+/// Ids accepted by [`run_experiment`] but excluded from `all` (see
+/// [`ALL_IDS`]), plus `all` itself.
+pub const EXTRA_IDS: [&str; 3] = ["traffic", "scale", "all"];
+
+/// A validated experiment id: the canonical string from [`ALL_IDS`] or
+/// [`EXTRA_IDS`].  Parsing goes through the shared normalize-and-match
+/// helper, so `--id Fig9` and `--id FIG_9` resolve and a bad id lists
+/// every accepted value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExpId(pub &'static str);
+
+impl std::str::FromStr for ExpId {
+    type Err = ParseError;
+
+    fn from_str(s: &str) -> Result<Self, ParseError> {
+        let token = normalize(s);
+        for id in ALL_IDS.into_iter().chain(EXTRA_IDS) {
+            if normalize(id) == token {
+                return Ok(ExpId(id));
+            }
+        }
+        Err(ParseError {
+            what: "experiment id",
+            got: s.to_string(),
+            accepted: ALL_IDS.iter().chain(EXTRA_IDS.iter()).copied().collect(),
+        })
+    }
+}
+
 /// Paper-labeled cache-size axis for one observatory, scaled to the
 /// synthetic trace volume (per client DTN).
 pub fn cache_grid(observatory: &str) -> Vec<(&'static str, u64)> {
@@ -109,6 +146,19 @@ fn build_trace(observatory: &str, opts: &ExpOptions) -> Result<Trace> {
     Ok(generator::generate(&cfg))
 }
 
+/// The workload a harness actually ran — the same preset adjustments
+/// [`build_trace`] applies — so each cell's `RunReport` echo records
+/// true provenance instead of the base scenario's default workload.
+fn workload_for(observatory: &str, opts: &ExpOptions) -> WorkloadSpec {
+    WorkloadSpec {
+        observatory: observatory.to_string(),
+        scale: opts.scale,
+        days_factor: opts.days_factor,
+        n_users: None,
+        trace_seed: opts.seed,
+    }
+}
+
 fn write_csv(opts: &ExpOptions, name: &str, content: &str) -> Result<()> {
     if let Some(dir) = &opts.out_dir {
         std::fs::create_dir_all(dir)?;
@@ -117,9 +167,21 @@ fn write_csv(opts: &ExpOptions, name: &str, content: &str) -> Result<()> {
     Ok(())
 }
 
+/// Write the machine-readable side of a harness: `<name>.json`, an
+/// array of [`RunReport`]s (scenario echo + metrics) next to the CSV.
+fn write_reports(opts: &ExpOptions, name: &str, reports: &[RunReport]) -> Result<()> {
+    if let Some(dir) = &opts.out_dir {
+        std::fs::create_dir_all(dir)?;
+        let arr = Json::Arr(reports.iter().map(|r| r.to_json()).collect());
+        std::fs::write(dir.join(format!("{name}.json")), arr.to_string_pretty())?;
+    }
+    Ok(())
+}
+
 /// Run one experiment by id; returns the rendered report.
 pub fn run_experiment(id: &str, opts: &ExpOptions) -> Result<String> {
-    match id.to_ascii_lowercase().as_str() {
+    let ExpId(id) = id.parse::<ExpId>()?;
+    match id {
         "fig2" => fig2(opts),
         "table1" => table1(opts),
         "table2" => table2(opts),
@@ -146,7 +208,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Result<String> {
             }
             Ok(out)
         }
-        other => bail!("unknown experiment id '{other}' (try one of {ALL_IDS:?})"),
+        other => bail!("unhandled experiment id '{other}'"),
     }
 }
 
@@ -245,20 +307,19 @@ fn fig4(opts: &ExpOptions) -> Result<String> {
 // §V evaluation experiments
 // ---------------------------------------------------------------------------
 
-fn sim(trace: &Trace, strategy: Strategy, policy: PolicyKind, cache: u64) -> RunMetrics {
-    let cfg = SimConfig {
-        strategy,
-        policy,
-        cache_bytes: cache,
-        ..Default::default()
-    };
-    run(trace, &cfg)
-}
-
 /// Figs. 9-12: throughput / latency / recall across cache sizes and
-/// strategies for one observatory and eviction policy.
+/// strategies for one observatory and eviction policy — a two-axis
+/// [`ScenarioGrid`] (cache capacity × strategy preset).
 fn cache_perf(obs: &str, policy: PolicyKind, figure: &str, opts: &ExpOptions) -> Result<String> {
     let trace = build_trace(obs, opts)?;
+    let grid = cache_grid(obs);
+    let mut base = Scenario::preset(Strategy::Hpm);
+    base.policy = policy;
+    base.workload = workload_for(obs, opts);
+    let sweep = ScenarioGrid::new(base)
+        .cache_sizes(&grid)
+        .strategies(&Strategy::ALL);
+    let reports = sweep.run(&Runner::new(), &trace);
     let title = format!(
         "{} — {} {} cache performance",
         figure.to_uppercase(),
@@ -274,13 +335,13 @@ fn cache_perf(obs: &str, policy: PolicyKind, figure: &str, opts: &ExpOptions) ->
     let mut rec = Table::new(&format!("{title}: pre-fetch recall"))
         .header(&["Cache", "MD1", "MD2", "HPM"]);
     let mut csv = String::from("cache,strategy,thrpt_mbps,agg_mbps,latency_s,recall,origin_frac\n");
-    for (label, size) in cache_grid(obs) {
+    for (ci, (label, _size)) in grid.iter().enumerate() {
         let mut thr_row = vec![label.to_string()];
         let mut agg_row = vec![label.to_string()];
         let mut lat_row = vec![label.to_string()];
         let mut rec_row = vec![label.to_string()];
-        for strat in Strategy::ALL {
-            let m = sim(&trace, strat, policy, size);
+        for (si, strat) in Strategy::ALL.into_iter().enumerate() {
+            let m = &reports[ci * Strategy::ALL.len() + si].metrics;
             thr_row.push(format!("{:.2}", m.throughput_mbps()));
             agg_row.push(format!("{:.2}", m.agg_throughput_mbps()));
             lat_row.push(format!("{:.4}", m.latency_secs()));
@@ -304,21 +365,32 @@ fn cache_perf(obs: &str, policy: PolicyKind, figure: &str, opts: &ExpOptions) ->
         rec.row(rec_row);
     }
     write_csv(opts, &format!("{figure}.csv"), &csv)?;
+    write_reports(opts, figure, &reports)?;
     Ok(format!("{}\n{}\n{}\n{}", thr.render(), agg.render(), lat.render(), rec.render()))
 }
 
-/// Table III: normalized requests served by the observatory.
+/// Table III: normalized requests served by the observatory — a
+/// policy × strategy grid at the smallest cache, per observatory.
 fn table3(opts: &ExpOptions) -> Result<String> {
+    let runner = Runner::new();
+    let policy_axis = [PolicyKind::Lru, PolicyKind::Lfu];
     let mut t = Table::new("Table III — normalized requests served by the observatory")
         .header(&["", "", "No Cache", "Cache Only", "MD1", "MD2", "HPM"]);
     let mut csv = String::from("observatory,policy,strategy,normalized_requests\n");
+    let mut reports = Vec::new();
     for obs in ["ooi", "gage"] {
         let trace = build_trace(obs, opts)?;
-        let smallest = cache_grid(obs)[0].1;
-        for policy in [PolicyKind::Lru, PolicyKind::Lfu] {
+        let mut base = Scenario::preset(Strategy::Hpm);
+        base.cache_bytes = cache_grid(obs)[0].1;
+        base.workload = workload_for(obs, opts);
+        let sweep = ScenarioGrid::new(base)
+            .policies(&policy_axis)
+            .strategies(&Strategy::ALL);
+        let obs_reports = sweep.run(&runner, &trace);
+        for (pi, policy) in policy_axis.into_iter().enumerate() {
             let mut row = vec![trace.observatory.clone(), policy.name().to_string()];
-            for strat in Strategy::ALL {
-                let m = sim(&trace, strat, policy, smallest);
+            for (si, strat) in Strategy::ALL.into_iter().enumerate() {
+                let m = &obs_reports[pi * Strategy::ALL.len() + si].metrics;
                 row.push(format!("{:.4}", m.origin_fraction()));
                 let _ = writeln!(
                     csv,
@@ -331,25 +403,37 @@ fn table3(opts: &ExpOptions) -> Result<String> {
             }
             t.row(row);
         }
+        reports.extend(obs_reports);
     }
     write_csv(opts, "table3.csv", &csv)?;
+    write_reports(opts, "table3", &reports)?;
     Ok(t.render())
 }
 
 /// Fig. 13: requests served locally, split cached vs pre-fetched.
 fn fig13(opts: &ExpOptions) -> Result<String> {
+    let runner = Runner::new();
+    let strat_axis = [Strategy::CacheOnly, Strategy::Md1, Strategy::Md2, Strategy::Hpm];
     let mut out = String::new();
     let mut csv = String::from("observatory,cache,strategy,local_cached,local_prefetched\n");
+    let mut reports = Vec::new();
     for obs in ["ooi", "gage"] {
         let trace = build_trace(obs, opts)?;
+        let grid = cache_grid(obs);
+        let mut base = Scenario::preset(Strategy::Hpm);
+        base.workload = workload_for(obs, opts);
+        let sweep = ScenarioGrid::new(base)
+            .cache_sizes(&grid)
+            .strategies(&strat_axis);
+        let obs_reports = sweep.run(&runner, &trace);
         let mut t = Table::new(&format!(
             "Fig. 13 — {} requests served from the local DTN (LRU)",
             trace.observatory
         ))
         .header(&["Cache", "Strategy", "From cached", "From pre-fetched", "Total local"]);
-        for (label, size) in cache_grid(obs) {
-            for strat in [Strategy::CacheOnly, Strategy::Md1, Strategy::Md2, Strategy::Hpm] {
-                let m = sim(&trace, strat, PolicyKind::Lru, size);
+        for (ci, (label, _size)) in grid.iter().enumerate() {
+            for (si, strat) in strat_axis.into_iter().enumerate() {
+                let m = &obs_reports[ci * strat_axis.len() + si].metrics;
                 let (c, p) = m.local_fractions();
                 t.row(vec![
                     label.to_string(),
@@ -370,13 +454,16 @@ fn fig13(opts: &ExpOptions) -> Result<String> {
         }
         out.push_str(&t.render());
         out.push('\n');
+        reports.extend(obs_reports);
     }
     write_csv(opts, "fig13.csv", &csv)?;
+    write_reports(opts, "fig13", &reports)?;
     Ok(out)
 }
 
 /// Table IV: data placement strategy ablation (GAGE, HPM, LRU).
 fn table4(opts: &ExpOptions) -> Result<String> {
+    let runner = Runner::new();
     let trace = build_trace("gage", opts)?;
     let grid: Vec<(&str, u64)> = cache_grid("gage")[..4].to_vec();
     let mut t = Table::new("Table IV — impact of the data placement strategy (GAGE, HPM, LRU)")
@@ -392,29 +479,29 @@ fn table4(opts: &ExpOptions) -> Result<String> {
         ]);
     let mut csv =
         String::from("cache,placement_frac,peer_wo,peer_w,peer_improv,total_wo,total_w,total_improv\n");
+    let mut reports = Vec::new();
     for (label, size) in grid {
         let mk = |placement: bool| {
-            let cfg = SimConfig {
-                strategy: Strategy::Hpm,
-                policy: PolicyKind::Lru,
-                cache_bytes: size,
-                placement,
-                ..Default::default()
-            };
-            run(&trace, &cfg)
+            let mut sc = Scenario::preset(Strategy::Hpm);
+            sc.policy = PolicyKind::Lru;
+            sc.cache_bytes = size;
+            sc.placement = placement;
+            sc.workload = workload_for("gage", opts);
+            runner.run_trace(&trace, &sc)
         };
         let without = mk(false);
         let with = mk(true);
-        let placed_frac = if with.cache_bytes > 0.0 {
-            with.placement_bytes / with.cache_bytes
+        let (wo_m, w_m) = (&without.metrics, &with.metrics);
+        let placed_frac = if w_m.cache_bytes > 0.0 {
+            w_m.placement_bytes / w_m.cache_bytes
         } else {
             0.0
         };
-        let peer_wo = crate::util::bytes_per_sec_to_mbps(without.peer_throughput.mean());
-        let peer_w = crate::util::bytes_per_sec_to_mbps(with.peer_throughput.mean());
+        let peer_wo = crate::util::bytes_per_sec_to_mbps(wo_m.peer_throughput.mean());
+        let peer_w = crate::util::bytes_per_sec_to_mbps(w_m.peer_throughput.mean());
         let peer_improv = if peer_wo > 0.0 { (peer_w / peer_wo - 1.0) * 100.0 } else { 0.0 };
-        let tot_wo = without.throughput_mbps();
-        let tot_w = with.throughput_mbps();
+        let tot_wo = wo_m.throughput_mbps();
+        let tot_w = w_m.throughput_mbps();
         let tot_improv = if tot_wo > 0.0 { (tot_w / tot_wo - 1.0) * 100.0 } else { 0.0 };
         t.row(vec![
             label.to_string(),
@@ -430,21 +517,34 @@ fn table4(opts: &ExpOptions) -> Result<String> {
             csv,
             "{label},{placed_frac:.4},{peer_wo:.3},{peer_w:.3},{peer_improv:.3},{tot_wo:.3},{tot_w:.3},{tot_improv:.3}"
         );
+        reports.push(without);
+        reports.push(with);
     }
     write_csv(opts, "table4.csv", &csv)?;
+    write_reports(opts, "table4", &reports)?;
     Ok(t.render())
 }
 
-/// Table V: throughput across network conditions × request traffic.
+/// Table V: throughput across network conditions × request traffic —
+/// a three-axis grid (net × traffic × strategy) per observatory.
 fn table5(opts: &ExpOptions) -> Result<String> {
+    let runner = Runner::new();
+    let traffics = [("Low", 0.5), ("Regular", 1.0), ("Heavy", 4.0)];
     let mut out = String::new();
     let mut csv = String::from("observatory,network,traffic,strategy,thrpt_mbps\n");
-    let traffics = [("Low", 0.5), ("Regular", 1.0), ("Heavy", 4.0)];
+    let mut reports = Vec::new();
     for obs in ["ooi", "gage"] {
         let trace = build_trace(obs, opts)?;
         // Paper: OOI at 1 TB, GAGE at 256 GB (both LRU) — the 4th axis
         // point of each grid.
-        let size = cache_grid(obs)[3].1;
+        let mut base = Scenario::preset(Strategy::Hpm);
+        base.cache_bytes = cache_grid(obs)[3].1;
+        base.workload = workload_for(obs, opts);
+        let sweep = ScenarioGrid::new(base)
+            .nets(&NetCondition::ALL)
+            .traffic_factors(&traffics)
+            .strategies(&Strategy::ALL);
+        let obs_reports = sweep.run(&runner, &trace);
         let mut t = Table::new(&format!(
             "Table V — {} throughput (Mbps) across network conditions and request traffic (LRU)",
             trace.observatory
@@ -452,19 +552,12 @@ fn table5(opts: &ExpOptions) -> Result<String> {
         .header(&[
             "Network", "Traffic", "No Cache", "Cache Only", "MD1", "MD2", "HPM",
         ]);
-        for net in NetCondition::ALL {
-            for (tname, tf) in traffics {
+        for (ni, net) in NetCondition::ALL.into_iter().enumerate() {
+            for (ti, (tname, _tf)) in traffics.into_iter().enumerate() {
                 let mut row = vec![net.name().to_string(), tname.to_string()];
-                for strat in Strategy::ALL {
-                    let cfg = SimConfig {
-                        strategy: strat,
-                        policy: PolicyKind::Lru,
-                        cache_bytes: size,
-                        net,
-                        traffic_factor: tf,
-                        ..Default::default()
-                    };
-                    let m = run(&trace, &cfg);
+                for (si, strat) in Strategy::ALL.into_iter().enumerate() {
+                    let idx = (ni * traffics.len() + ti) * Strategy::ALL.len() + si;
+                    let m = &obs_reports[idx].metrics;
                     row.push(format!("{:.2}", m.throughput_mbps()));
                     let _ = writeln!(
                         csv,
@@ -480,13 +573,16 @@ fn table5(opts: &ExpOptions) -> Result<String> {
         }
         out.push_str(&t.render());
         out.push('\n');
+        reports.extend(obs_reports);
     }
     write_csv(opts, "table5.csv", &csv)?;
+    write_reports(opts, "table5", &reports)?;
     Ok(out)
 }
 
 /// Headline claims (§VI): traffic reduction + throughput/latency gains.
 fn headline(opts: &ExpOptions) -> Result<String> {
+    let runner = Runner::new();
     let mut t = Table::new("Headline (§VI) — HPM vs current delivery")
         .header(&[
             "",
@@ -498,16 +594,27 @@ fn headline(opts: &ExpOptions) -> Result<String> {
     let mut csv = String::from(
         "observatory,traffic_reduction,thrpt_x_nocache,thrpt_x_cacheonly,latency_reduction\n",
     );
+    let mut reports = Vec::new();
     for obs in ["ooi", "gage"] {
         let trace = build_trace(obs, opts)?;
         // The paper's headline numbers correspond to the Table V
         // configuration (OOI 1 TB, GAGE 256 GB — the 4th axis point),
         // where the cache is large enough that pre-fetch waste does not
         // evict its own working set.
-        let size = cache_grid(obs)[3].1;
-        let none = sim(&trace, Strategy::NoCache, PolicyKind::Lru, size);
-        let cache = sim(&trace, Strategy::CacheOnly, PolicyKind::Lru, size);
-        let hpm = sim(&trace, Strategy::Hpm, PolicyKind::Lru, size);
+        let mut base = Scenario::preset(Strategy::Hpm);
+        base.cache_bytes = cache_grid(obs)[3].1;
+        base.workload = workload_for(obs, opts);
+        let sweep = ScenarioGrid::new(base).strategies(&[
+            Strategy::NoCache,
+            Strategy::CacheOnly,
+            Strategy::Hpm,
+        ]);
+        let obs_reports = sweep.run(&runner, &trace);
+        let (none, cache, hpm) = (
+            &obs_reports[0].metrics,
+            &obs_reports[1].metrics,
+            &obs_reports[2].metrics,
+        );
         let reduction = hpm.traffic_reduction_vs(none.origin_bytes);
         let speedup_none = hpm.throughput_mbps() / none.throughput_mbps().max(1e-9);
         let speedup_cache = hpm.throughput_mbps() / cache.throughput_mbps().max(1e-9);
@@ -528,8 +635,10 @@ fn headline(opts: &ExpOptions) -> Result<String> {
             "{},{reduction:.4},{speedup_none:.2},{speedup_cache:.3},{lat_red:.4}",
             trace.observatory
         );
+        reports.extend(obs_reports);
     }
     write_csv(opts, "headline.csv", &csv)?;
+    write_reports(opts, "headline", &reports)?;
     Ok(t.render())
 }
 
@@ -542,6 +651,15 @@ fn headline(opts: &ExpOptions) -> Result<String> {
 /// blowups rather than silent slowdowns (EXPERIMENTS.md §Perf).
 fn traffic_sweep(opts: &ExpOptions) -> Result<String> {
     let trace = build_trace("heavy", opts)?;
+    let tf_axis = [("1", 1.0), ("10", 10.0), ("100", 100.0)];
+    let strat_axis = [Strategy::CacheOnly, Strategy::Hpm];
+    let mut base = Scenario::preset(Strategy::Hpm);
+    base.cache_bytes = 8 << 30;
+    base.workload = workload_for("heavy", opts);
+    let sweep = ScenarioGrid::new(base)
+        .traffic_factors(&tf_axis)
+        .strategies(&strat_axis);
+    let reports = sweep.run(&Runner::new(), &trace);
     let mut t = Table::new("Traffic sweep — heavy preset, concurrent-flow scaling (LRU)")
         .header(&[
             "Traffic ×",
@@ -555,18 +673,11 @@ fn traffic_sweep(opts: &ExpOptions) -> Result<String> {
     let mut csv = String::from(
         "traffic_factor,strategy,requests,peak_flows,thrpt_mbps,origin_frac,wall_secs\n",
     );
-    for tf in [1.0, 10.0, 100.0] {
-        for strat in [Strategy::CacheOnly, Strategy::Hpm] {
-            let cfg = SimConfig {
-                strategy: strat,
-                policy: PolicyKind::Lru,
-                cache_bytes: 8 << 30,
-                traffic_factor: tf,
-                ..Default::default()
-            };
-            let m = run(&trace, &cfg);
+    for (ti, (tlabel, _tf)) in tf_axis.into_iter().enumerate() {
+        for (si, strat) in strat_axis.into_iter().enumerate() {
+            let m = &reports[ti * strat_axis.len() + si].metrics;
             t.row(vec![
-                format!("{tf:.0}"),
+                tlabel.to_string(),
                 strat.name().to_string(),
                 format!("{}", m.requests_total),
                 format!("{}", m.peak_flows),
@@ -576,7 +687,7 @@ fn traffic_sweep(opts: &ExpOptions) -> Result<String> {
             ]);
             let _ = writeln!(
                 csv,
-                "{tf},{},{},{},{:.3},{:.4},{:.3}",
+                "{tlabel},{},{},{},{:.3},{:.4},{:.3}",
                 strat.name(),
                 m.requests_total,
                 m.peak_flows,
@@ -587,6 +698,7 @@ fn traffic_sweep(opts: &ExpOptions) -> Result<String> {
         }
     }
     write_csv(opts, "traffic.csv", &csv)?;
+    write_reports(opts, "traffic", &reports)?;
     Ok(t.render())
 }
 
@@ -603,6 +715,7 @@ fn traffic_sweep(opts: &ExpOptions) -> Result<String> {
 /// `ExpOptions::scale` multiplies the user grid (CI runs it at a tiny
 /// fraction); the full 1 M row is minutes of wall-clock.
 fn scale_sweep(opts: &ExpOptions) -> Result<String> {
+    let runner = Runner::new();
     let user_grid: [usize; 4] = [1_000, 10_000, 100_000, 1_000_000];
     let mut t = Table::new(
         "Scale sweep — streaming arrivals, 1k → 1M users (CacheOnly, LRU, provisioned origin)",
@@ -621,6 +734,7 @@ fn scale_sweep(opts: &ExpOptions) -> Result<String> {
     let mut csv = String::from(
         "topology,users,requests,peak_req_states,peak_flows,origin_frac,thrpt_mbps,core_util,wall_secs\n",
     );
+    let mut reports = Vec::new();
     for (tname, topology) in [
         ("star", TopologyKind::VdcStar),
         (
@@ -634,21 +748,22 @@ fn scale_sweep(opts: &ExpOptions) -> Result<String> {
     ] {
         for n in user_grid {
             let n_eff = ((n as f64) * opts.scale).round().max(8.0) as usize;
-            let mut preset = presets::scale(n_eff);
-            preset.duration_days *= opts.days_factor;
+            let mut sc = Scenario::builder()
+                .observatory("scale")
+                .users(n_eff)
+                .days_factor(opts.days_factor)
+                .streaming()
+                .model(ModelSpec::none())
+                .cache_bytes(4 << 30)
+                .topology(topology)
+                .obs_overhead(0.02)
+                .obs_io_bps(1e9)
+                .build()?;
             if let Some(seed) = opts.seed {
-                preset.seed = seed;
+                sc.workload.trace_seed = Some(seed);
             }
-            let cfg = SimConfig {
-                strategy: Strategy::CacheOnly,
-                policy: PolicyKind::Lru,
-                cache_bytes: 4 << 30,
-                topology,
-                obs_overhead: 0.02,
-                obs_io_bps: 1e9,
-                ..Default::default()
-            };
-            let m = run_streaming(&preset, &cfg);
+            let r = runner.run(&sc)?;
+            let m = &r.metrics;
             let (core_util, _) = m.tier_summary("core");
             t.row(vec![
                 tname.to_string(),
@@ -672,9 +787,11 @@ fn scale_sweep(opts: &ExpOptions) -> Result<String> {
                 core_util,
                 m.wall_secs
             );
+            reports.push(r);
         }
     }
     write_csv(opts, "scale.csv", &csv)?;
+    write_reports(opts, "scale", &reports)?;
     Ok(t.render())
 }
 
@@ -687,14 +804,34 @@ fn scale_sweep(opts: &ExpOptions) -> Result<String> {
 /// the saturation signal only a multi-hop network model can produce.
 fn federation(opts: &ExpOptions) -> Result<String> {
     let trace = build_trace("federation", opts)?;
-    // (label, core, regional, edge) in Gbps; edge access is the 20 Gbps
+    // (label, core:regional:edge) in Gbps; edge access is the 20 Gbps
     // baseline, the ratio scales the tiers above it.
-    let ratios: [(&str, f64, f64, f64); 4] = [
-        ("4:2:1", 80.0, 40.0, 20.0),
-        ("2:2:1", 40.0, 40.0, 20.0),
-        ("1:1:1", 20.0, 20.0, 20.0),
-        ("1:2:4", 20.0, 40.0, 80.0),
+    let ratio_axis: [(&str, TopologyKind); 4] = [
+        (
+            "4:2:1",
+            TopologyKind::Federation { core_gbps: 80.0, regional_gbps: 40.0, edge_gbps: 20.0 },
+        ),
+        (
+            "2:2:1",
+            TopologyKind::Federation { core_gbps: 40.0, regional_gbps: 40.0, edge_gbps: 20.0 },
+        ),
+        (
+            "1:1:1",
+            TopologyKind::Federation { core_gbps: 20.0, regional_gbps: 20.0, edge_gbps: 20.0 },
+        ),
+        (
+            "1:2:4",
+            TopologyKind::Federation { core_gbps: 20.0, regional_gbps: 40.0, edge_gbps: 80.0 },
+        ),
     ];
+    let strat_axis = [Strategy::CacheOnly, Strategy::Hpm];
+    let mut base = Scenario::preset(Strategy::Hpm);
+    base.cache_bytes = 8 << 30;
+    base.workload = workload_for("federation", opts);
+    let sweep = ScenarioGrid::new(base)
+        .topologies(&ratio_axis)
+        .strategies(&strat_axis);
+    let reports = sweep.run(&Runner::new(), &trace);
     let mut t = Table::new(
         "Federation sweep — tier bandwidth ratios (core:regional:edge), interior-link utilization",
     )
@@ -712,20 +849,9 @@ fn federation(opts: &ExpOptions) -> Result<String> {
     let mut csv = String::from(
         "ratio,strategy,thrpt_mbps,origin_frac,core_util,regional_util,core_bytes,regional_bytes,wall_secs\n",
     );
-    for (label, core, regional, edge) in ratios {
-        for strat in [Strategy::CacheOnly, Strategy::Hpm] {
-            let cfg = SimConfig {
-                strategy: strat,
-                policy: PolicyKind::Lru,
-                cache_bytes: 8 << 30,
-                topology: TopologyKind::Federation {
-                    core_gbps: core,
-                    regional_gbps: regional,
-                    edge_gbps: edge,
-                },
-                ..Default::default()
-            };
-            let m = run(&trace, &cfg);
+    for (ri, (label, _topo)) in ratio_axis.iter().enumerate() {
+        for (si, strat) in strat_axis.into_iter().enumerate() {
+            let m = &reports[ri * strat_axis.len() + si].metrics;
             let (core_util, core_bytes) = m.tier_summary("core");
             let (reg_util, reg_bytes) = m.tier_summary("regional");
             t.row(vec![
@@ -754,25 +880,35 @@ fn federation(opts: &ExpOptions) -> Result<String> {
         }
     }
     write_csv(opts, "federation.csv", &csv)?;
+    write_reports(opts, "federation", &reports)?;
     Ok(t.render())
 }
 
 /// Extension: all five eviction policies at the smallest cache size
 /// (the paper compares only LRU/LFU and defers the rest, §V-B1).
 fn policies(opts: &ExpOptions) -> Result<String> {
+    let runner = Runner::new();
+    let strat_axis = [Strategy::CacheOnly, Strategy::Hpm];
     let mut out = String::new();
     let mut csv = String::from("observatory,policy,strategy,agg_mbps,origin_frac,recall\n");
+    let mut reports = Vec::new();
     for obs in ["ooi", "gage"] {
         let trace = build_trace(obs, opts)?;
-        let smallest = cache_grid(obs)[0].1;
+        let mut base = Scenario::preset(Strategy::Hpm);
+        base.cache_bytes = cache_grid(obs)[0].1;
+        base.workload = workload_for(obs, opts);
+        let sweep = ScenarioGrid::new(base)
+            .policies(&PolicyKind::ALL)
+            .strategies(&strat_axis);
+        let obs_reports = sweep.run(&runner, &trace);
         let mut t = Table::new(&format!(
             "Eviction-policy comparison — {} at the smallest cache (volume-weighted Mbps / origin fraction)",
             trace.observatory
         ))
         .header(&["Policy", "Cache Only", "HPM", "HPM origin", "HPM recall"]);
-        for policy in PolicyKind::ALL {
-            let cache = sim(&trace, Strategy::CacheOnly, policy, smallest);
-            let hpm = sim(&trace, Strategy::Hpm, policy, smallest);
+        for (pi, policy) in PolicyKind::ALL.into_iter().enumerate() {
+            let cache = &obs_reports[pi * strat_axis.len()].metrics;
+            let hpm = &obs_reports[pi * strat_axis.len() + 1].metrics;
             t.row(vec![
                 policy.name().to_string(),
                 format!("{:.2}", cache.agg_throughput_mbps()),
@@ -780,7 +916,7 @@ fn policies(opts: &ExpOptions) -> Result<String> {
                 format!("{:.4}", hpm.origin_fraction()),
                 format!("{:.4}", hpm.recall),
             ]);
-            for (strat, m) in [(Strategy::CacheOnly, &cache), (Strategy::Hpm, &hpm)] {
+            for (strat, m) in [(Strategy::CacheOnly, cache), (Strategy::Hpm, hpm)] {
                 let _ = writeln!(
                     csv,
                     "{},{},{},{:.3},{:.4},{:.4}",
@@ -795,8 +931,10 @@ fn policies(opts: &ExpOptions) -> Result<String> {
         }
         out.push_str(&t.render());
         out.push('\n');
+        reports.extend(obs_reports);
     }
     write_csv(opts, "policies.csv", &csv)?;
+    write_reports(opts, "policies", &reports)?;
     Ok(out)
 }
 
@@ -824,6 +962,17 @@ mod tests {
     #[test]
     fn unknown_id_errors() {
         assert!(run_experiment("fig99", &tiny_opts()).is_err());
+    }
+
+    #[test]
+    fn experiment_ids_parse_normalized() {
+        assert_eq!("FIG9".parse::<ExpId>().unwrap(), ExpId("fig9"));
+        assert_eq!("Table_3".parse::<ExpId>().unwrap(), ExpId("table3"));
+        assert_eq!("all".parse::<ExpId>().unwrap(), ExpId("all"));
+        let err = "fig99".parse::<ExpId>().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown experiment id 'fig99'"), "{msg}");
+        assert!(msg.contains("headline") && msg.contains("scale"), "{msg}");
     }
 
     #[test]
@@ -888,5 +1037,34 @@ mod tests {
         let out = run_experiment("traffic", &opts).unwrap();
         assert!(out.contains("Traffic sweep"));
         assert!(out.contains("100"));
+    }
+
+    #[test]
+    fn harness_writes_csv_and_report_json() {
+        let dir = std::env::temp_dir().join("obsd_exp_reports_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = ExpOptions {
+            scale: 0.05,
+            days_factor: 0.3,
+            out_dir: Some(dir.clone()),
+            seed: None,
+        };
+        run_experiment("federation", &opts).unwrap();
+        let csv = std::fs::read_to_string(dir.join("federation.csv")).unwrap();
+        assert!(csv.starts_with("ratio,strategy"));
+        let json = std::fs::read_to_string(dir.join("federation.json")).unwrap();
+        let v = Json::parse(&json).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 8, "4 ratios × 2 strategies");
+        assert_eq!(
+            arr[0].get("scenario").unwrap().get("strategy").unwrap().as_str(),
+            Some("Cache Only")
+        );
+        // The echo records the workload actually run, not a default.
+        let wl = arr[0].get("scenario").unwrap().get("workload").unwrap();
+        assert_eq!(wl.get("observatory").unwrap().as_str(), Some("federation"));
+        assert_eq!(wl.get("scale").unwrap().as_f64(), Some(0.05));
+        assert!(arr[0].get("metrics").unwrap().get("requests_total").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

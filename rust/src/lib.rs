@@ -28,6 +28,10 @@
 //! * [`placement`] — virtual groups and local data hubs (§IV-C2).
 //! * [`coordinator`] — the push-based delivery framework itself:
 //!   request routing, observatory service model, push engine (§IV-D).
+//! * [`scenario`] — the composable scenario API: orthogonal
+//!   delivery/model/cache/topology/arrival axes, the unified
+//!   [`scenario::Runner`], declarative [`scenario::ScenarioGrid`]
+//!   sweeps (DESIGN.md §8).
 //! * [`runtime`] — PJRT execution of the AOT artifacts.
 //! * [`metrics`], [`analysis`], [`experiments`] — evaluation (§V).
 
@@ -39,6 +43,7 @@ pub mod metrics;
 pub mod placement;
 pub mod prefetch;
 pub mod runtime;
+pub mod scenario;
 pub mod simnet;
 pub mod trace;
 pub mod util;

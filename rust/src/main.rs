@@ -17,10 +17,10 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use obsd::cache::policy::PolicyKind;
-use obsd::coordinator::{run, run_streaming, SimConfig};
 use obsd::experiments::{self, ExpOptions};
 use obsd::prefetch::Strategy;
-use obsd::simnet::NetCondition;
+use obsd::scenario::{Delivery, ModelSpec, Runner, Scenario};
+use obsd::simnet::{NetCondition, TopologyKind};
 use obsd::trace::{generator, presets};
 
 const USAGE: &str = "\
@@ -30,19 +30,29 @@ USAGE:
   repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|scale|policies|federation|all>
                    [--scale F] [--days F] [--out DIR] [--quick] [--seed N]
   repro analyze [--scale F]
-  repro simulate --observatory <ooi|gage|heavy|federation|scale|tiny> [--strategy S] [--policy P]
+  repro simulate --observatory <ooi|gage|heavy|federation|scale|tiny>
+                 [--strategy no-cache|cache-only|md1|md2|hpm]
+                 [--delivery framework|direct-wan] [--model none|markov|mesh|hybrid]
+                 [--offset F] [--top-n N] [--policy lru|lfu|fifo|size|gdsf]
                  [--cache-gb F] [--net best|medium|worst] [--traffic F]
                  [--topology vdc|hierarchical|federation]
-                 [--users N] [--streaming]
-                 [--no-placement] [--scale F] [--seed N]
+                 [--users N] [--streaming] [--no-placement]
+                 [--scale F] [--days F] [--seed N] [--quick] [--json]
   repro generate-trace --observatory <ooi|gage> [--scale F] [--out FILE]
   repro runtime-check [--artifacts DIR]
   repro help
 
-`--users N` overrides the preset's user population; `--streaming` runs
-the simulation over the lazy arrival source (O(active-users) memory —
-required for million-user populations) instead of materializing the
-trace first.  Both paths are bit-identical for the same seed.
+Scenario axes (simulate): `--strategy` is preset sugar for the paper's
+five-point grid; the orthogonal axes override it — `--delivery` picks
+direct commodity WAN vs the framework's DTN fabric, `--model` the
+prefetch model (with `--offset`/`--top-n` tuning its knobs), `--policy`
+the eviction policy, `--topology` the deployment.  `--users N`
+overrides the preset's user population; `--streaming` runs over the
+lazy arrival source (O(active-users) memory — required for
+million-user populations) instead of materializing the trace first;
+both paths are bit-identical for the same seed.  `--quick` shrinks the
+workload for smoke runs; `--json` prints the full RunReport (scenario
+echo + metrics) as JSON on stdout.
 ";
 
 fn main() {
@@ -62,7 +72,7 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
             bail!("unexpected argument '{a}' (flags are --name value)");
         };
         // Boolean flags.
-        if matches!(key, "quick" | "no-placement" | "streaming") {
+        if matches!(key, "quick" | "no-placement" | "streaming" | "json") {
             flags.insert(key.to_string(), "true".to_string());
             i += 1;
             continue;
@@ -145,71 +155,103 @@ fn cmd_analyze(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+/// Build the scenario a `simulate` invocation describes: `--strategy`
+/// seeds the builder as preset sugar, then every explicit axis flag
+/// overrides.
+fn scenario_from_flags(flags: &HashMap<String, String>) -> Result<Scenario> {
     let obs = flags
         .get("observatory")
         .context("--observatory is required")?;
-    let mut preset = presets::by_name(obs).with_context(|| {
-        format!("unknown observatory '{obs}' (ooi|gage|heavy|federation|scale|tiny)")
-    })?;
-    preset.scale *= get_f64(flags, "scale", 1.0)?;
+    let mut b = match flags.get("strategy") {
+        None => Scenario::builder(),
+        Some(s) => obsd::scenario::ScenarioBuilder::preset(s.parse::<Strategy>()?),
+    };
+    b = b.observatory(obs).cache_gb(get_f64(flags, "cache-gb", 8.0)?);
+    if let Some(d) = flags.get("delivery") {
+        let delivery = d.parse::<Delivery>()?;
+        b = b.delivery(delivery);
+        // Direct-WAN implies no prefetch model: clear the hybrid
+        // default rather than erroring about a flag the user never
+        // passed (an *explicit* --model still gets the typed error).
+        if delivery == Delivery::DirectWan && !flags.contains_key("model") {
+            b = b.model(ModelSpec::none());
+        }
+    }
+    if let Some(m) = flags.get("model") {
+        b = b.model(m.parse::<ModelSpec>()?);
+    }
+    if let Some(p) = flags.get("policy") {
+        b = b.policy(p.parse::<PolicyKind>()?);
+    }
+    if let Some(n) = flags.get("net") {
+        b = b.net(n.parse::<NetCondition>()?);
+    }
+    if let Some(t) = flags.get("topology") {
+        b = b.topology(t.parse::<TopologyKind>()?);
+    }
+    let quick = flags.contains_key("quick");
+    // Smoke mode (`--quick`): shrink the workload unless overridden —
+    // what CI's scenario smoke job runs.
+    let default_scale = if quick { 0.25 } else { 1.0 };
+    let default_days = if quick { 0.5 } else { 1.0 };
+    b = b
+        .traffic_factor(get_f64(flags, "traffic", 1.0)?)
+        .placement(!flags.contains_key("no-placement"))
+        .workload_scale(get_f64(flags, "scale", default_scale)?)
+        .days_factor(get_f64(flags, "days", default_days)?);
     if let Some(users) = flags.get("users") {
-        preset.n_users = users.parse().context("--users must be an integer")?;
+        b = b.users(users.parse().context("--users must be an integer")?);
     }
     if let Some(seed) = flags.get("seed") {
-        preset.seed = seed.parse().context("--seed must be an integer")?;
+        b = b.trace_seed(seed.parse().context("--seed must be an integer")?);
     }
-    let strategy = match flags.get("strategy") {
-        None => Strategy::Hpm,
-        Some(s) => Strategy::parse(s).with_context(|| format!("bad --strategy '{s}'"))?,
-    };
-    let policy = match flags.get("policy") {
-        None => PolicyKind::Lru,
-        Some(p) => PolicyKind::parse(p).with_context(|| format!("bad --policy '{p}'"))?,
-    };
-    let net = match flags.get("net") {
-        None => NetCondition::Best,
-        Some(n) => NetCondition::parse(n).with_context(|| format!("bad --net '{n}'"))?,
-    };
-    let topology = match flags.get("topology") {
-        None => obsd::simnet::TopologyKind::VdcStar,
-        Some(t) => obsd::simnet::TopologyKind::parse(t)
-            .with_context(|| format!("bad --topology '{t}' (vdc|hierarchical|federation)"))?,
-    };
-    let cfg = SimConfig {
-        strategy,
-        policy,
-        cache_bytes: (get_f64(flags, "cache-gb", 8.0)? * (1u64 << 30) as f64) as u64,
-        net,
-        topology,
-        traffic_factor: get_f64(flags, "traffic", 1.0)?,
-        placement: !flags.contains_key("no-placement"),
-        ..Default::default()
-    };
-    let m = if flags.contains_key("streaming") {
-        let (hu, r, t, o) = preset.user_counts();
-        eprintln!(
-            "streaming {} users ({obs}), strategy={}, policy={}, cache={}, net={} ...",
-            hu + r + t + o,
-            strategy.name(),
-            policy.name(),
-            obsd::util::fmt_bytes(cfg.cache_bytes as f64),
-            net.name()
-        );
-        run_streaming(&preset, &cfg)
-    } else {
-        eprintln!("generating {obs} trace ...");
-        let trace = generator::generate(&preset);
-        eprintln!(
-            "simulating {} requests, strategy={}, policy={}, cache={}, net={} ...",
-            trace.requests.len(),
-            strategy.name(),
-            policy.name(),
-            obsd::util::fmt_bytes(cfg.cache_bytes as f64),
-            net.name()
-        );
-        run(&trace, &cfg)
-    };
+    if flags.contains_key("streaming") {
+        b = b.streaming();
+    }
+    let mut sc = b.build()?;
+    // Knob flags tune the chosen model in place.
+    if let Some(offset) = flags.get("offset") {
+        if sc.model.knobs().is_none() {
+            bail!("--offset requires a prefetch model (--model markov|mesh|hybrid)");
+        }
+        sc.model = sc
+            .model
+            .with_offset(offset.parse().context("--offset must be a number")?);
+    }
+    if let Some(top_n) = flags.get("top-n") {
+        if sc.model.knobs().is_none() {
+            bail!("--top-n requires a prefetch model (--model markov|mesh|hybrid)");
+        }
+        sc.model = sc
+            .model
+            .with_top_n(top_n.parse().context("--top-n must be an integer")?);
+    }
+    // Knob flags bypass the builder, so re-check the invariants (e.g.
+    // `--offset inf` must be a typed error, not a mid-run panic).
+    sc.validate()?;
+    Ok(sc)
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let sc = scenario_from_flags(flags)?;
+    let preset = sc.workload.resolve()?;
+    let (hu, r, t, o) = preset.user_counts();
+    eprintln!(
+        "{} {} users ({}), strategy={}, policy={}, cache={}, net={} ...",
+        if flags.contains_key("streaming") { "streaming" } else { "simulating" },
+        hu + r + t + o,
+        sc.workload.observatory,
+        sc.strategy_name(),
+        sc.policy.name(),
+        obsd::util::fmt_bytes(sc.cache_bytes as f64),
+        sc.net.name()
+    );
+    let report = Runner::new().run(&sc)?;
+    if flags.contains_key("json") {
+        println!("{}", report.to_json().to_string_pretty());
+        return Ok(());
+    }
+    let m = &report.metrics;
     println!("requests            {}", m.requests_total);
     println!("throughput (mean)   {:.2} Mbps", m.throughput_mbps());
     println!("throughput (volume) {:.2} Mbps", m.agg_throughput_mbps());

@@ -8,6 +8,9 @@
 //!   (Table III), and how requests are served locally — split between
 //!   previously cached and pre-fetched data (Fig. 13).
 
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
 use crate::util::stats::Accum;
 
 /// How one demand request was (predominantly) served.
@@ -172,6 +175,150 @@ impl RunMetrics {
             1.0 - self.origin_bytes / baseline_origin_bytes
         }
     }
+
+    /// Machine-readable form of the run: every counter and accumulator
+    /// plus the derived headline figures, for `RunReport` artifacts
+    /// (`repro simulate --json`, experiment `<id>.json` files).
+    pub fn to_json(&self) -> Json {
+        let accum = |a: &Accum| {
+            let mut m = BTreeMap::new();
+            m.insert("count".to_string(), Json::Num(a.count as f64));
+            m.insert("sum".to_string(), Json::Num(a.sum));
+            m.insert("mean".to_string(), Json::Num(a.mean()));
+            Json::Obj(m)
+        };
+        let mut m = BTreeMap::new();
+        m.insert("requests_total".to_string(), Json::Num(self.requests_total as f64));
+        m.insert(
+            "requests_to_observatory".to_string(),
+            Json::Num(self.requests_to_observatory as f64),
+        );
+        m.insert(
+            "served_local_cache".to_string(),
+            Json::Num(self.served_local_cache as f64),
+        );
+        m.insert(
+            "served_local_prefetch".to_string(),
+            Json::Num(self.served_local_prefetch as f64),
+        );
+        m.insert("served_peer".to_string(), Json::Num(self.served_peer as f64));
+        m.insert("origin_bytes".to_string(), Json::Num(self.origin_bytes));
+        m.insert("cache_bytes".to_string(), Json::Num(self.cache_bytes));
+        m.insert("placement_bytes".to_string(), Json::Num(self.placement_bytes));
+        m.insert("sum_bytes".to_string(), Json::Num(self.sum_bytes));
+        m.insert("sum_elapsed".to_string(), Json::Num(self.sum_elapsed));
+        m.insert("recall".to_string(), Json::Num(self.recall));
+        m.insert("peak_flows".to_string(), Json::Num(self.peak_flows as f64));
+        m.insert(
+            "peak_req_states".to_string(),
+            Json::Num(self.peak_req_states as f64),
+        );
+        m.insert("wall_secs".to_string(), Json::Num(self.wall_secs));
+        m.insert("throughput".to_string(), accum(&self.throughput));
+        m.insert("latency".to_string(), accum(&self.latency));
+        m.insert("peer_throughput".to_string(), accum(&self.peer_throughput));
+        m.insert("throughput_mbps".to_string(), Json::Num(self.throughput_mbps()));
+        m.insert(
+            "agg_throughput_mbps".to_string(),
+            Json::Num(self.agg_throughput_mbps()),
+        );
+        m.insert("latency_secs".to_string(), Json::Num(self.latency_secs()));
+        m.insert("origin_fraction".to_string(), Json::Num(self.origin_fraction()));
+        m.insert(
+            "interior_util".to_string(),
+            Json::Arr(
+                self.interior_util
+                    .iter()
+                    .map(|u| {
+                        let mut t = BTreeMap::new();
+                        t.insert("tier".to_string(), Json::Str(u.tier.to_string()));
+                        t.insert("from".to_string(), Json::Num(u.from as f64));
+                        t.insert("to".to_string(), Json::Num(u.to as f64));
+                        t.insert("carried_bytes".to_string(), Json::Num(u.carried_bytes));
+                        t.insert("utilization".to_string(), Json::Num(u.utilization));
+                        Json::Obj(t)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    /// Field-by-field *bit* comparison against another run, wall-clock
+    /// excluded.  Returns one human-readable line per mismatch (empty ⇒
+    /// the runs are bit-identical) — the primitive behind the parity
+    /// property tests and `RunReport` diffing between trajectories.
+    pub fn diff_bits(&self, other: &RunMetrics) -> Vec<String> {
+        let mut diffs = Vec::new();
+        let counters = [
+            ("requests_total", self.requests_total, other.requests_total),
+            (
+                "requests_to_observatory",
+                self.requests_to_observatory,
+                other.requests_to_observatory,
+            ),
+            ("served_local_cache", self.served_local_cache, other.served_local_cache),
+            (
+                "served_local_prefetch",
+                self.served_local_prefetch,
+                other.served_local_prefetch,
+            ),
+            ("served_peer", self.served_peer, other.served_peer),
+            ("peak_flows", self.peak_flows, other.peak_flows),
+            ("peak_req_states", self.peak_req_states, other.peak_req_states),
+            ("throughput.count", self.throughput.count, other.throughput.count),
+            ("latency.count", self.latency.count, other.latency.count),
+            (
+                "peer_throughput.count",
+                self.peer_throughput.count,
+                other.peer_throughput.count,
+            ),
+        ];
+        for (name, x, y) in counters {
+            if x != y {
+                diffs.push(format!("{name}: {x} vs {y}"));
+            }
+        }
+        let floats = [
+            ("origin_bytes", self.origin_bytes, other.origin_bytes),
+            ("cache_bytes", self.cache_bytes, other.cache_bytes),
+            ("placement_bytes", self.placement_bytes, other.placement_bytes),
+            ("sum_bytes", self.sum_bytes, other.sum_bytes),
+            ("sum_elapsed", self.sum_elapsed, other.sum_elapsed),
+            ("recall", self.recall, other.recall),
+            ("throughput.sum", self.throughput.sum, other.throughput.sum),
+            ("latency.sum", self.latency.sum, other.latency.sum),
+            (
+                "peer_throughput.sum",
+                self.peer_throughput.sum,
+                other.peer_throughput.sum,
+            ),
+        ];
+        for (name, x, y) in floats {
+            if x.to_bits() != y.to_bits() {
+                diffs.push(format!("{name}: {x} vs {y}"));
+            }
+        }
+        if self.interior_util.len() != other.interior_util.len() {
+            diffs.push(format!(
+                "interior_util.len: {} vs {}",
+                self.interior_util.len(),
+                other.interior_util.len()
+            ));
+        } else {
+            for (x, y) in self.interior_util.iter().zip(&other.interior_util) {
+                if x.tier != y.tier {
+                    diffs.push(format!("tier label: {} vs {}", x.tier, y.tier));
+                } else if x.carried_bytes.to_bits() != y.carried_bytes.to_bits() {
+                    diffs.push(format!(
+                        "carried {} {}->{}: {} vs {}",
+                        x.tier, x.from, x.to, x.carried_bytes, y.carried_bytes
+                    ));
+                }
+            }
+        }
+        diffs
+    }
 }
 
 #[cfg(test)]
@@ -213,5 +360,32 @@ mod tests {
         assert_eq!(m.throughput_mbps(), 0.0);
         assert_eq!(m.latency_secs(), 0.0);
         assert_eq!(m.origin_fraction(), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrips_and_carries_expected_keys() {
+        let mut m = RunMetrics::new();
+        m.record_served(ServedBy::Observatory);
+        m.origin_bytes = 1.5e9;
+        m.throughput.add(2.0e8);
+        let text = m.to_json().to_string_pretty();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("requests_total").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("origin_bytes").unwrap().as_f64(), Some(1.5e9));
+        assert!(v.get("throughput").unwrap().get("mean").is_some());
+        assert!(v.get("interior_util").unwrap().as_arr().is_some());
+    }
+
+    #[test]
+    fn diff_bits_finds_exact_mismatches() {
+        let mut a = RunMetrics::new();
+        a.record_served(ServedBy::Peer);
+        a.origin_bytes = 10.0;
+        let b = a.clone();
+        assert!(a.diff_bits(&b).is_empty());
+        a.origin_bytes = 10.0 + 1e-12;
+        let diffs = a.diff_bits(&b);
+        assert_eq!(diffs.len(), 1, "{diffs:?}");
+        assert!(diffs[0].starts_with("origin_bytes"), "{diffs:?}");
     }
 }

@@ -25,7 +25,7 @@ use std::collections::HashMap;
 
 use crate::prefetch::arima::GapPredictor;
 use crate::prefetch::assoc::{AssocConfig, AssocModel};
-use crate::prefetch::{Action, Prediction, PrefetchModel, ASSOC_TOP_N, PREFETCH_OFFSET};
+use crate::prefetch::{Action, ModelKnobs, Prediction, PrefetchModel};
 use crate::trace::classifier::{OnlineClassifier, ProgramClass};
 use crate::trace::{Request, StreamId, TimeRange, Trace, UserId};
 
@@ -35,6 +35,9 @@ const CACHE_TOLERANCE: f64 = 0.2;
 
 /// The hybrid pre-fetching model.
 pub struct Hpm {
+    /// Lead offset + prediction width ([`ModelKnobs::default`] is the
+    /// paper configuration; the scenario API sweeps both).
+    knobs: ModelKnobs,
     classifier: OnlineClassifier,
     assoc: AssocModel,
     predictor: Box<dyn GapPredictor>,
@@ -51,8 +54,15 @@ impl Hpm {
         Self::with_assoc_config(predictor, AssocConfig::default())
     }
 
+    pub fn with_knobs(predictor: Box<dyn GapPredictor>, knobs: ModelKnobs) -> Self {
+        let mut hpm = Self::new(predictor);
+        hpm.knobs = knobs;
+        hpm
+    }
+
     pub fn with_assoc_config(predictor: Box<dyn GapPredictor>, cfg: AssocConfig) -> Self {
         Self {
+            knobs: ModelKnobs::default(),
             classifier: OnlineClassifier::new(),
             assoc: AssocModel::new(cfg),
             predictor,
@@ -95,7 +105,7 @@ impl Hpm {
             user: req.user,
             stream: req.stream,
             range,
-            fire_at: req.ts + PREFETCH_OFFSET * gap,
+            fire_at: req.ts + self.knobs.offset * gap,
         })]
     }
 
@@ -105,13 +115,13 @@ impl Hpm {
             return Vec::new();
         }
         let session = self.assoc.session_items(req.user.0).to_vec();
-        let objects = self.assoc.predict(&session, ASSOC_TOP_N);
+        let objects = self.assoc.predict(&session, self.knobs.top_n);
         if objects.is_empty() {
             return Vec::new();
         }
         // ts_{i+1} = ts_i + (ts_i − ts_{i−1}); tr_{i+1} = tr_i (§IV-A3).
         let step = prev_ts.map(|p| (req.ts - p).max(1.0)).unwrap_or(60.0);
-        let fire_at = req.ts + PREFETCH_OFFSET * step;
+        let fire_at = req.ts + self.knobs.offset * step;
         objects
             .into_iter()
             .map(|obj| {

@@ -13,12 +13,15 @@
 
 use std::collections::HashMap;
 
-use crate::prefetch::{Action, Prediction, PrefetchModel, ASSOC_TOP_N, PREFETCH_OFFSET};
+use crate::prefetch::{Action, ModelKnobs, Prediction, PrefetchModel};
 use crate::trace::{Request, SiteId, StreamId, TimeRange, Trace, UserId};
 
 /// First-order Markov chain over sites + per-site stream popularity.
 #[derive(Debug, Default)]
 pub struct MarkovModel {
+    /// Lead offset + prediction width ([`ModelKnobs::default`] is the
+    /// paper configuration; the scenario API sweeps both).
+    knobs: ModelKnobs,
     /// site → (next site → count).
     transitions: HashMap<SiteId, HashMap<SiteId, u64>>,
     /// site → (stream → popularity count).
@@ -29,7 +32,14 @@ pub struct MarkovModel {
 
 impl MarkovModel {
     pub fn new() -> Self {
-        Self::default()
+        Self::with_knobs(ModelKnobs::default())
+    }
+
+    pub fn with_knobs(knobs: ModelKnobs) -> Self {
+        Self {
+            knobs,
+            ..Self::default()
+        }
     }
 
     /// Most likely next site from `site` (ties → smaller id, stable).
@@ -80,13 +90,13 @@ impl PrefetchModel for MarkovModel {
             return Vec::new();
         };
         let gap = (req.ts - prev_ts).max(1.0);
-        let fire_at = req.ts + PREFETCH_OFFSET * gap;
+        let fire_at = req.ts + self.knobs.offset * gap;
         // Popularity-based scheme: pre-fetches the popular objects of
         // the predicted region over the *observed* time range — unlike
         // MD2, it has no temporal model to advance the window, which is
         // exactly why its recall trails (paper §V-B1).
         let range = req.range;
-        self.top_streams(next_site, ASSOC_TOP_N)
+        self.top_streams(next_site, self.knobs.top_n)
             .into_iter()
             .map(|stream| {
                 Action::Prefetch(Prediction {

@@ -13,7 +13,7 @@ use std::collections::HashMap;
 
 use crate::prefetch::arima::GapPredictor;
 use crate::prefetch::assoc::{AssocConfig, AssocModel};
-use crate::prefetch::{Action, Prediction, PrefetchModel, ASSOC_TOP_N, PREFETCH_OFFSET};
+use crate::prefetch::{Action, ModelKnobs, Prediction, PrefetchModel};
 use crate::trace::{Request, StreamId, Trace, UserId};
 
 /// Mesh cell edge length in the synthetic site geography.
@@ -21,6 +21,9 @@ const CELL_SIZE: f64 = 15.0;
 
 /// MD2: mesh-cell association rules + per-user ARIMA timing.
 pub struct MeshModel {
+    /// Lead offset + prediction width ([`ModelKnobs::default`] is the
+    /// paper configuration; the scenario API sweeps both).
+    knobs: ModelKnobs,
     assoc: AssocModel,
     predictor: Box<dyn GapPredictor>,
     /// user → recent inter-arrival gaps (all requests, unclassified).
@@ -39,7 +42,12 @@ const GAP_CAP: usize = 64;
 
 impl MeshModel {
     pub fn new(predictor: Box<dyn GapPredictor>) -> Self {
+        Self::with_knobs(predictor, ModelKnobs::default())
+    }
+
+    pub fn with_knobs(predictor: Box<dyn GapPredictor>, knobs: ModelKnobs) -> Self {
         Self {
+            knobs,
             assoc: AssocModel::new(AssocConfig::default()),
             predictor,
             gaps: HashMap::new(),
@@ -133,7 +141,7 @@ impl PrefetchModel for MeshModel {
 
         // Spatial: predicted next cells from the session's cells.
         let session = self.assoc.session_items(req.user.0).to_vec();
-        let mut cells = self.assoc.predict(&session, ASSOC_TOP_N);
+        let mut cells = self.assoc.predict(&session, self.knobs.top_n);
         // Fall back to the current cell when rules don't fire (the
         // scheme still prefetches popular content of the active region).
         if cells.is_empty() {
@@ -143,11 +151,11 @@ impl PrefetchModel for MeshModel {
         // Temporal: ARIMA gap forecast; pre-fetch the window advanced
         // to the predicted next access.
         let gap = self.predict_gap(req.user).max(1.0);
-        let fire_at = req.ts + PREFETCH_OFFSET * gap;
+        let fire_at = req.ts + self.knobs.offset * gap;
         let range = crate::trace::TimeRange::new(req.range.start + gap, req.range.end + gap);
 
         let mut out = Vec::new();
-        let mut budget = ASSOC_TOP_N;
+        let mut budget = self.knobs.top_n;
         for c in cells {
             if budget == 0 {
                 break;
@@ -237,7 +245,7 @@ mod tests {
         let acts = m.observe(&req(&trace, 0, ts + 10.0, 0), &trace);
         // Popular cells exist, so MD2 prefetches something.
         assert!(!acts.is_empty());
-        assert!(acts.len() <= ASSOC_TOP_N);
+        assert!(acts.len() <= crate::prefetch::ASSOC_TOP_N);
         for a in &acts {
             match a {
                 Action::Prefetch(p) => assert!(p.fire_at > ts),

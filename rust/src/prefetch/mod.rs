@@ -22,14 +22,35 @@ pub mod mesh;
 pub mod streaming;
 
 use crate::trace::{Request, StreamId, TimeRange, Trace, UserId};
+use crate::util::parse::{lookup, ParseError};
 
 /// Pre-fetch lead offset: fetch at `ts_i + OFFSET · (ts_pred − ts_i)`
-/// (paper §IV-A2, empirically 0.8).
+/// (paper §IV-A2, empirically 0.8).  Default for [`ModelKnobs::offset`].
 pub const PREFETCH_OFFSET: f64 = 0.8;
 
 /// Max data objects pre-fetched per association-rule prediction
-/// (paper §IV-A3, empirically 3).
+/// (paper §IV-A3, empirically 3).  Default for [`ModelKnobs::top_n`].
 pub const ASSOC_TOP_N: usize = 3;
+
+/// Per-model tuning knobs shared by every pre-fetching model.  The
+/// paper's empirical values are the defaults; the scenario API
+/// ([`crate::scenario::ModelSpec`]) exposes both as sweepable axes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelKnobs {
+    /// Pre-fetch lead offset: fire at `ts_i + offset · (ts_pred − ts_i)`.
+    pub offset: f64,
+    /// Max objects pre-fetched per association/popularity prediction.
+    pub top_n: usize,
+}
+
+impl Default for ModelKnobs {
+    fn default() -> Self {
+        Self {
+            offset: PREFETCH_OFFSET,
+            top_n: ASSOC_TOP_N,
+        }
+    }
+}
 
 /// A predicted future request to pre-fetch for.
 #[derive(Debug, Clone, PartialEq)]
@@ -104,15 +125,10 @@ impl Strategy {
         }
     }
 
+    /// [`FromStr`](std::str::FromStr) as an `Option` (legacy signature;
+    /// callers that want the alias-listing error use `s.parse()`).
     pub fn parse(s: &str) -> Option<Strategy> {
-        match s.to_ascii_lowercase().replace([' ', '-', '_'], "").as_str() {
-            "nocache" => Some(Strategy::NoCache),
-            "cacheonly" | "cache" => Some(Strategy::CacheOnly),
-            "md1" => Some(Strategy::Md1),
-            "md2" => Some(Strategy::Md2),
-            "hpm" => Some(Strategy::Hpm),
-            _ => None,
-        }
+        s.parse().ok()
     }
 
     pub fn uses_cache(&self) -> bool {
@@ -121,6 +137,27 @@ impl Strategy {
 
     pub fn uses_prefetch(&self) -> bool {
         matches!(self, Strategy::Md1 | Strategy::Md2 | Strategy::Hpm)
+    }
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = ParseError;
+
+    /// Accepts the paper names and their documented aliases; the error
+    /// for a bad value lists every accepted alias (`cache` is an
+    /// explicit, documented alias of `cache-only`, not a silent one).
+    fn from_str(s: &str) -> Result<Self, ParseError> {
+        lookup(
+            "strategy",
+            s,
+            &[
+                (&["no-cache"], Strategy::NoCache),
+                (&["cache-only", "cache"], Strategy::CacheOnly),
+                (&["md1"], Strategy::Md1),
+                (&["md2"], Strategy::Md2),
+                (&["hpm"], Strategy::Hpm),
+            ],
+        )
     }
 }
 
@@ -136,6 +173,23 @@ mod tests {
         assert_eq!(Strategy::parse("hpm"), Some(Strategy::Hpm));
         assert_eq!(Strategy::parse("no-cache"), Some(Strategy::NoCache));
         assert_eq!(Strategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn strategy_parse_error_lists_aliases() {
+        let err = "bogus".parse::<Strategy>().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown strategy 'bogus'"), "{msg}");
+        for alias in ["no-cache", "cache-only", "cache", "md1", "md2", "hpm"] {
+            assert!(msg.contains(alias), "missing alias {alias} in: {msg}");
+        }
+    }
+
+    #[test]
+    fn model_knobs_default_to_paper_values() {
+        let k = ModelKnobs::default();
+        assert_eq!(k.offset, PREFETCH_OFFSET);
+        assert_eq!(k.top_n, ASSOC_TOP_N);
     }
 
     #[test]

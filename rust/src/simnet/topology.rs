@@ -75,13 +75,26 @@ impl NetCondition {
         }
     }
 
+    /// [`FromStr`](std::str::FromStr) as an `Option` (legacy signature;
+    /// callers that want the alias-listing error use `s.parse()`).
     pub fn parse(s: &str) -> Option<NetCondition> {
-        match s.to_ascii_lowercase().as_str() {
-            "best" => Some(NetCondition::Best),
-            "medium" => Some(NetCondition::Medium),
-            "worst" => Some(NetCondition::Worst),
-            _ => None,
-        }
+        s.parse().ok()
+    }
+}
+
+impl std::str::FromStr for NetCondition {
+    type Err = crate::util::parse::ParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        crate::util::parse::lookup(
+            "network condition",
+            s,
+            &[
+                (&["best"], NetCondition::Best),
+                (&["medium"], NetCondition::Medium),
+                (&["worst"], NetCondition::Worst),
+            ],
+        )
     }
 }
 
@@ -111,18 +124,19 @@ impl TopologyKind {
         }
     }
 
-    /// Parse a topology name (CLI); `federation` gets the default
-    /// 80:40:20 Gbps tiers — sweeps set explicit values via the enum.
+    /// [`FromStr`](std::str::FromStr) as an `Option` (legacy signature;
+    /// callers that want the alias-listing error use `s.parse()`).
     pub fn parse(s: &str) -> Option<TopologyKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "vdc" | "star" => Some(TopologyKind::VdcStar),
-            "hier" | "hierarchical" => Some(TopologyKind::Hierarchical),
-            "federation" | "osdf" => Some(TopologyKind::Federation {
-                core_gbps: 80.0,
-                regional_gbps: 40.0,
-                edge_gbps: 20.0,
-            }),
-            _ => None,
+        s.parse().ok()
+    }
+
+    /// Default OSDF-style federation tiers (80:40:20 Gbps) — what the
+    /// name `federation` parses to; sweeps set explicit values.
+    pub fn federation_default() -> TopologyKind {
+        TopologyKind::Federation {
+            core_gbps: 80.0,
+            regional_gbps: 40.0,
+            edge_gbps: 20.0,
         }
     }
 
@@ -138,6 +152,24 @@ impl TopologyKind {
                 edge_gbps,
             } => Topology::federation(cond, wan_mbps, core_gbps, regional_gbps, edge_gbps),
         }
+    }
+}
+
+impl std::str::FromStr for TopologyKind {
+    type Err = crate::util::parse::ParseError;
+
+    /// `federation` parses to [`TopologyKind::federation_default`]'s
+    /// 80:40:20 Gbps tiers — sweeps set explicit values via the enum.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        crate::util::parse::lookup(
+            "topology",
+            s,
+            &[
+                (&["vdc", "star"], TopologyKind::VdcStar),
+                (&["hierarchical", "hier"], TopologyKind::Hierarchical),
+                (&["federation", "osdf"], TopologyKind::federation_default()),
+            ],
+        )
     }
 }
 

@@ -1,0 +1,97 @@
+//! Shared normalize-and-match parsing for the CLI-facing enums.
+//!
+//! Every selector the CLI accepts (strategy preset, eviction policy,
+//! network condition, topology, delivery path, prefetch model, arrival
+//! mode, experiment id) parses through [`lookup`]: the input is
+//! [`normalize`]d (case-folded, separators stripped) and matched
+//! against an alias table.  A miss produces a [`ParseError`] that lists
+//! every accepted alias, so a bad value never fails silently and every
+//! alias is documented by the error message itself.
+
+/// Case-fold and strip separator characters, so `"No Cache"`,
+/// `"no-cache"` and `"NO_CACHE"` all match the token `nocache`.
+pub fn normalize(s: &str) -> String {
+    s.chars()
+        .filter(|c| !matches!(c, ' ' | '-' | '_'))
+        .flat_map(|c| c.to_lowercase())
+        .collect()
+}
+
+/// Failed enum parse: what was being parsed, the offending input, and
+/// the full accepted-alias list (Display shows all three).
+///
+/// Display/Error are hand-implemented: `thiserror` is not in the
+/// vendored crate set (DESIGN.md §2 Substitutions).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    /// Human label of the value class ("strategy", "policy", ...).
+    pub what: &'static str,
+    /// The rejected input, verbatim.
+    pub got: String,
+    /// Every accepted alias, in table order.
+    pub accepted: Vec<&'static str>,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown {} '{}' (accepted: {})",
+            self.what,
+            self.got,
+            self.accepted.join(", ")
+        )
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Match a normalized input against an alias table.  Each table row is
+/// `(aliases, value)`; the first row containing the normalized token
+/// wins.  On a miss the error lists every alias of every row.
+pub fn lookup<T: Clone>(
+    what: &'static str,
+    input: &str,
+    table: &[(&[&'static str], T)],
+) -> Result<T, ParseError> {
+    let token = normalize(input);
+    for (aliases, value) in table {
+        if aliases.iter().any(|a| normalize(a) == token) {
+            return Ok(value.clone());
+        }
+    }
+    Err(ParseError {
+        what,
+        got: input.to_string(),
+        accepted: table.iter().flat_map(|(a, _)| a.iter().copied()).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TABLE: [(&[&str], u32); 2] = [(&["one", "uno"], 1), (&["two"], 2)];
+
+    #[test]
+    fn normalizes_case_and_separators() {
+        assert_eq!(normalize("No Cache"), "nocache");
+        assert_eq!(normalize("no-CACHE_"), "nocache");
+        assert_eq!(normalize("md1"), "md1");
+    }
+
+    #[test]
+    fn lookup_matches_any_alias() {
+        assert_eq!(lookup("n", "ONE", &TABLE), Ok(1));
+        assert_eq!(lookup("n", "Uno", &TABLE), Ok(1));
+        assert_eq!(lookup("n", "two", &TABLE), Ok(2));
+    }
+
+    #[test]
+    fn error_lists_all_aliases() {
+        let err = lookup("number", "three", &TABLE).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown number 'three'"), "{msg}");
+        assert!(msg.contains("one, uno, two"), "{msg}");
+    }
+}

@@ -1,5 +1,5 @@
 //! Integration tests across the full stack: trace generation →
-//! coordinator simulation → metrics, plus the AOT/PJRT runtime path
+//! scenario runner → metrics, plus the AOT/PJRT runtime path
 //! (Layer 1/2 artifacts executed from Layer 3).
 //!
 //! PJRT tests require `make artifacts` to have run; they skip (with a
@@ -7,12 +7,12 @@
 //! a fresh checkout.
 
 use obsd::cache::policy::PolicyKind;
-use obsd::coordinator::framework::run_with_backends;
-use obsd::coordinator::{run, SimConfig};
+use obsd::metrics::RunMetrics;
 use obsd::placement::kmeans::{ClusterBackend, RustKmeans};
 use obsd::prefetch::arima::{GapPredictor, RustArima};
 use obsd::prefetch::Strategy;
 use obsd::runtime::{artifacts_available, Engine};
+use obsd::scenario::{Runner, Scenario};
 use obsd::trace::{generator, presets, Trace};
 
 fn small_trace(name: &str) -> Trace {
@@ -22,13 +22,15 @@ fn small_trace(name: &str) -> Trace {
     generator::generate(&cfg)
 }
 
-fn cfg(strategy: Strategy) -> SimConfig {
-    SimConfig {
-        strategy,
-        policy: PolicyKind::Lru,
-        cache_bytes: 2 << 30,
-        ..Default::default()
-    }
+fn scenario(strategy: Strategy) -> Scenario {
+    let mut sc = Scenario::preset(strategy);
+    sc.policy = PolicyKind::Lru;
+    sc.cache_bytes = 2 << 30;
+    sc
+}
+
+fn sim(trace: &Trace, sc: &Scenario) -> RunMetrics {
+    Runner::new().run_trace(trace, sc).metrics
 }
 
 // ---------------------------------------------------------------------------
@@ -41,11 +43,11 @@ fn strategy_ordering_matches_paper_shape() {
     // strategies beat Cache Only beat No Cache, and HPM sends the
     // fewest requests to the origin.
     let trace = small_trace("ooi");
-    let none = run(&trace, &cfg(Strategy::NoCache));
-    let cache = run(&trace, &cfg(Strategy::CacheOnly));
-    let md1 = run(&trace, &cfg(Strategy::Md1));
-    let md2 = run(&trace, &cfg(Strategy::Md2));
-    let hpm = run(&trace, &cfg(Strategy::Hpm));
+    let none = sim(&trace, &scenario(Strategy::NoCache));
+    let cache = sim(&trace, &scenario(Strategy::CacheOnly));
+    let md1 = sim(&trace, &scenario(Strategy::Md1));
+    let md2 = sim(&trace, &scenario(Strategy::Md2));
+    let hpm = sim(&trace, &scenario(Strategy::Hpm));
 
     // Throughput ordering (paper: HPM > MD2 > MD1 > CacheOnly >> NoCache).
     assert!(cache.throughput_mbps() > none.throughput_mbps() * 50.0);
@@ -71,8 +73,8 @@ fn strategy_ordering_matches_paper_shape() {
 fn origin_traffic_reduction_headline() {
     // §VI headline: the framework reduces observatory network traffic.
     let trace = small_trace("ooi");
-    let none = run(&trace, &cfg(Strategy::NoCache));
-    let hpm = run(&trace, &cfg(Strategy::Hpm));
+    let none = sim(&trace, &scenario(Strategy::NoCache));
+    let hpm = sim(&trace, &scenario(Strategy::Hpm));
     let reduction = hpm.traffic_reduction_vs(none.origin_bytes);
     assert!(
         reduction > 0.2,
@@ -85,10 +87,10 @@ fn heavy_traffic_degrades_all_strategies() {
     // Table V rows: heavier request traffic lowers throughput.
     let trace = small_trace("ooi");
     for strategy in [Strategy::Md1, Strategy::Hpm] {
-        let regular = run(&trace, &cfg(strategy));
-        let mut heavy_cfg = cfg(strategy);
-        heavy_cfg.traffic_factor = 4.0;
-        let heavy = run(&trace, &heavy_cfg);
+        let regular = sim(&trace, &scenario(strategy));
+        let mut heavy_sc = scenario(strategy);
+        heavy_sc.traffic_factor = 4.0;
+        let heavy = sim(&trace, &heavy_sc);
         assert!(
             heavy.throughput_mbps() < regular.throughput_mbps(),
             "{}: heavy {} !< regular {}",
@@ -104,20 +106,20 @@ fn worst_network_hurts_no_cache_most() {
     // Table V columns: pre-fetching tolerates bandwidth loss; the
     // WAN-bound No Cache baseline collapses.
     let trace = small_trace("ooi");
-    let mut none_best = cfg(Strategy::NoCache);
+    let mut none_best = scenario(Strategy::NoCache);
     none_best.net = obsd::simnet::NetCondition::Best;
-    let mut none_worst = cfg(Strategy::NoCache);
+    let mut none_worst = scenario(Strategy::NoCache);
     none_worst.net = obsd::simnet::NetCondition::Worst;
-    let nb = run(&trace, &none_best);
-    let nw = run(&trace, &none_worst);
+    let nb = sim(&trace, &none_best);
+    let nw = sim(&trace, &none_worst);
     let none_drop = nw.throughput_mbps() / nb.throughput_mbps();
 
-    let mut hpm_best = cfg(Strategy::Hpm);
+    let mut hpm_best = scenario(Strategy::Hpm);
     hpm_best.net = obsd::simnet::NetCondition::Best;
-    let mut hpm_worst = cfg(Strategy::Hpm);
+    let mut hpm_worst = scenario(Strategy::Hpm);
     hpm_worst.net = obsd::simnet::NetCondition::Worst;
-    let hb = run(&trace, &hpm_best);
-    let hw = run(&trace, &hpm_worst);
+    let hb = sim(&trace, &hpm_best);
+    let hw = sim(&trace, &hpm_worst);
     let hpm_drop = hw.throughput_mbps() / hb.throughput_mbps();
 
     assert!(
@@ -130,13 +132,13 @@ fn worst_network_hurts_no_cache_most() {
 fn placement_ablation_improves_peer_throughput() {
     // Table IV direction: DP raises peer-retrieval throughput.
     let trace = small_trace("gage");
-    let mut with = cfg(Strategy::Hpm);
+    let mut with = scenario(Strategy::Hpm);
     with.placement = true;
     with.cache_bytes = 512 << 20;
     let mut without = with.clone();
     without.placement = false;
-    let w = run(&trace, &with);
-    let wo = run(&trace, &without);
+    let w = sim(&trace, &with);
+    let wo = sim(&trace, &without);
     // Placement must at least engage (replicas moved) without hurting
     // overall throughput materially.
     assert!(w.placement_bytes > 0.0, "placement never replicated");
@@ -146,7 +148,7 @@ fn placement_ablation_improves_peer_throughput() {
 #[test]
 fn gage_preset_full_pipeline() {
     let trace = small_trace("gage");
-    let m = run(&trace, &cfg(Strategy::Hpm));
+    let m = sim(&trace, &scenario(Strategy::Hpm));
     assert_eq!(m.requests_total as usize, trace.requests.len());
     assert!(m.recall > 0.2, "recall {}", m.recall);
 }
@@ -241,7 +243,9 @@ fn pjrt_stream_stats_sane() {
 #[test]
 fn full_simulation_on_pjrt_backends() {
     // The paper's system with its prediction models executing through
-    // the AOT/PJRT path — the three layers composing end-to-end.
+    // the AOT/PJRT path — the three layers composing end-to-end.  The
+    // PJRT engine plugs into the scenario Runner as a predictor
+    // factory (consumed per run).
     if !artifacts_available() {
         eprintln!("skipping: run `make artifacts` first");
         return;
@@ -249,11 +253,13 @@ fn full_simulation_on_pjrt_backends() {
     let mut cfgp = presets::tiny();
     cfgp.duration_days = 2.0;
     let trace = generator::generate(&cfgp);
-    let sim_cfg = cfg(Strategy::Hpm);
+    let sc = scenario(Strategy::Hpm);
 
-    let engine = Engine::load_default().unwrap();
-    let m_pjrt = run_with_backends(&trace, &sim_cfg, Box::new(engine), Box::new(RustKmeans));
-    let m_rust = run(&trace, &sim_cfg);
+    let pjrt_runner = Runner::new().with_predictor(|| -> Box<dyn GapPredictor> {
+        Box::new(Engine::load_default().unwrap())
+    });
+    let m_pjrt = pjrt_runner.run_trace(&trace, &sc).metrics;
+    let m_rust = sim(&trace, &sc);
 
     assert_eq!(m_pjrt.requests_total, m_rust.requests_total);
     // Same predictions (f32 rounding aside) → nearly identical metrics.

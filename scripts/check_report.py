@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Assert `repro simulate --json` RunReports parse with the expected keys.
+
+Usage: check_report.py REPORT.json [REPORT.json ...]
+
+Used by `make smoke` (and the CI scenario-smoke job): each file must be
+a JSON object with a full scenario echo and the run metrics, and the
+run must have served at least one request.
+"""
+import json
+import sys
+
+
+def check(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    for key in ("scenario", "metrics"):
+        assert key in doc, f"{path}: missing top-level '{key}'"
+    sc, m = doc["scenario"], doc["metrics"]
+    for key in (
+        "strategy",
+        "delivery",
+        "model",
+        "policy",
+        "cache_bytes",
+        "topology",
+        "net",
+        "traffic_factor",
+        "arrival",
+        "workload",
+    ):
+        assert key in sc, f"{path}: scenario echo missing '{key}'"
+    for key in (
+        "requests_total",
+        "requests_to_observatory",
+        "origin_bytes",
+        "origin_fraction",
+        "throughput_mbps",
+        "latency_secs",
+        "peak_flows",
+        "peak_req_states",
+        "interior_util",
+    ):
+        assert key in m, f"{path}: metrics missing '{key}'"
+    assert m["requests_total"] > 0, f"{path}: run served no requests"
+    print(
+        f"{path}: OK — {sc['strategy']} on {sc['topology']['kind']}"
+        f" ({sc['arrival']}), {int(m['requests_total'])} requests"
+    )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 2:
+        sys.exit(__doc__)
+    for p in sys.argv[1:]:
+        check(p)
