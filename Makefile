@@ -4,7 +4,7 @@
 # `make artifacts` is the optional one-time AOT step that lets the
 # PJRT runtime replace the pure-Rust prediction fallbacks.
 
-.PHONY: artifacts artifacts-quick test bench smoke
+.PHONY: artifacts artifacts-quick test bench smoke golden
 
 # Lower the JAX/Pallas models to HLO text + manifest.json under
 # rust/artifacts/ (the runtime's default search path).
@@ -27,10 +27,18 @@ test:
 bench:
 	cd rust && cargo bench
 
+# Regenerate the golden-report fixtures (tests/fixtures/*.report.json)
+# after an intentional behavior change, then verify once against the
+# fresh files; commit the result.  See rust/tests/golden.rs.
+golden:
+	cd rust && UPDATE_GOLDEN=1 cargo test -q --test golden
+	cd rust && GOLDEN_STRICT=1 cargo test -q --test golden
+
 # Scenario smoke (wired into CI): one preset and one non-preset axis
 # combination (markov + gdsf + federation + streaming) run end-to-end
-# with `--quick --json`; scripts/check_report.py asserts the RunReport
-# JSON parses with the expected keys.
+# with `--quick --json`, plus one quick experiment grid over the worker
+# pool (--jobs 4).  scripts/check_report.py validates the two simulate
+# reports and every <id>.json RunReport array the grid emits.
 smoke: artifacts-quick
 	cd rust && cargo build --release
 	rust/target/release/repro simulate --observatory tiny --quick --json \
@@ -38,4 +46,8 @@ smoke: artifacts-quick
 	rust/target/release/repro simulate --observatory tiny --quick --json \
 		--model markov --policy gdsf --topology federation --streaming \
 		> /tmp/obsd_smoke_combo.json
-	python3 scripts/check_report.py /tmp/obsd_smoke_preset.json /tmp/obsd_smoke_combo.json
+	rm -rf /tmp/obsd_smoke_grid
+	rust/target/release/repro experiment --id federation --quick --jobs 4 \
+		--out /tmp/obsd_smoke_grid
+	python3 scripts/check_report.py /tmp/obsd_smoke_preset.json \
+		/tmp/obsd_smoke_combo.json /tmp/obsd_smoke_grid/*.json

@@ -15,11 +15,14 @@ fn main() {
     b.min_samples = 1;
     b.min_warmup_iters = 1;
     println!("== experiments_bench (reduced scale) ==");
+    // jobs: 1 keeps per-experiment timings comparable across machines
+    // (sweep_bench measures the parallel speedup in isolation).
     let opts = ExpOptions {
         scale: 0.3,
         days_factor: 0.4,
         out_dir: None,
         seed: None,
+        jobs: 1,
     };
     for id in ALL_IDS {
         b.bench(&format!("experiment/{id}"), || {

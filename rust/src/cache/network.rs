@@ -175,23 +175,46 @@ mod tests {
     }
 
     /// Property: registry and stores stay consistent under arbitrary
-    /// insert/remove/access interleavings.
+    /// insert/access/remove/eviction interleavings across nodes — the
+    /// full `check_registry` invariant holds after *every* step (not
+    /// just at the end), and `peers_with` always agrees with a direct
+    /// scan of the stores.  Oversized inserts (up to 450 of 500
+    /// capacity bytes) force multi-entry evictions, the path where a
+    /// stale registry entry would dangle.
     #[test]
     fn prop_registry_consistent() {
+        const NODES: usize = 4;
+        const KEYS: u64 = 24;
         crate::util::prop::check("registry-consistent", |rng| {
-            let mut net = CacheNetwork::new(4, 500, PolicyKind::ALL[rng.below(5)]);
-            for step in 0..300 {
-                let node = rng.below(4);
-                let k = key(rng.below(24) as u64);
-                match rng.below(3) {
-                    0 => net.insert(node, k, (rng.below(300) + 1) as u64, Origin::Demand, step as f64),
+            let policy = PolicyKind::ALL[rng.below(PolicyKind::ALL.len())];
+            let mut net = CacheNetwork::new(NODES, 500, policy);
+            for step in 0..250 {
+                let node = rng.below(NODES);
+                let k = key(rng.below(KEYS as usize) as u64);
+                let origin = [Origin::Demand, Origin::Prefetch, Origin::Replica][rng.below(3)];
+                match rng.below(4) {
+                    0 => net.insert(node, k, (rng.below(300) + 1) as u64, origin, step as f64),
                     1 => net.remove(node, &k),
-                    _ => {
+                    2 => {
                         net.access(node, &k);
                     }
+                    // Near-capacity insert: evicts most of the node's
+                    // store in one call.
+                    _ => net.insert(node, k, (rng.below(150) + 300) as u64, origin, step as f64),
                 }
+                net.check_registry();
+                // Registry-vs-store agreement for peer lookup, probed
+                // at a key unrelated to the one just mutated.
+                let probe = key(rng.below(KEYS as usize) as u64);
+                let expect: Vec<usize> = (0..NODES)
+                    .filter(|&n| n != node && net.contains(n, &probe))
+                    .collect();
+                assert_eq!(
+                    net.peers_with(node, &probe),
+                    expect,
+                    "peers_with disagrees with stores for {probe:?} at step {step}"
+                );
             }
-            net.check_registry();
         });
     }
 }

@@ -10,7 +10,12 @@
 //! Simulation sweeps are declared as [`ScenarioGrid`]s over the
 //! composable scenario axes (DESIGN.md §8): the grid expands the
 //! cartesian product, the [`Runner`] executes every cell over one
-//! shared trace, and the harness only formats rows.
+//! shared trace, and the harness only formats rows.  Cells run over
+//! the deterministic worker pool ([`crate::util::pool`], DESIGN.md §9)
+//! with [`ExpOptions::jobs`] workers; reports come back in serial cell
+//! order whatever the completion order, so row assembly is untouched
+//! by parallelism and every CSV/JSON artifact is bit-identical to a
+//! `jobs = 1` run.
 //!
 //! Cache sizes: the synthetic traces are scaled-down replicas of the
 //! real logs (DESIGN.md §2), so the paper's absolute cache sizes are
@@ -42,6 +47,11 @@ pub struct ExpOptions {
     pub out_dir: Option<std::path::PathBuf>,
     /// Seed override.
     pub seed: Option<u64>,
+    /// Worker threads per sweep (`0` = hardware parallelism, `1` =
+    /// the serial path).  Cell results are bit-identical and in the
+    /// same order at every worker count ([`crate::util::pool`]), so
+    /// this only changes wall-clock.
+    pub jobs: usize,
 }
 
 impl Default for ExpOptions {
@@ -51,6 +61,7 @@ impl Default for ExpOptions {
             days_factor: 1.0,
             out_dir: Some("results".into()),
             seed: None,
+            jobs: 0,
         }
     }
 }
@@ -319,7 +330,7 @@ fn cache_perf(obs: &str, policy: PolicyKind, figure: &str, opts: &ExpOptions) ->
     let sweep = ScenarioGrid::new(base)
         .cache_sizes(&grid)
         .strategies(&Strategy::ALL);
-    let reports = sweep.run(&Runner::new(), &trace);
+    let reports = sweep.run_all(&Runner::new(), &trace, opts.jobs);
     let title = format!(
         "{} — {} {} cache performance",
         figure.to_uppercase(),
@@ -386,7 +397,7 @@ fn table3(opts: &ExpOptions) -> Result<String> {
         let sweep = ScenarioGrid::new(base)
             .policies(&policy_axis)
             .strategies(&Strategy::ALL);
-        let obs_reports = sweep.run(&runner, &trace);
+        let obs_reports = sweep.run_all(&runner, &trace, opts.jobs);
         for (pi, policy) in policy_axis.into_iter().enumerate() {
             let mut row = vec![trace.observatory.clone(), policy.name().to_string()];
             for (si, strat) in Strategy::ALL.into_iter().enumerate() {
@@ -425,7 +436,7 @@ fn fig13(opts: &ExpOptions) -> Result<String> {
         let sweep = ScenarioGrid::new(base)
             .cache_sizes(&grid)
             .strategies(&strat_axis);
-        let obs_reports = sweep.run(&runner, &trace);
+        let obs_reports = sweep.run_all(&runner, &trace, opts.jobs);
         let mut t = Table::new(&format!(
             "Fig. 13 — {} requests served from the local DTN (LRU)",
             trace.observatory
@@ -479,18 +490,28 @@ fn table4(opts: &ExpOptions) -> Result<String> {
         ]);
     let mut csv =
         String::from("cache,placement_frac,peer_wo,peer_w,peer_improv,total_wo,total_w,total_improv\n");
-    let mut reports = Vec::new();
-    for (label, size) in grid {
-        let mk = |placement: bool| {
-            let mut sc = Scenario::preset(Strategy::Hpm);
-            sc.policy = PolicyKind::Lru;
-            sc.cache_bytes = size;
-            sc.placement = placement;
-            sc.workload = workload_for("gage", opts);
-            runner.run_trace(&trace, &sc)
-        };
-        let without = mk(false);
-        let with = mk(true);
+    // The (placement off, placement on) pair per cache size, expanded
+    // up front so the pool can run all cells concurrently; rows then
+    // index pairs positionally (order is preserved by construction).
+    let cells: Vec<Scenario> = grid
+        .iter()
+        .flat_map(|&(_, size)| {
+            [false, true].map(|placement| {
+                let mut sc = Scenario::preset(Strategy::Hpm);
+                sc.policy = PolicyKind::Lru;
+                sc.cache_bytes = size;
+                sc.placement = placement;
+                sc.workload = workload_for("gage", opts);
+                sc
+            })
+        })
+        .collect();
+    let reports = crate::util::pool::run_ordered(opts.jobs, cells.len(), |i| {
+        runner.run_trace(&trace, &cells[i])
+    });
+    for (gi, (label, _size)) in grid.iter().enumerate() {
+        let without = &reports[2 * gi];
+        let with = &reports[2 * gi + 1];
         let (wo_m, w_m) = (&without.metrics, &with.metrics);
         let placed_frac = if w_m.cache_bytes > 0.0 {
             w_m.placement_bytes / w_m.cache_bytes
@@ -517,8 +538,6 @@ fn table4(opts: &ExpOptions) -> Result<String> {
             csv,
             "{label},{placed_frac:.4},{peer_wo:.3},{peer_w:.3},{peer_improv:.3},{tot_wo:.3},{tot_w:.3},{tot_improv:.3}"
         );
-        reports.push(without);
-        reports.push(with);
     }
     write_csv(opts, "table4.csv", &csv)?;
     write_reports(opts, "table4", &reports)?;
@@ -544,7 +563,7 @@ fn table5(opts: &ExpOptions) -> Result<String> {
             .nets(&NetCondition::ALL)
             .traffic_factors(&traffics)
             .strategies(&Strategy::ALL);
-        let obs_reports = sweep.run(&runner, &trace);
+        let obs_reports = sweep.run_all(&runner, &trace, opts.jobs);
         let mut t = Table::new(&format!(
             "Table V — {} throughput (Mbps) across network conditions and request traffic (LRU)",
             trace.observatory
@@ -609,7 +628,7 @@ fn headline(opts: &ExpOptions) -> Result<String> {
             Strategy::CacheOnly,
             Strategy::Hpm,
         ]);
-        let obs_reports = sweep.run(&runner, &trace);
+        let obs_reports = sweep.run_all(&runner, &trace, opts.jobs);
         let (none, cache, hpm) = (
             &obs_reports[0].metrics,
             &obs_reports[1].metrics,
@@ -659,7 +678,7 @@ fn traffic_sweep(opts: &ExpOptions) -> Result<String> {
     let sweep = ScenarioGrid::new(base)
         .traffic_factors(&tf_axis)
         .strategies(&strat_axis);
-    let reports = sweep.run(&Runner::new(), &trace);
+    let reports = sweep.run_all(&Runner::new(), &trace, opts.jobs);
     let mut t = Table::new("Traffic sweep — heavy preset, concurrent-flow scaling (LRU)")
         .header(&[
             "Traffic ×",
@@ -734,7 +753,11 @@ fn scale_sweep(opts: &ExpOptions) -> Result<String> {
     let mut csv = String::from(
         "topology,users,requests,peak_req_states,peak_flows,origin_frac,thrpt_mbps,core_util,wall_secs\n",
     );
-    let mut reports = Vec::new();
+    // Expand every (topology, population) sweep point first, then run
+    // the whole batch over the pool — the 1 M-user rows dominate
+    // wall-clock, and with dynamic index claiming the small rows pack
+    // around them instead of queueing behind them.
+    let mut points = Vec::new();
     for (tname, topology) in [
         ("star", TopologyKind::VdcStar),
         (
@@ -762,33 +785,36 @@ fn scale_sweep(opts: &ExpOptions) -> Result<String> {
             if let Some(seed) = opts.seed {
                 sc.workload.trace_seed = Some(seed);
             }
-            let r = runner.run(&sc)?;
-            let m = &r.metrics;
-            let (core_util, _) = m.tier_summary("core");
-            t.row(vec![
-                tname.to_string(),
-                format!("{n_eff}"),
-                format!("{}", m.requests_total),
-                format!("{}", m.peak_req_states),
-                format!("{}", m.peak_flows),
-                format!("{:.4}", m.origin_fraction()),
-                format!("{:.2}", m.throughput_mbps()),
-                format!("{core_util:.4}"),
-                format!("{:.2}", m.wall_secs),
-            ]);
-            let _ = writeln!(
-                csv,
-                "{tname},{n_eff},{},{},{},{:.4},{:.3},{:.5},{:.3}",
-                m.requests_total,
-                m.peak_req_states,
-                m.peak_flows,
-                m.origin_fraction(),
-                m.throughput_mbps(),
-                core_util,
-                m.wall_secs
-            );
-            reports.push(r);
+            points.push((tname, n_eff, sc));
         }
+    }
+    let cells: Vec<Scenario> = points.iter().map(|(_, _, sc)| sc.clone()).collect();
+    let reports = runner.run_grid(&cells, opts.jobs)?;
+    for ((tname, n_eff, _), r) in points.iter().zip(&reports) {
+        let m = &r.metrics;
+        let (core_util, _) = m.tier_summary("core");
+        t.row(vec![
+            tname.to_string(),
+            format!("{n_eff}"),
+            format!("{}", m.requests_total),
+            format!("{}", m.peak_req_states),
+            format!("{}", m.peak_flows),
+            format!("{:.4}", m.origin_fraction()),
+            format!("{:.2}", m.throughput_mbps()),
+            format!("{core_util:.4}"),
+            format!("{:.2}", m.wall_secs),
+        ]);
+        let _ = writeln!(
+            csv,
+            "{tname},{n_eff},{},{},{},{:.4},{:.3},{:.5},{:.3}",
+            m.requests_total,
+            m.peak_req_states,
+            m.peak_flows,
+            m.origin_fraction(),
+            m.throughput_mbps(),
+            core_util,
+            m.wall_secs
+        );
     }
     write_csv(opts, "scale.csv", &csv)?;
     write_reports(opts, "scale", &reports)?;
@@ -831,7 +857,7 @@ fn federation(opts: &ExpOptions) -> Result<String> {
     let sweep = ScenarioGrid::new(base)
         .topologies(&ratio_axis)
         .strategies(&strat_axis);
-    let reports = sweep.run(&Runner::new(), &trace);
+    let reports = sweep.run_all(&Runner::new(), &trace, opts.jobs);
     let mut t = Table::new(
         "Federation sweep — tier bandwidth ratios (core:regional:edge), interior-link utilization",
     )
@@ -900,7 +926,7 @@ fn policies(opts: &ExpOptions) -> Result<String> {
         let sweep = ScenarioGrid::new(base)
             .policies(&PolicyKind::ALL)
             .strategies(&strat_axis);
-        let obs_reports = sweep.run(&runner, &trace);
+        let obs_reports = sweep.run_all(&runner, &trace, opts.jobs);
         let mut t = Table::new(&format!(
             "Eviction-policy comparison — {} at the smallest cache (volume-weighted Mbps / origin fraction)",
             trace.observatory
@@ -948,6 +974,7 @@ mod tests {
             days_factor: 0.3,
             out_dir: None,
             seed: None,
+            jobs: 1,
         }
     }
 
@@ -1000,6 +1027,7 @@ mod tests {
             days_factor: 0.3,
             out_dir: None,
             seed: None,
+            jobs: 2,
         };
         let out = run_experiment("federation", &opts).unwrap();
         assert!(out.contains("Federation sweep"));
@@ -1017,6 +1045,7 @@ mod tests {
             days_factor: 1.0,
             out_dir: None,
             seed: None,
+            jobs: 1,
         };
         let out = run_experiment("scale", &opts).unwrap();
         assert!(out.contains("Scale sweep"));
@@ -1033,6 +1062,7 @@ mod tests {
             days_factor: 0.5,
             out_dir: None,
             seed: None,
+            jobs: 1,
         };
         let out = run_experiment("traffic", &opts).unwrap();
         assert!(out.contains("Traffic sweep"));
@@ -1043,11 +1073,15 @@ mod tests {
     fn harness_writes_csv_and_report_json() {
         let dir = std::env::temp_dir().join("obsd_exp_reports_test");
         let _ = std::fs::remove_dir_all(&dir);
+        // jobs: 4 exercises the pooled path end-to-end: the emitted
+        // CSV/JSON rows must land in serial cell order regardless of
+        // which worker finished first.
         let opts = ExpOptions {
             scale: 0.05,
             days_factor: 0.3,
             out_dir: Some(dir.clone()),
             seed: None,
+            jobs: 4,
         };
         run_experiment("federation", &opts).unwrap();
         let csv = std::fs::read_to_string(dir.join("federation.csv")).unwrap();

@@ -29,6 +29,7 @@ repro — push-based data delivery framework (Qin et al. 2020 reproduction)
 USAGE:
   repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|scale|policies|federation|all>
                    [--scale F] [--days F] [--out DIR] [--quick] [--seed N]
+                   [--jobs N]
   repro analyze [--scale F]
   repro simulate --observatory <ooi|gage|heavy|federation|scale|tiny>
                  [--strategy no-cache|cache-only|md1|md2|hpm]
@@ -53,6 +54,11 @@ million-user populations) instead of materializing the trace first;
 both paths are bit-identical for the same seed.  `--quick` shrinks the
 workload for smoke runs; `--json` prints the full RunReport (scenario
 echo + metrics) as JSON on stdout.
+
+Parallelism (experiment): `--jobs N` runs sweep cells over N worker
+threads (default: all hardware threads; `--jobs 1` forces the serial
+path).  Results are bit-identical and identically ordered at every
+worker count — parallelism only changes wall-clock (DESIGN.md §9).
 ";
 
 fn main() {
@@ -130,6 +136,9 @@ fn exp_options(flags: &HashMap<String, String>) -> Result<ExpOptions> {
     }
     if let Some(seed) = flags.get("seed") {
         opts.seed = Some(seed.parse().context("--seed must be an integer")?);
+    }
+    if let Some(jobs) = flags.get("jobs") {
+        opts.jobs = jobs.parse().context("--jobs must be an integer")?;
     }
     Ok(opts)
 }

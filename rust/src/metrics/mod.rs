@@ -244,10 +244,71 @@ impl RunMetrics {
         Json::Obj(m)
     }
 
+    /// Rebuild metrics from their [`RunMetrics::to_json`] form — the
+    /// read side of the golden-report fixtures (`tests/golden.rs`).
+    ///
+    /// Only the fields [`RunMetrics::diff_bits`] compares are
+    /// recovered (counters, float sums, accumulator count/sum, interior
+    /// links); derived accumulator moments (`sum_sq`/min/max) are not
+    /// serialized and come back at their defaults, and `wall_secs`
+    /// round-trips but is excluded from diffing anyway.
+    /// Returns `None` when a required key is missing or has the wrong
+    /// shape, or an interior tier label is unknown.
+    pub fn from_json(v: &Json) -> Option<RunMetrics> {
+        let num = |key: &str| v.get(key)?.as_f64();
+        let count = |key: &str| num(key).map(|n| n as u64);
+        let accum = |key: &str| -> Option<Accum> {
+            let a = v.get(key)?;
+            let mut acc = Accum::new();
+            acc.count = a.get("count")?.as_f64()? as u64;
+            acc.sum = a.get("sum")?.as_f64()?;
+            Some(acc)
+        };
+        // Tier labels are `&'static str` in `TierUtil`; intern against
+        // the topology's label set instead of leaking arbitrary
+        // strings (a new tier only needs adding there).
+        let intern_tier = |s: &str| -> Option<&'static str> {
+            crate::simnet::topology::TIER_LABELS
+                .into_iter()
+                .find(|t| *t == s)
+        };
+        let mut interior_util = Vec::new();
+        for u in v.get("interior_util")?.as_arr()? {
+            interior_util.push(TierUtil {
+                tier: intern_tier(u.get("tier")?.as_str()?)?,
+                from: u.get("from")?.as_f64()? as usize,
+                to: u.get("to")?.as_f64()? as usize,
+                carried_bytes: u.get("carried_bytes")?.as_f64()?,
+                utilization: u.get("utilization")?.as_f64()?,
+            });
+        }
+        Some(RunMetrics {
+            throughput: accum("throughput")?,
+            latency: accum("latency")?,
+            peer_throughput: accum("peer_throughput")?,
+            requests_total: count("requests_total")?,
+            requests_to_observatory: count("requests_to_observatory")?,
+            served_local_cache: count("served_local_cache")?,
+            served_local_prefetch: count("served_local_prefetch")?,
+            served_peer: count("served_peer")?,
+            origin_bytes: num("origin_bytes")?,
+            cache_bytes: num("cache_bytes")?,
+            placement_bytes: num("placement_bytes")?,
+            sum_bytes: num("sum_bytes")?,
+            sum_elapsed: num("sum_elapsed")?,
+            recall: num("recall")?,
+            peak_flows: count("peak_flows")?,
+            peak_req_states: count("peak_req_states")?,
+            interior_util,
+            wall_secs: num("wall_secs")?,
+        })
+    }
+
     /// Field-by-field *bit* comparison against another run, wall-clock
     /// excluded.  Returns one human-readable line per mismatch (empty ⇒
     /// the runs are bit-identical) — the primitive behind the parity
-    /// property tests and `RunReport` diffing between trajectories.
+    /// property tests, the golden-report harness, and `RunReport`
+    /// diffing between trajectories.
     pub fn diff_bits(&self, other: &RunMetrics) -> Vec<String> {
         let mut diffs = Vec::new();
         let counters = [
@@ -309,10 +370,20 @@ impl RunMetrics {
             for (x, y) in self.interior_util.iter().zip(&other.interior_util) {
                 if x.tier != y.tier {
                     diffs.push(format!("tier label: {} vs {}", x.tier, y.tier));
+                } else if x.from != y.from || x.to != y.to {
+                    diffs.push(format!(
+                        "{} link: {}->{} vs {}->{}",
+                        x.tier, x.from, x.to, y.from, y.to
+                    ));
                 } else if x.carried_bytes.to_bits() != y.carried_bytes.to_bits() {
                     diffs.push(format!(
                         "carried {} {}->{}: {} vs {}",
                         x.tier, x.from, x.to, x.carried_bytes, y.carried_bytes
+                    ));
+                } else if x.utilization.to_bits() != y.utilization.to_bits() {
+                    diffs.push(format!(
+                        "utilization {} {}->{}: {} vs {}",
+                        x.tier, x.from, x.to, x.utilization, y.utilization
                     ));
                 }
             }
@@ -374,6 +445,48 @@ mod tests {
         assert_eq!(v.get("origin_bytes").unwrap().as_f64(), Some(1.5e9));
         assert!(v.get("throughput").unwrap().get("mean").is_some());
         assert!(v.get("interior_util").unwrap().as_arr().is_some());
+    }
+
+    #[test]
+    fn from_json_round_trips_every_diffed_field() {
+        let mut m = RunMetrics::new();
+        m.record_served(ServedBy::Observatory);
+        m.record_served(ServedBy::Peer);
+        m.origin_bytes = 1.5e9 + 0.125;
+        m.cache_bytes = 3.25e8;
+        m.placement_bytes = 17.0;
+        m.sum_bytes = 9.75e9;
+        m.sum_elapsed = 123.456789012345;
+        m.recall = 0.1 + 0.2; // deliberately not exactly 0.3
+        m.peak_flows = 42;
+        m.peak_req_states = 7;
+        m.throughput.add(2.0e8);
+        m.latency.add(0.125);
+        m.peer_throughput.add(3.0e7);
+        m.interior_util.push(TierUtil {
+            tier: "core",
+            from: 0,
+            to: 3,
+            carried_bytes: 1.0e12 + 0.5,
+            utilization: 0.75,
+        });
+        m.wall_secs = 1.25;
+        let text = m.to_json().to_string_pretty();
+        let back = RunMetrics::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(m.diff_bits(&back).is_empty(), "{:?}", m.diff_bits(&back));
+        // Unknown tier labels and missing keys are rejected, not
+        // silently zeroed.
+        assert!(RunMetrics::from_json(&Json::parse("{}").unwrap()).is_none());
+        let bad = text.replace("\"core\"", "\"warp\"");
+        assert!(RunMetrics::from_json(&Json::parse(&bad).unwrap()).is_none());
+        // Interior-link drift is visible to the differ: utilization
+        // and endpoints are compared, not just carried bytes.
+        let mut u_drift = back.clone();
+        u_drift.interior_util[0].utilization += 1e-9;
+        assert_eq!(m.diff_bits(&u_drift).len(), 1);
+        let mut e_drift = back;
+        e_drift.interior_util[0].to = 4;
+        assert_eq!(m.diff_bits(&e_drift).len(), 1);
     }
 
     #[test]

@@ -27,7 +27,10 @@
 //! metrics are pinned bit-identical to the legacy
 //! [`crate::coordinator::run`] / [`crate::coordinator::run_streaming`]
 //! entry points by the parity property tests below.  [`ScenarioGrid`]
-//! expands declarative cartesian sweeps for the experiment harnesses.
+//! expands declarative cartesian sweeps for the experiment harnesses;
+//! [`ScenarioGrid::run_all`] and [`Runner::run_grid`] execute the
+//! cells over the deterministic worker pool ([`crate::util::pool`],
+//! DESIGN.md §9) with serial-order, bit-identical results.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -817,10 +820,14 @@ impl RunReport {
 ///
 /// Prediction backends are pluggable per-runner factories so one
 /// runner can drive a whole grid (the AOT PJRT engine plugs in via
-/// [`Runner::with_predictor`]).
+/// [`Runner::with_predictor`]).  The factories are `Send + Sync` so a
+/// single runner can also drive a *pooled* grid
+/// ([`ScenarioGrid::run_all`], [`Runner::run_grid`]): each worker
+/// thread invokes the factory to get its own backend instance, and the
+/// instances themselves never cross threads.
 pub struct Runner {
-    predictor: Box<dyn Fn() -> Box<dyn GapPredictor>>,
-    cluster: Box<dyn Fn() -> Box<dyn ClusterBackend>>,
+    predictor: Box<dyn Fn() -> Box<dyn GapPredictor> + Send + Sync>,
+    cluster: Box<dyn Fn() -> Box<dyn ClusterBackend> + Send + Sync>,
 }
 
 impl Default for Runner {
@@ -838,19 +845,22 @@ impl Runner {
         }
     }
 
-    /// Replace the gap-predictor factory (e.g. the PJRT engine).
+    /// Replace the gap-predictor factory (e.g. the PJRT engine).  The
+    /// factory must be `Send + Sync` (pooled grids call it from worker
+    /// threads); the predictors it builds need not be.
     pub fn with_predictor(
         mut self,
-        f: impl Fn() -> Box<dyn GapPredictor> + 'static,
+        f: impl Fn() -> Box<dyn GapPredictor> + Send + Sync + 'static,
     ) -> Self {
         self.predictor = Box::new(f);
         self
     }
 
-    /// Replace the clustering-backend factory.
+    /// Replace the clustering-backend factory (same `Send + Sync`
+    /// contract as [`Runner::with_predictor`]).
     pub fn with_cluster(
         mut self,
-        f: impl Fn() -> Box<dyn ClusterBackend> + 'static,
+        f: impl Fn() -> Box<dyn ClusterBackend> + Send + Sync + 'static,
     ) -> Self {
         self.cluster = Box::new(f);
         self
@@ -897,6 +907,30 @@ impl Runner {
             scenario: sc.clone(),
             metrics,
         }
+    }
+
+    /// Run a batch of fully-specified scenarios (each resolving its own
+    /// workload — the sweep-point entry the scale/table sweeps use)
+    /// over `jobs` pool workers, results in input order.  `jobs = 0`
+    /// uses the hardware parallelism, `jobs = 1` is the serial path;
+    /// every worker count yields bit-identical reports (the cells are
+    /// independent — see [`crate::util::pool`]).
+    ///
+    /// Every scenario is validated *before* any cell runs, so an
+    /// invalid cell fails fast with its typed error (first in input
+    /// order) instead of after hours of sweep wall-clock.
+    pub fn run_grid(
+        &self,
+        scenarios: &[Scenario],
+        jobs: usize,
+    ) -> Result<Vec<RunReport>, ScenarioError> {
+        for sc in scenarios {
+            sc.validate()?;
+            sc.workload.resolve()?;
+        }
+        crate::util::pool::run_ordered(jobs, scenarios.len(), |i| self.run(&scenarios[i]))
+            .into_iter()
+            .collect()
     }
 }
 
@@ -1023,13 +1057,22 @@ impl ScenarioGrid {
         self.cells.is_empty()
     }
 
-    /// Run every cell over one shared materialized trace, in cell
-    /// order.
+    /// Run every cell over one shared materialized trace across `jobs`
+    /// pool workers, returning reports in cell order regardless of
+    /// completion order.  `jobs = 0` uses the hardware parallelism,
+    /// `jobs = 1` runs the historical serial loop inline.  Cells are
+    /// independent (each run forks its own RNG substreams from the
+    /// cell's seeds), so the output is bit-identical for every worker
+    /// count — enforced by the parallel-equals-serial property test.
+    pub fn run_all(&self, runner: &Runner, trace: &Trace, jobs: usize) -> Vec<RunReport> {
+        crate::util::pool::run_ordered(jobs, self.cells.len(), |i| {
+            runner.run_trace(trace, &self.cells[i].1)
+        })
+    }
+
+    /// Serial convenience: [`ScenarioGrid::run_all`] with `jobs = 1`.
     pub fn run(&self, runner: &Runner, trace: &Trace) -> Vec<RunReport> {
-        self.cells
-            .iter()
-            .map(|(_, sc)| runner.run_trace(trace, sc))
-            .collect()
+        self.run_all(runner, trace, 1)
     }
 }
 
@@ -1287,6 +1330,80 @@ mod tests {
         let r = runner.run(&streaming_gdsf).unwrap();
         assert!(r.metrics.requests_total > 0);
         assert!(!r.metrics.interior_util.is_empty());
+    }
+
+    /// The tentpole correctness bar: for random small grids (random
+    /// axes, random base seeds) the pooled path returns the same
+    /// reports, in the same order, bit-for-bit, as `jobs = 1` — at
+    /// every worker count in {2, 4, 8}.
+    #[test]
+    fn prop_parallel_grid_bit_identical_to_serial() {
+        // One shared tiny trace keeps the property fast; grid axes,
+        // seeds and worker counts vary per case.
+        let mut preset = presets::tiny();
+        preset.duration_days = 0.3;
+        let trace = crate::trace::generator::generate(&preset);
+        crate::util::prop::check("parallel-equals-serial", |rng| {
+            let mut base = Scenario::preset(Strategy::CacheOnly);
+            base.cache_bytes = [256 << 20, 1 << 30, 4 << 30][rng.below(3)];
+            base.policy = PolicyKind::ALL[rng.below(PolicyKind::ALL.len())];
+            base.seed = rng.next_u64();
+            let all = Strategy::ALL;
+            let n_strats = 2 + rng.below(2);
+            let strats: Vec<Strategy> =
+                (0..n_strats).map(|_| all[rng.below(all.len())]).collect();
+            let tf = [("1", 1.0), ("2", 2.0)][rng.below(2)];
+            let grid = ScenarioGrid::new(base)
+                .traffic_factors(&[tf])
+                .strategies(&strats);
+            let runner = Runner::new();
+            let serial = grid.run_all(&runner, &trace, 1);
+            let jobs = [2usize, 4, 8][rng.below(3)];
+            let par = grid.run_all(&runner, &trace, jobs);
+            assert_eq!(serial.len(), par.len(), "jobs={jobs}: cell count changed");
+            for (i, (s, p)) in serial.iter().zip(&par).enumerate() {
+                assert_eq!(
+                    s.scenario, p.scenario,
+                    "jobs={jobs}: cell {i} out of order"
+                );
+                let diffs = s.metrics.diff_bits(&p.metrics);
+                assert!(
+                    diffs.is_empty(),
+                    "jobs={jobs}: cell {i} ({}) diverged: {diffs:?}",
+                    s.scenario.strategy_name()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn run_grid_preserves_order_and_surfaces_errors() {
+        let runner = Runner::new();
+        let mk = |strategy, seed| {
+            let mut sc = Scenario::preset(strategy);
+            sc.workload.days_factor = 0.3;
+            sc.workload.trace_seed = Some(seed);
+            sc
+        };
+        let cells = [
+            mk(Strategy::CacheOnly, 1),
+            mk(Strategy::NoCache, 2),
+            mk(Strategy::CacheOnly, 3),
+        ];
+        let pooled = runner.run_grid(&cells, 4).unwrap();
+        let serial = runner.run_grid(&cells, 1).unwrap();
+        assert_eq!(pooled.len(), 3);
+        for ((p, s), want) in pooled.iter().zip(&serial).zip(&cells) {
+            assert_eq!(&p.scenario, want);
+            assert!(s.metrics.diff_bits(&p.metrics).is_empty());
+        }
+        // An invalid cell surfaces as a typed error, not a panic.
+        let mut bad = mk(Strategy::CacheOnly, 4);
+        bad.workload.observatory = "atlantis".into();
+        let err = runner
+            .run_grid(&[mk(Strategy::CacheOnly, 5), bad], 4)
+            .unwrap_err();
+        assert_eq!(err, ScenarioError::UnknownObservatory("atlantis".into()));
     }
 
     #[test]

@@ -17,4 +17,6 @@ pub mod topology;
 
 pub use engine::EventQueue;
 pub use flow::{Completed, FlowId, FlowSim, Hop, LinkId, Pipe, Route};
-pub use topology::{NetCondition, TierLink, Topology, TopologyKind, N_CLIENT_DTNS, N_DTNS, SERVER};
+pub use topology::{
+    NetCondition, TierLink, Topology, TopologyKind, N_CLIENT_DTNS, N_DTNS, SERVER, TIER_LABELS,
+};

@@ -173,6 +173,12 @@ impl std::str::FromStr for TopologyKind {
     }
 }
 
+/// Every tier label a topology may put on an interior link
+/// ([`TierLink::tier`]).  `RunMetrics::from_json` interns fixture
+/// labels against this list, so a new labeled tier added here is
+/// automatically accepted by the golden-report harness.
+pub const TIER_LABELS: [&str; 3] = ["core", "regional", "edge"];
+
 /// One directed infrastructure link with a tier label, for
 /// interior-utilization reporting (federation experiment).
 #[derive(Debug, Clone)]

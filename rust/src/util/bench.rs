@@ -176,6 +176,7 @@ mod tests {
             warmup: Duration::from_millis(5),
             measure: Duration::from_millis(20),
             min_samples: 3,
+            min_warmup_iters: 1,
             results: Vec::new(),
         };
         let m = b.bench("noop-ish", || {
@@ -195,6 +196,7 @@ mod tests {
             warmup: Duration::from_millis(2),
             measure: Duration::from_millis(5),
             min_samples: 2,
+            min_warmup_iters: 1,
             results: Vec::new(),
         };
         b.bench("x", || 1 + 1);

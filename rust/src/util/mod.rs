@@ -1,5 +1,6 @@
 //! Shared utilities: deterministic RNG, JSON, statistics, tables,
-//! micro-benchmarking, and property-testing support.
+//! micro-benchmarking, property-testing support, and the scoped-thread
+//! worker pool behind parallel scenario sweeps.
 //!
 //! These exist because the offline vendored crate set ships only the
 //! `xla` stack; everything else the framework needs is implemented here
@@ -8,6 +9,7 @@
 pub mod bench;
 pub mod json;
 pub mod parse;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

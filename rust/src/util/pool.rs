@@ -1,0 +1,156 @@
+//! Deterministic scoped-thread worker pool for scenario sweeps.
+//!
+//! The paper's evaluation is a grid of strategy × topology × traffic
+//! sweeps whose cells are mutually independent: every cell owns its
+//! forked RNG substream ([`crate::util::rng::Rng::fork`]) and touches
+//! no cross-cell mutable state, so executing cells concurrently cannot
+//! change any cell's result — only the wall-clock.  This module is the
+//! execution layer that exploits that: a std-only pool (the vendored
+//! crate set has no rayon) built on [`std::thread::scope`].
+//!
+//! **Ordering guarantee.** [`run_ordered`] returns results indexed by
+//! input position, not completion order: each worker claims the next
+//! unclaimed index from a shared atomic counter, computes `f(i)`, and
+//! stores the result into slot `i`.  Downstream report assembly (the
+//! experiment harnesses index rows positionally) therefore never
+//! observes scheduling order.
+//!
+//! **Determinism argument.** `f(i)` must be a pure function of `i` and
+//! captured shared *immutable* state (`&Trace`, `&Runner`, `&[Scenario]`)
+//! — which every sweep cell is.  Under that contract the pooled output
+//! is bit-identical to the serial output for any worker count; the
+//! parallel-equals-serial property test in [`crate::scenario`] enforces
+//! it end-to-end, and the golden-report harness (`tests/golden.rs`)
+//! pins it across processes.
+//!
+//! `jobs == 0` means "auto" ([`available_jobs`]); `jobs == 1` runs the
+//! historical serial path inline without spawning any thread.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count for `jobs = 0` ("auto"): the hardware's available
+/// parallelism, falling back to 1 when the platform cannot report it.
+pub fn available_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve a requested worker count: `0` → [`available_jobs`].
+pub fn resolve_jobs(jobs: usize) -> usize {
+    if jobs == 0 {
+        available_jobs()
+    } else {
+        jobs
+    }
+}
+
+/// Execute `f(0..n)` over `jobs` workers, returning results in index
+/// order (`out[i] == f(i)`), bit-identical to the serial loop.
+///
+/// * `jobs == 0` uses [`available_jobs`]; `jobs == 1` (or `n <= 1`)
+///   runs inline on the caller's thread — the pre-pool serial path.
+/// * Workers claim indices from an atomic counter, so an expensive
+///   cell never blocks the queue behind it (no static striping).
+/// * A panic inside `f` propagates to the caller after all workers
+///   join ([`std::thread::scope`] semantics) — a failing property
+///   inside a pooled sweep still fails the test.
+///
+/// ```
+/// use obsd::util::pool::run_ordered;
+///
+/// let serial: Vec<usize> = (0..10).map(|i| i * i).collect();
+/// assert_eq!(run_ordered(4, 10, |i| i * i), serial);
+/// ```
+pub fn run_ordered<R, F>(jobs: usize, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let jobs = resolve_jobs(jobs).min(n.max(1));
+    if jobs <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("pool invariant: every slot filled before scope exit")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order_at_every_worker_count() {
+        let serial: Vec<usize> = (0..37).map(|i| i.wrapping_mul(2654435761)).collect();
+        for jobs in [0, 1, 2, 3, 4, 8, 64] {
+            let out = run_ordered(jobs, 37, |i| i.wrapping_mul(2654435761));
+            assert_eq!(out, serial, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_single_item() {
+        assert_eq!(run_ordered(4, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(run_ordered(4, 1, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn uneven_cell_costs_keep_order() {
+        // Early indices are the most expensive, so under any dynamic
+        // schedule they complete *last* — the slot indexing must still
+        // return them first.
+        let cost = |i: usize| -> u64 {
+            let spins = (20 - i as u64) * 2_000;
+            let mut acc = i as u64;
+            for k in 0..spins {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            std::hint::black_box(acc);
+            i as u64
+        };
+        let out = run_ordered(4, 20, cost);
+        assert_eq!(out, (0..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn auto_jobs_is_positive() {
+        assert!(available_jobs() >= 1);
+        assert_eq!(resolve_jobs(0), available_jobs());
+        assert_eq!(resolve_jobs(3), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        // `std::thread::scope` re-panics on the caller's thread after
+        // joining (with its own payload), so a failing assertion in a
+        // pooled sweep still fails the test.
+        run_ordered(4, 16, |i| {
+            if i == 7 {
+                panic!("boom at 7");
+            }
+            i
+        });
+    }
+}

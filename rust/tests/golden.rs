@@ -1,0 +1,163 @@
+//! Golden-report regression tests: the five paper presets (§V-B1) on
+//! the VDC star, each pinned to a committed `RunReport` fixture.
+//!
+//! Every test runs its preset on the `tiny` workload and compares the
+//! result against `tests/fixtures/<preset>.report.json`:
+//!
+//! * the **scenario echo** must match the fixture exactly (axis drift
+//!   — a changed default knob, policy, or topology — fails here);
+//! * the **metrics** must match bit-for-bit via
+//!   [`RunMetrics::diff_bits`] (wall-clock excluded), so any change to
+//!   trace generation, the scheduler, caching, prediction, or metric
+//!   assembly fails loudly with a field-by-field diff.
+//!
+//! Regenerating after an *intentional* behavior change:
+//!
+//! ```text
+//! UPDATE_GOLDEN=1 cargo test -q --test golden   # or: make golden
+//! ```
+//!
+//! then commit the rewritten fixtures.  A missing fixture (fresh
+//! clone before the fixtures were committed) is bootstrapped on first
+//! run and reported on stderr; running the suite a second time then
+//! verifies against the bootstrapped file — which also gates
+//! cross-process determinism (the CI golden step runs it twice, the
+//! second time with `GOLDEN_STRICT=1`, under which a *missing* fixture
+//! is a hard failure instead of a re-bless — the guard against a
+//! committed fixture being deleted or renamed without anyone noticing).
+
+use std::path::PathBuf;
+
+use obsd::metrics::RunMetrics;
+use obsd::prefetch::Strategy;
+use obsd::scenario::{RunReport, Runner, Scenario};
+use obsd::util::json::Json;
+
+fn fixture_path(slug: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(format!("{slug}.report.json"))
+}
+
+/// The pinned configuration: a paper preset on the star topology over
+/// the deterministic `tiny` workload, with a 4 GiB cache so eviction
+/// stays active (the preset default of 128 GiB never evicts at tiny
+/// scale and would under-constrain the fixture).
+fn golden_scenario(strategy: Strategy) -> Scenario {
+    let mut sc = Scenario::preset(strategy);
+    sc.cache_bytes = 4 << 30;
+    sc
+}
+
+fn check_golden(strategy: Strategy, slug: &str) {
+    let sc = golden_scenario(strategy);
+    let report: RunReport = Runner::new().run(&sc).expect("golden scenario is valid");
+    assert!(
+        report.metrics.requests_total > 0,
+        "{slug}: golden run served no requests"
+    );
+    let path = fixture_path(slug);
+    let env_on = |name: &str| std::env::var(name).is_ok_and(|v| !v.is_empty() && v != "0");
+    let update = env_on("UPDATE_GOLDEN");
+    if !update && !path.exists() && env_on("GOLDEN_STRICT") {
+        panic!(
+            "{slug}: fixture {} is missing and GOLDEN_STRICT is set \
+             (a committed fixture was deleted or renamed?); \
+             regenerate with `make golden` and commit it",
+            path.display()
+        );
+    }
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, report.to_json().to_string_pretty()).unwrap();
+        eprintln!(
+            "golden: wrote {} ({})",
+            path.display(),
+            if update {
+                "UPDATE_GOLDEN set — commit the refreshed fixture"
+            } else {
+                "fixture was missing, bootstrapped — commit it"
+            }
+        );
+        return;
+    }
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{slug}: cannot read {}: {e}", path.display()));
+    let fixture = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("{slug}: fixture is not valid JSON: {e}"));
+    let want_scenario = fixture
+        .get("scenario")
+        .unwrap_or_else(|| panic!("{slug}: fixture has no 'scenario'"));
+    assert_eq!(
+        want_scenario,
+        &report.scenario.to_json(),
+        "{slug}: scenario echo drifted from the fixture \
+         (intentional? regen with `make golden` and commit)"
+    );
+    let want = RunMetrics::from_json(
+        fixture
+            .get("metrics")
+            .unwrap_or_else(|| panic!("{slug}: fixture has no 'metrics'")),
+    )
+    .unwrap_or_else(|| panic!("{slug}: fixture metrics have an unexpected shape"));
+    let diffs = want.diff_bits(&report.metrics);
+    assert!(
+        diffs.is_empty(),
+        "{slug}: metrics drifted from the golden fixture:\n  {}\n\
+         If this change is intentional, regenerate with \
+         `UPDATE_GOLDEN=1 cargo test -q --test golden` (make golden) \
+         and commit the fixtures.",
+        diffs.join("\n  ")
+    );
+}
+
+#[test]
+fn golden_no_cache() {
+    check_golden(Strategy::NoCache, "no-cache");
+}
+
+#[test]
+fn golden_cache_only() {
+    check_golden(Strategy::CacheOnly, "cache-only");
+}
+
+#[test]
+fn golden_md1() {
+    check_golden(Strategy::Md1, "md1");
+}
+
+#[test]
+fn golden_md2() {
+    check_golden(Strategy::Md2, "md2");
+}
+
+#[test]
+fn golden_hpm() {
+    check_golden(Strategy::Hpm, "hpm");
+}
+
+/// The harness itself must round-trip: a fixture written by this
+/// process re-reads to metrics that diff clean against the original,
+/// and a perturbed fixture diffs dirty.  This keeps the golden suite
+/// honest even on a fresh clone where the five preset tests are in
+/// bootstrap mode.
+#[test]
+fn golden_harness_detects_drift() {
+    let report = Runner::new()
+        .run(&golden_scenario(Strategy::CacheOnly))
+        .unwrap();
+    let text = report.to_json().to_string_pretty();
+    let parsed = Json::parse(&text).unwrap();
+    let back = RunMetrics::from_json(parsed.get("metrics").unwrap()).unwrap();
+    assert!(back.diff_bits(&report.metrics).is_empty());
+
+    let mut drifted = back.clone();
+    drifted.origin_bytes += 1.0;
+    drifted.requests_total += 1;
+    let diffs = drifted.diff_bits(&report.metrics);
+    assert!(
+        diffs.iter().any(|d| d.starts_with("origin_bytes"))
+            && diffs.iter().any(|d| d.starts_with("requests_total")),
+        "{diffs:?}"
+    );
+}

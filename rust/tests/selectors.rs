@@ -1,0 +1,163 @@
+//! Round-trip tests for every CLI-facing selector that parses through
+//! the shared normalize-and-match helper (`util::parse::lookup`):
+//! Strategy, PolicyKind, NetCondition, TopologyKind, Delivery,
+//! ArrivalMode, ModelSpec and ExpId.
+//!
+//! Two properties per selector:
+//!
+//! * **round-trip** — the canonical display name (`name()` / `kind()`)
+//!   parses back to the same value, including through the normalizer's
+//!   case/separator folding (`"No Cache"`, `no-cache`, `NO_CACHE`);
+//! * **discoverable errors** — an unknown input produces a
+//!   `ParseError` whose message lists the accepted aliases, so no
+//!   alias is undocumented and no bad value fails silently.
+
+use obsd::cache::policy::PolicyKind;
+use obsd::experiments::{ExpId, ALL_IDS, EXTRA_IDS};
+use obsd::prefetch::Strategy;
+use obsd::scenario::{ArrivalMode, Delivery, ModelSpec};
+use obsd::simnet::{NetCondition, TopologyKind};
+use obsd::util::parse::normalize;
+
+/// Every normalizer-equivalent spelling of a canonical name.
+fn spellings(name: &str) -> Vec<String> {
+    vec![
+        name.to_string(),
+        name.to_uppercase(),
+        name.to_lowercase(),
+        name.replace([' ', '-'], "_"),
+    ]
+}
+
+#[test]
+fn strategy_round_trips() {
+    for s in Strategy::ALL {
+        for sp in spellings(s.name()) {
+            assert_eq!(sp.parse::<Strategy>(), Ok(s), "{sp}");
+        }
+    }
+    let err = "warp-drive".parse::<Strategy>().unwrap_err();
+    let msg = err.to_string();
+    for alias in ["no-cache", "cache-only", "cache", "md1", "md2", "hpm"] {
+        assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
+    }
+}
+
+#[test]
+fn policy_round_trips() {
+    for p in PolicyKind::ALL {
+        for sp in spellings(p.name()) {
+            assert_eq!(sp.parse::<PolicyKind>(), Ok(p), "{sp}");
+        }
+    }
+    let msg = "mru".parse::<PolicyKind>().unwrap_err().to_string();
+    for alias in ["lru", "lfu", "fifo", "size", "gdsf"] {
+        assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
+    }
+}
+
+#[test]
+fn net_condition_round_trips() {
+    for n in NetCondition::ALL {
+        for sp in spellings(n.name()) {
+            assert_eq!(sp.parse::<NetCondition>(), Ok(n), "{sp}");
+        }
+    }
+    let msg = "ideal".parse::<NetCondition>().unwrap_err().to_string();
+    for alias in ["best", "medium", "worst"] {
+        assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
+    }
+}
+
+#[test]
+fn topology_round_trips() {
+    // `federation` canonically parses to the default 80:40:20 tiers;
+    // explicit tier values are set programmatically, not parsed.
+    for t in [
+        TopologyKind::VdcStar,
+        TopologyKind::Hierarchical,
+        TopologyKind::federation_default(),
+    ] {
+        for sp in spellings(t.name()) {
+            assert_eq!(sp.parse::<TopologyKind>(), Ok(t), "{sp}");
+        }
+    }
+    let msg = "mesh".parse::<TopologyKind>().unwrap_err().to_string();
+    for alias in ["vdc", "star", "hierarchical", "hier", "federation", "osdf"] {
+        assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
+    }
+}
+
+#[test]
+fn delivery_round_trips() {
+    for d in [Delivery::DirectWan, Delivery::Framework] {
+        for sp in spellings(d.name()) {
+            assert_eq!(sp.parse::<Delivery>(), Ok(d), "{sp}");
+        }
+    }
+    let msg = "carrier-pigeon".parse::<Delivery>().unwrap_err().to_string();
+    for alias in ["direct-wan", "wan", "direct", "framework", "dtn"] {
+        assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
+    }
+}
+
+#[test]
+fn arrival_mode_round_trips() {
+    for a in [ArrivalMode::Materialized, ArrivalMode::Streaming] {
+        for sp in spellings(a.name()) {
+            assert_eq!(sp.parse::<ArrivalMode>(), Ok(a), "{sp}");
+        }
+    }
+    let msg = "batch".parse::<ArrivalMode>().unwrap_err().to_string();
+    for alias in ["materialized", "trace", "streaming", "stream"] {
+        assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
+    }
+}
+
+#[test]
+fn model_spec_round_trips() {
+    // Parsed specs carry default knobs, so kind() → parse is an exact
+    // round-trip for every parseable kind (custom specs are built
+    // programmatically and must not parse).
+    for m in [
+        ModelSpec::none(),
+        ModelSpec::markov(),
+        ModelSpec::mesh(),
+        ModelSpec::hybrid(),
+    ] {
+        for sp in spellings(m.kind()) {
+            assert_eq!(sp.parse::<ModelSpec>(), Ok(m.clone()), "{sp}");
+        }
+    }
+    assert!("custom".parse::<ModelSpec>().is_err());
+    let msg = "oracle".parse::<ModelSpec>().unwrap_err().to_string();
+    for alias in ["none", "off", "markov", "md1", "mesh", "md2", "hybrid", "hpm"] {
+        assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
+    }
+}
+
+#[test]
+fn experiment_id_round_trips() {
+    for id in ALL_IDS.into_iter().chain(EXTRA_IDS) {
+        for sp in spellings(id) {
+            assert_eq!(sp.parse::<ExpId>(), Ok(ExpId(id)), "{sp}");
+        }
+    }
+    let msg = "fig99".parse::<ExpId>().unwrap_err().to_string();
+    for id in ALL_IDS.into_iter().chain(EXTRA_IDS) {
+        assert!(msg.contains(id), "missing '{id}' in: {msg}");
+    }
+}
+
+#[test]
+fn normalizer_folds_case_and_separators() {
+    // The folding the spellings above rely on, pinned directly.
+    for (a, b) in [
+        ("No Cache", "no-cache"),
+        ("CACHE_ONLY", "cache only"),
+        ("Direct-WAN", "directwan"),
+        ("FIG_9", "fig9"),
+    ] {
+        assert_eq!(normalize(a), normalize(b), "{a} vs {b}");
+    }
+}

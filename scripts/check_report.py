@@ -1,21 +1,24 @@
 #!/usr/bin/env python3
-"""Assert `repro simulate --json` RunReports parse with the expected keys.
+"""Assert RunReport JSON artifacts parse with the expected keys.
 
 Usage: check_report.py REPORT.json [REPORT.json ...]
 
-Used by `make smoke` (and the CI scenario-smoke job): each file must be
-a JSON object with a full scenario echo and the run metrics, and the
-run must have served at least one request.
+Accepts both artifact shapes:
+  * a single RunReport object (`repro simulate --json`), and
+  * an array of RunReports (the `<id>.json` files the experiment
+    harnesses write next to their CSVs).
+
+Used by `make smoke` (and the CI scenario-smoke job): every report must
+carry a full scenario echo and the run metrics, and every run must have
+served at least one request.
 """
 import json
 import sys
 
 
-def check(path: str) -> None:
-    with open(path) as f:
-        doc = json.load(f)
+def check_report(label: str, doc: dict) -> None:
     for key in ("scenario", "metrics"):
-        assert key in doc, f"{path}: missing top-level '{key}'"
+        assert key in doc, f"{label}: missing top-level '{key}'"
     sc, m = doc["scenario"], doc["metrics"]
     for key in (
         "strategy",
@@ -29,7 +32,7 @@ def check(path: str) -> None:
         "arrival",
         "workload",
     ):
-        assert key in sc, f"{path}: scenario echo missing '{key}'"
+        assert key in sc, f"{label}: scenario echo missing '{key}'"
     for key in (
         "requests_total",
         "requests_to_observatory",
@@ -41,12 +44,29 @@ def check(path: str) -> None:
         "peak_req_states",
         "interior_util",
     ):
-        assert key in m, f"{path}: metrics missing '{key}'"
-    assert m["requests_total"] > 0, f"{path}: run served no requests"
-    print(
-        f"{path}: OK — {sc['strategy']} on {sc['topology']['kind']}"
-        f" ({sc['arrival']}), {int(m['requests_total'])} requests"
-    )
+        assert key in m, f"{label}: metrics missing '{key}'"
+    assert m["requests_total"] > 0, f"{label}: run served no requests"
+
+
+def check(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    is_array = isinstance(doc, list)
+    reports = doc if is_array else [doc]
+    assert reports, f"{path}: empty report array"
+    for i, r in enumerate(reports):
+        check_report(f"{path}[{i}]" if is_array else path, r)
+    sc, m = reports[0]["scenario"], reports[0]["metrics"]
+    if is_array:
+        print(
+            f"{path}: OK — {len(reports)} reports"
+            f" (first: {sc['strategy']} on {sc['topology']['kind']})"
+        )
+    else:
+        print(
+            f"{path}: OK — {sc['strategy']} on {sc['topology']['kind']}"
+            f" ({sc['arrival']}), {int(m['requests_total'])} requests"
+        )
 
 
 if __name__ == "__main__":
