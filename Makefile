@@ -4,7 +4,7 @@
 # `make artifacts` is the optional one-time AOT step that lets the
 # PJRT runtime replace the pure-Rust prediction fallbacks.
 
-.PHONY: artifacts artifacts-quick test bench smoke golden
+.PHONY: artifacts artifacts-quick test bench smoke golden lint audit miri bench-snapshot
 
 # Lower the JAX/Pallas models to HLO text + manifest.json under
 # rust/artifacts/ (the runtime's default search path).
@@ -26,6 +26,37 @@ test:
 
 bench:
 	cd rust && cargo bench
+
+# Determinism static analysis (DESIGN.md §10): the xtask `simlint` pass
+# over rust/src plus clippy with the disallowed-method/type lists from
+# rust/clippy.toml.  scripts/simlint.py is a rule-for-rule Python mirror
+# for toolchain-less environments (triage, pre-commit hooks).
+lint:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cd rust && cargo run -q -p xtask -- lint && \
+		cargo clippy --all-targets -- -D warnings; \
+	else \
+		echo "lint: cargo unavailable, using Python mirror"; \
+		python3 scripts/simlint.py --root rust; \
+	fi
+
+# Runtime invariant backstop: tier-1 tests with the `sim-audit` feature
+# (per-link capacity, hop-byte conservation, heap coherence, cache
+# registry consistency — see DESIGN.md §10).  Golden fixtures must be
+# byte-identical with the audits compiled in.
+audit:
+	cd rust && cargo test -q --features sim-audit
+	cd rust && GOLDEN_STRICT=1 cargo test -q --features sim-audit --test golden
+
+# Undefined-behavior check on the lock-free worker pool (needs a
+# nightly toolchain with the miri component).
+miri:
+	cd rust && cargo +nightly miri test --lib util::pool
+
+# Machine-readable perf trajectory: run the benches and fold their
+# rust/results/bench_*.json dumps into BENCH_<label>.json at the root.
+bench-snapshot:
+	python3 scripts/bench_snapshot.py --label pr6
 
 # Regenerate the golden-report fixtures (tests/fixtures/*.report.json)
 # after an intentional behavior change, then verify once against the

@@ -46,7 +46,8 @@ fn main() {
     let timed = |jobs: usize| -> (Duration, Vec<obsd::scenario::RunReport>) {
         let mut best: Option<(Duration, Vec<obsd::scenario::RunReport>)> = None;
         for _ in 0..2 {
-            let t0 = Instant::now();
+            #[allow(clippy::disallowed_methods)]
+            let t0 = Instant::now(); // simlint: allow(D003): wall-clock is the bench measurand
             let reports = grid.run_all(&runner, &trace, jobs);
             let dt = t0.elapsed();
             let improved = match &best {

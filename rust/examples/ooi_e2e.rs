@@ -22,7 +22,8 @@ use obsd::trace::{generator, presets};
 use obsd::util::table::Table;
 
 fn main() {
-    let t_start = std::time::Instant::now();
+    #[allow(clippy::disallowed_methods)]
+    let t_start = std::time::Instant::now(); // simlint: allow(D003): demo reports its own elapsed wall time
     println!("== OOI end-to-end: three-layer stack on the full preset ==\n");
 
     // Layer-3 workload.

@@ -163,6 +163,7 @@ pub fn fig3(trace: &Trace) -> HashMap<&'static str, Vec<(f64, f64, f64)>> {
                 *counts.entry(r.user).or_insert(0) += 1;
             }
         }
+        // simlint: allow(D001): max_by_key key (count, user-id) is injective over entries, so the winner is order-independent
         let Some((&user, _)) = counts.iter().max_by_key(|(u, c)| (**c, u.0)) else {
             continue;
         };
@@ -198,7 +199,7 @@ pub fn fig4(trace: &Trace) -> Vec<(u32, usize, u32)> {
     order.sort_by(|&a, &b| {
         let sa = &trace.sites[a];
         let sb = &trace.sites[b];
-        (sa.x, sa.y).partial_cmp(&(sb.x, sb.y)).unwrap()
+        sa.x.total_cmp(&sb.x).then(sa.y.total_cmp(&sb.y))
     });
     let rank: HashMap<usize, usize> = order.iter().enumerate().map(|(i, &s)| (s, i)).collect();
 

@@ -18,6 +18,12 @@ pub struct CacheNetwork {
     stores: Vec<DtnCache>,
     /// chunk → set of client DTNs currently holding it.
     registry: HashMap<ChunkKey, HashSet<usize>>,
+    /// Audit (feature `sim-audit`): mutation counter driving sampled
+    /// `check_registry` sweeps — the full check is O(registry), so it
+    /// runs every [`Self::AUDIT_SAMPLE`]-th insert/remove rather than
+    /// on each one.
+    #[cfg(feature = "sim-audit")]
+    audit_mutations: u64,
 }
 
 impl CacheNetwork {
@@ -26,6 +32,22 @@ impl CacheNetwork {
         Self {
             stores: (0..n_nodes).map(|_| DtnCache::new(capacity, policy)).collect(),
             registry: HashMap::new(),
+            #[cfg(feature = "sim-audit")]
+            audit_mutations: 0,
+        }
+    }
+
+    /// Audit sampling period: every N-th registry mutation triggers a
+    /// full consistency sweep under the `sim-audit` feature.
+    #[cfg(feature = "sim-audit")]
+    const AUDIT_SAMPLE: u64 = 64;
+
+    /// Count one registry mutation and run the sampled sweep.
+    #[cfg(feature = "sim-audit")]
+    fn audit_tick(&mut self) {
+        self.audit_mutations += 1;
+        if self.audit_mutations % Self::AUDIT_SAMPLE == 0 {
+            self.check_registry();
         }
     }
 
@@ -61,6 +83,8 @@ impl CacheNetwork {
         if self.stores[node].contains(&key) {
             self.registry.entry(key).or_default().insert(node);
         }
+        #[cfg(feature = "sim-audit")]
+        self.audit_tick();
     }
 
     /// Remove at a node, maintaining the registry.
@@ -73,6 +97,8 @@ impl CacheNetwork {
                 }
             }
         }
+        #[cfg(feature = "sim-audit")]
+        self.audit_tick();
     }
 
     /// Peers (excluding `node`) currently holding `key`, sorted by id
@@ -104,8 +130,10 @@ impl CacheNetwork {
     }
 
     /// Debug invariant: the registry matches store contents exactly.
-    #[cfg(test)]
+    /// Runs in tests and (sampled) under the `sim-audit` feature.
+    #[cfg(any(test, feature = "sim-audit"))]
     pub fn check_registry(&self) {
+        // simlint: allow(D001): assertion sweep; every entry checked independently, no ordered state
         for (key, nodes) in &self.registry {
             for &n in nodes {
                 assert!(self.stores[n].contains(key), "registry stale for {key:?} @ {n}");

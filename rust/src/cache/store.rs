@@ -160,9 +160,14 @@ impl DtnCache {
         }
     }
 
-    /// Iterate over live entries (for placement / replication scans).
+    /// Iterate over live entries in ascending key order (for placement
+    /// / replication scans).  The sort makes the exposure order a
+    /// function of the cache *contents*, never of HashMap layout, so
+    /// callers cannot accidentally become order-dependent.
     pub fn iter(&self) -> impl Iterator<Item = (&ChunkKey, &Entry)> {
-        self.entries.iter()
+        let mut live: Vec<(&ChunkKey, &Entry)> = self.entries.iter().collect();
+        live.sort_unstable_by_key(|(k, _)| **k);
+        live.into_iter()
     }
 }
 
@@ -258,6 +263,20 @@ mod tests {
         assert_eq!(e.size, 400);
         assert_eq!(c.used_bytes(), 0);
         assert!(c.remove(&key(1)).is_none());
+    }
+
+    /// Regression: `iter()` must yield ascending key order regardless
+    /// of insertion order — it used to expose raw `HashMap` iteration,
+    /// which leaked the per-process hash layout to placement and
+    /// replication scans.
+    #[test]
+    fn iter_is_key_ordered() {
+        let mut c = DtnCache::new(100_000, PolicyKind::Lru);
+        for i in [9u64, 2, 31, 0, 17, 5, 24, 12] {
+            c.insert(key(i), 10, Origin::Demand, i as f64);
+        }
+        let keys: Vec<u64> = c.iter().map(|(k, _)| k.chunk).collect();
+        assert_eq!(keys, vec![0, 2, 5, 9, 12, 17, 24, 31]);
     }
 
     /// Property: under arbitrary workloads, for every policy, the store

@@ -433,6 +433,8 @@ fn run_inner<'t>(
     model: Option<Box<dyn PrefetchModel>>,
     cluster: Box<dyn ClusterBackend>,
 ) -> RunMetrics {
+    // simlint: allow(D003): wall-clock feeds only RunMetrics::wall_secs, which diff_bits() explicitly excludes
+    #[allow(clippy::disallowed_methods)]
     let wall_start = std::time::Instant::now();
     let wan: [f64; 6] = continent_wan(trace);
     let topology = cfg.topology.build(cfg.net, &wan);

@@ -146,6 +146,8 @@ fn exp_options(flags: &HashMap<String, String>) -> Result<ExpOptions> {
 fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
     let id = flags.get("id").context("--id is required")?;
     let opts = exp_options(flags)?;
+    // simlint: allow(D003): CLI progress timing only; never enters simulation state or reports
+    #[allow(clippy::disallowed_methods)]
     let t0 = std::time::Instant::now();
     let report = experiments::run_experiment(id, &opts)?;
     println!("{report}");
@@ -344,6 +346,7 @@ fn cmd_runtime_check(flags: &HashMap<String, String>) -> Result<()> {
     );
 
     // Cross-check the PJRT predictor against the pure-Rust fallback.
+    // simlint: allow(D006): fixed-seed root stream for the standalone xla-smoke subcommand
     let mut rng = obsd::util::rng::Rng::new(42);
     let windows: Vec<Vec<f64>> = (0..engine.pred_batch + 3)
         .map(|_| {

@@ -87,7 +87,7 @@ impl Placement {
             groups: Vec::new(),
             backend,
             k,
-            rng: Rng::new(seed),
+            rng: Rng::new(seed), // simlint: allow(D006): root stream seeded by the caller's scenario seed
             replicated_bytes: 0.0,
             replicas_placed: 0,
         }

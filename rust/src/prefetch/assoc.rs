@@ -114,7 +114,13 @@ impl AssocModel {
     /// transactions so recent activity contributes to the rules.
     pub fn rebuild(&mut self) {
         let mut training = self.transactions.clone();
-        for (_, (_, items)) in self.open.iter() {
+        // Snapshot open sessions in user order: the training list's
+        // order must not depend on HashMap layout (future caps or
+        // sampling over it would otherwise be nondeterministic).
+        let mut snapshots: Vec<(u32, &Vec<Item>)> =
+            self.open.iter().map(|(&u, (_, items))| (u, items)).collect();
+        snapshots.sort_unstable_by_key(|&(u, _)| u);
+        for (_, items) in snapshots {
             if items.len() >= 2 {
                 training.push(items.clone());
             }
@@ -196,8 +202,7 @@ impl AssocModel {
         let mut ranked: Vec<(Item, (f64, u64))> = best.into_iter().collect();
         ranked.sort_by(|a, b| {
             b.1 .0
-                .partial_cmp(&a.1 .0)
-                .unwrap()
+                .total_cmp(&a.1 .0)
                 .then(b.1 .1.cmp(&a.1 .1))
                 .then(a.0.cmp(&b.0))
         });
@@ -317,6 +322,38 @@ mod tests {
         }
         strict.rebuild();
         assert!(strict.predict(&[1], 3).is_empty());
+    }
+
+    /// Regression: `predict` ranks candidates out of a `HashMap`, so
+    /// ties on (confidence, support) must fall through to the item id —
+    /// the pre-fix sort had no final key and returned hash-order-
+    /// dependent prefixes under `top_n` truncation.
+    #[test]
+    fn tied_predictions_rank_by_item_id() {
+        let mut m = AssocModel::new(AssocConfig {
+            min_support: 2,
+            min_confidence: 0.3,
+            session_gap_secs: 100.0,
+            max_transactions: 1000,
+        });
+        // Items 4/7/2/9 all co-occur with 0 in every session: identical
+        // confidence and support for each 0 → y rule.
+        let mut ts = 0.0;
+        for u in 0..6 {
+            for item in [0u32, 4, 7, 2, 9] {
+                m.observe(u, item, ts);
+                ts += 1.0;
+            }
+            ts += 1000.0;
+        }
+        for u in 0..6 {
+            m.observe(u, 99, ts + 1e6);
+        }
+        m.rebuild();
+        let full = m.predict(&[0], 10);
+        assert_eq!(full, vec![2, 4, 7, 9], "tie must break on item id");
+        // Truncation takes a prefix of the same deterministic order.
+        assert_eq!(m.predict(&[0], 2), vec![2, 4]);
     }
 
     #[test]

@@ -99,7 +99,9 @@ impl MeshModel {
         // expensive (each fit is a device call on the PJRT path): gate
         // on series stability, else fall back to the last gap — the
         // same screening the reference model's training would apply.
+        // simlint: allow(D005): `gaps` here is the per-user &Vec<f64> (ordered), shadowing the map field's name
         let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        // simlint: allow(D005): same local Vec binding as above
         let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
         let cv = var.sqrt() / mean.max(1e-9);
         if gaps.len() < 8 || cv > 0.5 {

@@ -133,9 +133,13 @@ impl StreamRegistry {
         Some(range)
     }
 
-    /// All live subscriptions (placement / diagnostics).
+    /// All live subscriptions in ascending (user, stream) order
+    /// (placement / diagnostics).  Sorted so the exposure order is a
+    /// function of the registry contents, never of HashMap layout.
     pub fn iter(&self) -> impl Iterator<Item = &Subscription> {
-        self.subs.values()
+        let mut live: Vec<&Subscription> = self.subs.values().collect();
+        live.sort_unstable_by_key(|s| (s.user, s.stream));
+        live.into_iter()
     }
 }
 
@@ -193,6 +197,20 @@ mod tests {
     fn push_tick_on_unknown_sub_is_none() {
         let mut reg = StreamRegistry::new();
         assert!(reg.push_tick(UserId(9), StreamId(9), 0.0, CHUNK).is_none());
+    }
+
+    /// Regression: `iter()` must yield ascending (user, stream) order
+    /// whatever the subscription order — it used to expose raw
+    /// `HashMap::values` order, leaking per-process hash layout to any
+    /// future consumer.
+    #[test]
+    fn iter_is_sorted_by_user_then_stream() {
+        let mut reg = StreamRegistry::new();
+        for (u, st) in [(5u32, 1u32), (1, 9), (5, 0), (2, 4), (1, 2)] {
+            reg.subscribe(UserId(u), StreamId(st), 0, 60.0, 0.0, CHUNK);
+        }
+        let order: Vec<(u32, u32)> = reg.iter().map(|s| (s.user.0, s.stream.0)).collect();
+        assert_eq!(order, vec![(1, 2), (1, 9), (2, 4), (5, 0), (5, 1)]);
     }
 
     #[test]

@@ -52,6 +52,10 @@ impl<T> Ord for Item<T> {
 pub struct EventQueue<T> {
     heap: BinaryHeap<Item<T>>,
     seq: u64,
+    /// Audit (feature `sim-audit`): time of the last popped event —
+    /// pops must be monotone or the heap ordering has been corrupted.
+    #[cfg(feature = "sim-audit")]
+    last_pop: f64,
 }
 
 impl<T> Default for EventQueue<T> {
@@ -65,6 +69,8 @@ impl<T> EventQueue<T> {
         Self {
             heap: BinaryHeap::new(),
             seq: 0,
+            #[cfg(feature = "sim-audit")]
+            last_pop: f64::NEG_INFINITY,
         }
     }
 
@@ -99,7 +105,17 @@ impl<T> EventQueue<T> {
 
     /// Pop the earliest event.
     pub fn pop(&mut self) -> Option<(f64, T)> {
-        self.heap.pop().map(|i| (i.time, i.payload))
+        let popped = self.heap.pop().map(|i| (i.time, i.payload));
+        #[cfg(feature = "sim-audit")]
+        if let Some((t, _)) = &popped {
+            assert!(
+                *t >= self.last_pop,
+                "audit: event queue pop went backwards: {t} < {}",
+                self.last_pop
+            );
+            self.last_pop = *t;
+        }
+        popped
     }
 }
 

@@ -190,6 +190,11 @@ pub struct FlowSim {
     /// Cumulative bytes carried per directed link (settled flow
     /// progress; utilization reporting).
     carried: HashMap<LinkId, f64>,
+    /// Audit mirror of `carried`: Σ settled bytes × route hop count,
+    /// accumulated at every settle site.  Conservation says the two
+    /// bookkeeping paths must agree (see [`FlowSim::audit_invariants`]).
+    #[cfg(feature = "sim-audit")]
+    audit_hop_settled: f64,
 }
 
 /// Result of completing a flow.
@@ -310,6 +315,7 @@ impl FlowSim {
     /// [`FlowSim::next_completion`] returns, bit-for-bit.
     pub fn next_completion_linear(&mut self) -> Option<(f64, FlowId)> {
         self.flush();
+        // simlint: allow(D001): min_by comparator (time, flow-id) is injective, so the minimum is order-independent
         self.flows
             .iter()
             .map(|(&id, f)| (completion_time(f), id))
@@ -324,7 +330,11 @@ impl FlowSim {
         let mut flow = self.flows.remove(&id)?;
         // Final settle of the completing flow: byte accounting and
         // per-link carried-bytes attribution up to `now`.
-        settle_flow(&mut flow, now, &mut self.carried);
+        let _moved = settle_flow(&mut flow, now, &mut self.carried);
+        #[cfg(feature = "sim-audit")]
+        {
+            self.audit_hop_settled += _moved * flow.route.hops.len() as f64;
+        }
         for hop in &flow.route.hops {
             let emptied = match self.links.get_mut(&hop.link) {
                 Some(st) => {
@@ -399,6 +409,7 @@ impl FlowSim {
             let l = comp_links[qi];
             qi += 1;
             let Some(st) = self.links.get(&l) else { continue };
+            // simlint: allow(D001): LinkState.flows is a Vec kept ascending by flow id, not the flow table
             for &fid in &st.flows {
                 if seen_flows.insert(fid) {
                     comp_flows.push(fid);
@@ -416,10 +427,20 @@ impl FlowSim {
         {
             let flows = &mut self.flows;
             let carried = &mut self.carried;
+            #[cfg(feature = "sim-audit")]
+            let mut hop_settled = 0.0;
             for fid in &comp_flows {
                 if let Some(f) = flows.get_mut(fid) {
-                    settle_flow(f, now, carried);
+                    let _moved = settle_flow(f, now, carried);
+                    #[cfg(feature = "sim-audit")]
+                    {
+                        hop_settled += _moved * f.route.hops.len() as f64;
+                    }
                 }
+            }
+            #[cfg(feature = "sim-audit")]
+            {
+                self.audit_hop_settled += hop_settled;
             }
         }
 
@@ -437,6 +458,119 @@ impl FlowSim {
             }
         }
         self.maybe_compact();
+        #[cfg(feature = "sim-audit")]
+        self.audit_invariants();
+    }
+
+    /// Runtime invariant audit (feature `sim-audit`), run after every
+    /// replan: per-link rate ≤ capacity, membership-vector order,
+    /// links ↔ flows cross-registration, per-flow byte accounting,
+    /// heap-version coherence (every fresh entry's indexed time is
+    /// bitwise the flow's projected completion, every active flow has
+    /// a fresh entry), and hop-byte conservation between the two
+    /// independent bookkeeping paths.  Panics on violation.
+    #[cfg(feature = "sim-audit")]
+    fn audit_invariants(&self) {
+        // simlint: allow(D001): assertion-only scan; nothing ordered escapes it
+        for (&lid, st) in &self.links {
+            assert!(
+                st.capacity.is_finite() && st.capacity > 0.0,
+                "audit: link {lid} has capacity {}",
+                st.capacity
+            );
+            for w in st.flows.windows(2) {
+                assert!(w[0] < w[1], "audit: link {lid} membership not ascending");
+            }
+            let mut aggregate = 0.0;
+            // simlint: allow(D001): LinkState.flows is the ascending membership Vec
+            for &fid in &st.flows {
+                let f = self
+                    .flows
+                    .get(&fid)
+                    .unwrap_or_else(|| panic!("audit: link {lid} lists dead flow {fid:?}"));
+                assert!(
+                    f.route.hops.iter().any(|h| h.link == lid),
+                    "audit: flow {fid:?} resident on link {lid} not on its route"
+                );
+                aggregate += f.rate;
+            }
+            assert!(
+                aggregate <= st.capacity * (1.0 + 1e-9),
+                "audit: link {lid} oversubscribed: {aggregate} > {}",
+                st.capacity
+            );
+        }
+
+        // simlint: allow(D001): assertion-only scan; nothing ordered escapes it
+        for (&fid, f) in &self.flows {
+            assert!(
+                f.bytes_total.is_finite() && f.bytes_total > 0.0,
+                "audit: flow {fid:?} bytes_total {}",
+                f.bytes_total
+            );
+            assert!(
+                f.bytes_left.is_finite()
+                    && f.bytes_left >= 0.0
+                    && f.bytes_left <= f.bytes_total,
+                "audit: flow {fid:?} bytes_left {} of {}",
+                f.bytes_left,
+                f.bytes_total
+            );
+            assert!(
+                f.rate.is_finite() && f.rate >= 0.0,
+                "audit: flow {fid:?} rate {}",
+                f.rate
+            );
+            for hop in &f.route.hops {
+                let st = self
+                    .links
+                    .get(&hop.link)
+                    .unwrap_or_else(|| panic!("audit: flow {fid:?} routes dead link {}", hop.link));
+                assert!(
+                    st.flows.binary_search(&fid).is_ok(),
+                    "audit: flow {fid:?} not registered on link {}",
+                    hop.link
+                );
+            }
+        }
+
+        // Heap coherence.  Every flush replans exactly the settled
+        // component and start() indexes dedicated flows directly, so
+        // after a flush each active flow must be covered by a fresh
+        // entry whose time is bit-identical to its projected completion.
+        let mut fresh_ids: HashSet<FlowId> = HashSet::new();
+        for p in &self.completions {
+            if let Some(f) = self.flows.get(&p.id) {
+                if p.version == f.version {
+                    assert!(
+                        p.time.to_bits() == completion_time(f).to_bits(),
+                        "audit: fresh heap entry for {:?} has time {} != plan {}",
+                        p.id,
+                        p.time,
+                        completion_time(f)
+                    );
+                    fresh_ids.insert(p.id);
+                }
+            }
+        }
+        // simlint: allow(D001): assertion-only scan; nothing ordered escapes it
+        for &fid in self.flows.keys() {
+            assert!(
+                fresh_ids.contains(&fid),
+                "audit: flow {fid:?} has no fresh heap entry"
+            );
+        }
+
+        // Hop-byte conservation: the per-link attribution and the
+        // settle-site accumulator count the same bytes.
+        // simlint: allow(D005): audit-only total; fp rounding covered by the tolerance below
+        let total: f64 = self.carried.values().sum();
+        assert!(
+            (total - self.audit_hop_settled).abs()
+                <= 1e-6 * self.audit_hop_settled.abs().max(1.0),
+            "audit: hop-byte conservation broke: carried {total} vs settled {}",
+            self.audit_hop_settled
+        );
     }
 
     /// Progressive-filling max-min over the given links and every flow
@@ -462,6 +596,7 @@ impl FlowSim {
         if link_ids.len() == 1 {
             let st = &self.links[&link_ids[0]];
             let level = st.capacity / st.flows.len() as f64;
+            // simlint: allow(D001): LinkState.flows is a Vec kept ascending by flow id (membership-vector invariant), not the flow table
             return st.flows.iter().map(|&fid| (fid, level)).collect();
         }
 
@@ -581,20 +716,24 @@ impl FlowSim {
 
 /// Advance one flow to `now` at its current rate: byte accounting
 /// (identical arithmetic to the pre-routing per-link settle) plus
-/// carried-bytes attribution on every link of its route.
-fn settle_flow(f: &mut Flow, now: f64, carried: &mut HashMap<LinkId, f64>) {
+/// carried-bytes attribution on every link of its route.  Returns the
+/// bytes attributed to each hop (0 when nothing moved) — the audit
+/// layer mirrors `moved × hops` against Σ `carried` for conservation.
+fn settle_flow(f: &mut Flow, now: f64, carried: &mut HashMap<LinkId, f64>) -> f64 {
     let dt = (now - f.last_settle).max(0.0);
+    let mut moved = 0.0;
     if dt > 0.0 && f.rate > 0.0 {
         // Attribution is capped at the bytes actually remaining so link
         // counters never overshoot; the flow's own accounting keeps the
         // historical clamp-to-zero arithmetic.
-        let moved = (f.rate * dt).min(f.bytes_left);
+        moved = (f.rate * dt).min(f.bytes_left);
         for hop in &f.route.hops {
             *carried.entry(hop.link).or_insert(0.0) += moved;
         }
         f.bytes_left = (f.bytes_left - f.rate * dt).max(0.0);
     }
     f.last_settle = now;
+    moved
 }
 
 #[cfg(test)]

@@ -124,8 +124,7 @@ impl Series {
         } else {
             let mut scratch = self.gaps.clone();
             let mid = scratch.len() / 2;
-            let (_, med, _) =
-                scratch.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+            let (_, med, _) = scratch.select_nth_unstable_by(mid, |a, b| a.total_cmp(b));
             Some(*med)
         };
         self.matches = match self.median {
@@ -226,15 +225,19 @@ impl OnlineClassifier {
             .map(|d| d.repeat_days)
             .unwrap_or(0);
         let mut best: Option<ProgramClass> = None;
-        let mut best_gap = f64::INFINITY;
-        for ((u, _), s) in &self.series {
+        // Selection key (gap, stream id) is injective over the user's
+        // series, so the winner is independent of iteration order —
+        // a bare `gap <` would tie-break by HashMap layout.
+        let mut best_key = (f64::INFINITY, u32::MAX);
+        // simlint: allow(D001): min over the injective (gap, stream-id) key above; order-independent
+        for ((u, st), s) in &self.series {
             if *u != user {
                 continue;
             }
             if s.is_periodic() {
                 let gap = s.median_gap().unwrap_or(f64::INFINITY);
-                if gap < best_gap {
-                    best_gap = gap;
+                if gap.total_cmp(&best_key.0).then(st.0.cmp(&best_key.1)).is_lt() {
+                    best_key = (gap, st.0);
                     best = Some(Self::subtype(s));
                 }
             }
@@ -416,6 +419,43 @@ mod tests {
         let gaps = clf.gap_history(UserId(1), StreamId(0));
         assert_eq!(gaps.len(), 4);
         assert!(gaps.iter().all(|g| (*g - 100.0).abs() < 1e-9));
+    }
+
+    /// Regression: when two periodic series tie on median gap, the user
+    /// subtype must come from the lower stream id — not from whichever
+    /// entry the `HashMap` happened to yield first (the pre-fix
+    /// behavior, which made `classify_user` run-to-run nondeterministic
+    /// exactly when a user ran two scripts on the same schedule).
+    #[test]
+    fn equal_gap_series_tie_break_on_stream_id() {
+        // Same 1 h period on both streams; the lower-id stream requests
+        // disjoint ranges (Regular), the higher-id one a 24 h moving
+        // window (Overlapping).  Only the deterministic tie-break
+        // decides which subtype the *user* reports.
+        let mut clf = OnlineClassifier::new();
+        for i in 0..24 {
+            let t = i as f64 * 3600.0;
+            clf.observe(&req(7, t, 4, t - 3600.0, t));
+            clf.observe(&req(7, t, 9, t - 86_400.0, t));
+        }
+        assert_eq!(
+            clf.classify_user(UserId(7)),
+            UserClass::Program(ProgramClass::Regular),
+            "tie on gap must resolve to the lower stream id (4 = Regular)"
+        );
+
+        // Swapped roles: now the lower id is the overlapping one.
+        let mut clf = OnlineClassifier::new();
+        for i in 0..24 {
+            let t = i as f64 * 3600.0;
+            clf.observe(&req(8, t, 2, t - 86_400.0, t));
+            clf.observe(&req(8, t, 7, t - 3600.0, t));
+        }
+        assert_eq!(
+            clf.classify_user(UserId(8)),
+            UserClass::Program(ProgramClass::Overlapping),
+            "tie on gap must resolve to the lower stream id (2 = Overlapping)"
+        );
     }
 
     #[test]

@@ -269,6 +269,7 @@ impl Trace {
 
     /// Deterministically subsample users (keeps request ordering).
     pub fn subsample_users(&self, keep_frac: f64, seed: u64) -> Trace {
+        // simlint: allow(D006): subsampling is its own root stream, seeded explicitly by the caller
         let mut rng = Rng::new(seed);
         let keep: Vec<bool> = (0..self.users.len())
             .map(|_| rng.chance(keep_frac))

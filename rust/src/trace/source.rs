@@ -79,6 +79,7 @@ pub struct StreamingTrace {
 impl StreamingTrace {
     /// Run the eager phases of trace generation for `cfg`.
     pub fn new(cfg: &PresetConfig) -> Self {
+        // simlint: allow(D006): the trace generator's root stream, seeded from the preset config
         let mut rng = Rng::new(cfg.seed);
         let duration = cfg.duration_secs();
 

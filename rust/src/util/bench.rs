@@ -89,9 +89,12 @@ impl Bencher {
 
     /// Run a closure repeatedly and record stats. The closure should
     /// return something to defeat dead-code elimination.
+    // Wall-clock is the *measurand* here — the bench harness never runs
+    // inside a simulation and its output feeds no simulation state.
+    #[allow(clippy::disallowed_methods)]
     pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
         // Warmup + per-iteration estimate.
-        let warm_start = Instant::now();
+        let warm_start = Instant::now(); // simlint: allow(D003): wall-clock is the bench measurand
         let mut warm_iters = 0u64;
         while warm_start.elapsed() < self.warmup || warm_iters < self.min_warmup_iters.max(1) {
             std::hint::black_box(f());
@@ -101,9 +104,9 @@ impl Bencher {
         // Batch so each sample is ≥ ~100 µs to amortize timer overhead.
         let batch = ((100_000.0 / est_ns).ceil() as u64).max(1);
         let mut samples = Vec::new();
-        let start = Instant::now();
+        let start = Instant::now(); // simlint: allow(D003): wall-clock is the bench measurand
         while start.elapsed() < self.measure || samples.len() < self.min_samples {
-            let t0 = Instant::now();
+            let t0 = Instant::now(); // simlint: allow(D003): wall-clock is the bench measurand
             for _ in 0..batch {
                 std::hint::black_box(f());
             }

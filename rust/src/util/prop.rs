@@ -32,7 +32,7 @@ pub fn check(name: &str, prop: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
     for i in 0..cases {
         let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
         let result = std::panic::catch_unwind(|| {
-            let mut rng = Rng::new(seed);
+            let mut rng = Rng::new(seed); // simlint: allow(D006): property-harness root stream, seeded per case index
             prop(&mut rng);
         });
         if let Err(err) = result {

@@ -29,7 +29,7 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -153,6 +153,21 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 1.0), 4.0);
         assert_eq!(median(&xs), 2.5);
+    }
+
+    /// Regression: `percentile` used `partial_cmp(..).unwrap()`, which
+    /// panicked the moment a NaN (e.g. a 0/0 rate from an empty
+    /// interval) reached a metrics vector.  `total_cmp` sorts NaN to
+    /// the +∞ end instead: finite quantiles stay exact and the result
+    /// is the same on every run.
+    #[test]
+    fn percentile_tolerates_nan() {
+        let xs = [4.0, f64::NAN, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        // The top percentile lands on the NaN slot — defined behavior,
+        // surfaced to the caller rather than a panic.
+        assert!(percentile(&xs, 1.0).is_nan());
     }
 
     #[test]

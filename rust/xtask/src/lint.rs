@@ -1,0 +1,1112 @@
+//! `simlint`: the determinism & invariant static-analysis pass.
+//!
+//! Enforces the determinism contract of DESIGN.md §10 over
+//! `rust/src/**/*.rs`.  The simulator's headline claims — paper-preset
+//! parity, golden-report regression, parallel-equals-serial sweeps —
+//! all rest on bit-identical replay, and every rule here encodes a bug
+//! class that has already been fixed by hand at least once (a
+//! `partial_cmp` ts-only sort, a non-`total_cmp` peer comparison,
+//! HashMap-ordered iteration feeding metrics).
+//!
+//! # Rules
+//!
+//! | rule | hazard |
+//! |------|--------|
+//! | D000 | `simlint: allow` annotation without a reason string |
+//! | D001 | iteration over an unordered `HashMap`/`HashSet` feeding ordered state |
+//! | D002 | float ordering via `partial_cmp` instead of `f64::total_cmp` |
+//! | D003 | ambient nondeterminism: `Instant::now`, `SystemTime`, `RandomState`, `DefaultHasher` |
+//! | D004 | `thread::spawn` outside the sanctioned pool (`util/pool.rs`) |
+//! | D005 | float accumulation (`sum`/`fold`/`product`) over unordered iteration |
+//! | D006 | ad-hoc RNG construction (`Rng::new`) outside `util/rng.rs` |
+//!
+//! # Suppression
+//!
+//! A finding is suppressed by an annotation comment **with a reason**:
+//!
+//! ```text
+//! // simlint: allow(D001): assertion-only scan, order-independent
+//! ```
+//!
+//! placed either trailing on the flagged line or alone on the line(s)
+//! directly above it.  A reason is mandatory (D000 otherwise), and an
+//! annotation that suppresses nothing is reported as a warning so
+//! stale allows rot loudly.
+//!
+//! # Scope and deliberate limits
+//!
+//! The pass is line/token-based (std-only, no syntax tree): type
+//! knowledge is per-file (`name: HashMap<..>` declarations, `name =
+//! HashMap::new()` constructions, and `type X = HashMap<..>` aliases),
+//! `#[cfg(test)]` blocks are skipped (tests assert, they don't feed
+//! simulation state), and order-insensitive sinks (`count`, `any`,
+//! integer `sum::<..>`, collect-then-sort within three lines) cancel
+//! D001.  False negatives are accepted; false positives are cheap to
+//! annotate — the contract is that *unreviewed* unordered iteration
+//! never lands.
+
+use std::collections::BTreeMap;
+
+/// One lint hit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Per-file lint result.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    /// Path the report covers (forward slashes, relative to `rust/`).
+    pub file: String,
+    /// Unsuppressed findings (fail the lint).
+    pub findings: Vec<Finding>,
+    /// Findings silenced by a reasoned allow annotation.
+    pub suppressed: usize,
+    /// `(line, rules)` of annotations that silenced nothing.
+    pub unused_allows: Vec<(usize, String)>,
+}
+
+const ITER_METHODS: [&str; 9] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+];
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+// ---------------------------------------------------------------------
+// Source preprocessing: comments and literal contents removed,
+// line structure preserved.
+// ---------------------------------------------------------------------
+
+/// Strip comments and string/char-literal contents, preserving the
+/// physical line structure so findings keep their line numbers.
+/// Nested block comments, escaped strings, raw strings and the
+/// char-literal/lifetime ambiguity are handled; literal quotes are
+/// kept as empty `""` tokens.
+pub fn strip_source(src: &str) -> Vec<String> {
+    #[derive(PartialEq, Clone, Copy)]
+    enum St {
+        Code,
+        Str,
+        RawStr(usize),
+        Block(usize),
+    }
+    let chars: Vec<char> = src.chars().collect();
+    let mut out: Vec<String> = Vec::new();
+    let mut cur = String::new();
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            out.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    while i < chars.len() && chars[i] != '\n' {
+                        i += 1;
+                    }
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur.push('"');
+                    i += 1;
+                } else if c == 'r'
+                    && !cur.chars().last().map(is_ident).unwrap_or(false)
+                    && matches!(chars.get(i + 1), Some(&'"') | Some(&'#'))
+                {
+                    // r"..." or r#"..."# raw string.
+                    let mut hashes = 0usize;
+                    let mut j = i + 1;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        st = St::RawStr(hashes);
+                        cur.push('"');
+                        i = j + 1;
+                    } else {
+                        cur.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: a literal closes within
+                    // a few chars ('a', '\n', '\''); a lifetime does not.
+                    if chars.get(i + 1) == Some(&'\\') {
+                        // Escaped char literal: skip to the closing quote.
+                        let mut j = i + 2;
+                        while j < chars.len() && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        cur.push_str("''");
+                        i = j + 1;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        cur.push_str("''");
+                        i += 3;
+                    } else {
+                        // Lifetime: keep the tick (harmless) and move on.
+                        cur.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    // Keep a `\`-newline continuation's newline visible
+                    // so physical line numbers stay aligned.
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    cur.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..h {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        cur.push('"');
+                        st = St::Code;
+                        i += 1 + h;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            St::Block(d) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::Block(d + 1);
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.push(cur);
+    out
+}
+
+// ---------------------------------------------------------------------
+// `#[cfg(test)]` block masking.
+// ---------------------------------------------------------------------
+
+/// Mark every line belonging to a `#[cfg(test)]`-gated item (the
+/// attribute line through the matching close brace).  Test code
+/// asserts over simulation output; it does not feed simulation state,
+/// so the determinism rules do not apply there.
+pub fn test_mask(code: &[String]) -> Vec<bool> {
+    let n = code.len();
+    let mut mask = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        let Some(attr) = code[i].find("#[cfg(test)]") else {
+            i += 1;
+            continue;
+        };
+        let mut depth = 0i64;
+        let mut started = false;
+        let mut j = i;
+        let mut done = false;
+        while j < n && !done {
+            let start_col = if j == i { attr + "#[cfg(test)]".len() } else { 0 };
+            for c in code[j][start_col.min(code[j].len())..].chars() {
+                if c == '{' {
+                    depth += 1;
+                    started = true;
+                } else if c == '}' {
+                    depth -= 1;
+                    if started && depth == 0 {
+                        done = true;
+                        break;
+                    }
+                }
+            }
+            mask[j] = true;
+            j += 1;
+        }
+        i = j.max(i + 1);
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------
+// Allow annotations.
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Allow {
+    /// Line the annotation is written on (0-based).
+    at: usize,
+    /// Line the annotation applies to (0-based).
+    target: usize,
+    rules: Vec<String>,
+    has_reason: bool,
+    used: bool,
+}
+
+/// Parse `// simlint: allow(D00X[, D00Y]): reason` annotations from
+/// the raw source.  A trailing annotation applies to its own line; an
+/// annotation alone on a line applies to the next line with code.
+fn parse_allows(raw: &[&str], code: &[String]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (i, line) in raw.iter().enumerate() {
+        let Some(c0) = line.find("//") else { continue };
+        let Some(rel) = line[c0..].find("simlint: allow(") else {
+            continue;
+        };
+        let open = c0 + rel + "simlint: allow(".len();
+        let Some(close_rel) = line[open..].find(')') else {
+            continue;
+        };
+        let rules: Vec<String> = line[open..open + close_rel]
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        let after = &line[open + close_rel + 1..];
+        let has_reason = after
+            .strip_prefix(':')
+            .map(|r| r.trim().len() >= 3)
+            .unwrap_or(false);
+        // Comment-only line ⇒ the annotation covers the next code line.
+        // Attribute-only lines (`#[allow(..)]`, `#[inline]`) belong to
+        // the item below and are skipped over, like blank lines.
+        let skippable = |s: &str| {
+            let t = s.trim();
+            t.is_empty() || (t.starts_with("#[") && t.ends_with(']'))
+        };
+        let own_line = code[i].trim().is_empty();
+        let target = if own_line {
+            let mut t = i + 1;
+            while t < code.len() && skippable(&code[t]) {
+                t += 1;
+            }
+            t
+        } else {
+            i
+        };
+        out.push(Allow {
+            at: i,
+            target,
+            rules,
+            has_reason,
+            used: false,
+        });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Unordered-collection name tracking (per file).
+// ---------------------------------------------------------------------
+
+/// Find the next occurrence of `tok` in `hay` at or after `from` with
+/// identifier boundaries on both sides.
+fn find_token(hay: &str, tok: &str, from: usize) -> Option<usize> {
+    let bytes = hay.as_bytes();
+    let mut start = from;
+    while start + tok.len() <= hay.len() {
+        match hay[start..].find(tok) {
+            None => return None,
+            Some(rel) => {
+                let p = start + rel;
+                let before_ok = p == 0 || !is_ident(bytes[p - 1] as char);
+                let end = p + tok.len();
+                let after_ok = end >= hay.len() || !is_ident(bytes[end] as char);
+                if before_ok && after_ok {
+                    return Some(p);
+                }
+                start = p + 1;
+            }
+        }
+    }
+    None
+}
+
+/// Read the identifier ending at byte position `end` (exclusive);
+/// returns it or an empty string.
+fn ident_before(hay: &str, end: usize) -> String {
+    let bytes = hay.as_bytes();
+    let mut s = end;
+    while s > 0 && is_ident(bytes[s - 1] as char) {
+        s -= 1;
+    }
+    hay[s..end].to_string()
+}
+
+/// Collect the per-file set of names bound to unordered collections:
+/// declarations `name: [&mut] HashMap<..>` (fields, params, lets with
+/// type ascription), constructions `name = HashMap::new()` (and
+/// `default`/`with_capacity`/`from`), plus `type Alias = HashMap<..>`
+/// aliases which then track like the base types.  Only non-test lines
+/// contribute (a name bound in a test must not taint same-named
+/// bindings in production code).
+pub fn unordered_names(code: &[String], mask: &[bool]) -> Vec<String> {
+    let mut types: Vec<String> = vec!["HashMap".into(), "HashSet".into()];
+    // Aliases first: `type ReqStateMap = HashMap<..>;`
+    for (i, line) in code.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let t = line.trim_start();
+        let Some(rest) = t.strip_prefix("type ") else {
+            continue;
+        };
+        let Some(eq) = rest.find('=') else { continue };
+        let rhs = &rest[eq + 1..];
+        if find_token(rhs, "HashMap", 0).is_some() || find_token(rhs, "HashSet", 0).is_some() {
+            let name: String = rest[..eq]
+                .trim()
+                .chars()
+                .take_while(|&c| is_ident(c))
+                .collect();
+            if !name.is_empty() {
+                types.push(name);
+            }
+        }
+    }
+
+    let mut names: Vec<String> = Vec::new();
+    for (i, line) in code.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        for tok in &types {
+            // Declarations: walk back from `Tok<` to the binder ident
+            // before a single `:`.
+            let mut from = 0usize;
+            while let Some(p) = find_token(line, tok, from) {
+                from = p + tok.len();
+                let bytes = line.as_bytes();
+                // Base types must carry generics (`HashMap<..>`); alias
+                // types are used bare (`live: Reqs`).
+                let is_alias = tok != "HashMap" && tok != "HashSet";
+                if bytes.get(p + tok.len()) == Some(&b'<') || is_alias {
+                    // Skip a path prefix (`std::collections::`) backwards.
+                    let mut q = p;
+                    loop {
+                        while q >= 2 && &line[q - 2..q] == "::" {
+                            q -= 2;
+                            while q > 0 && is_ident(bytes[q - 1] as char) {
+                                q -= 1;
+                            }
+                        }
+                        break;
+                    }
+                    // Skip whitespace, `&`, lifetimes, `mut`/`dyn`.
+                    let mut q2 = q;
+                    loop {
+                        let prev = if q2 > 0 { bytes[q2 - 1] as char } else { '\0' };
+                        if prev == ' ' || prev == '&' || prev == '\'' {
+                            q2 -= 1;
+                            continue;
+                        }
+                        if q2 >= 3 && &line[q2 - 3..q2] == "mut" {
+                            q2 -= 3;
+                            continue;
+                        }
+                        if q2 >= 3 && &line[q2 - 3..q2] == "dyn" {
+                            q2 -= 3;
+                            continue;
+                        }
+                        break;
+                    }
+                    if q2 > 0
+                        && bytes[q2 - 1] == b':'
+                        && (q2 < 2 || bytes[q2 - 2] != b':')
+                    {
+                        let name = ident_before(line, q2 - 1);
+                        if !name.is_empty() && !names.contains(&name) {
+                            names.push(name);
+                        }
+                    }
+                }
+                // Constructions: `name = Tok::new(..)` and friends.
+                for ctor in ["::new(", "::default()", "::with_capacity(", "::from("] {
+                    if line[p + tok.len()..].starts_with(ctor) {
+                        let mut q = p;
+                        while q > 0 && bytes[q - 1] == b' ' {
+                            q -= 1;
+                        }
+                        if q > 0 && bytes[q - 1] == b'=' && (q < 2 || bytes[q - 2] != b'=') {
+                            let mut r = q - 1;
+                            while r > 0 && bytes[r - 1] == b' ' {
+                                r -= 1;
+                            }
+                            let name = ident_before(line, r);
+                            if !name.is_empty() && !names.contains(&name) {
+                                names.push(name);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    names
+}
+
+// ---------------------------------------------------------------------
+// Sink classification for D001/D005.
+// ---------------------------------------------------------------------
+
+/// What an unordered-iteration chain feeds into.
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+enum Sink {
+    /// Order-insensitive consumer (count/any/integer-sum/...): no finding.
+    Safe,
+    /// Float accumulation: D005.
+    FloatAccum,
+    /// Everything else: D001.
+    Ordered,
+}
+
+/// Extract the chain tail following an iteration-method call: walk
+/// from `start` tracking bracket depth, stopping at a top-level `;`,
+/// a top-level `{` (loop/closure body boundary), a close that leaves
+/// the expression, or a 1500-char budget.
+fn chain_tail(buf: &str, start: usize) -> String {
+    let mut depth = 0i64;
+    let mut out = String::new();
+    for c in buf[start..].chars().take(1500) {
+        match c {
+            '(' | '[' => depth += 1,
+            ')' | ']' => {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+            }
+            '{' => {
+                if depth == 0 {
+                    break;
+                }
+                depth += 1;
+            }
+            '}' => {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+            }
+            ';' => {
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Classify a chain tail: the **first** terminal token decides.
+/// `sorted_later` reports whether a `.sort` appears within the next
+/// three lines (the collect-then-sort idiom).
+fn classify_tail(tail: &str, sorted_later: bool) -> Sink {
+    const FLOAT_ACCUM: [&str; 5] = [
+        ".sum::<f64>",
+        ".sum()",
+        ".product()",
+        ".product::<f64>",
+        ".fold(",
+    ];
+    const SAFE: [&str; 13] = [
+        ".count()",
+        ".len()",
+        ".any(",
+        ".all(",
+        ".contains(",
+        ".is_empty()",
+        ".min()",
+        ".max()",
+        ".sum::<",
+        ".product::<",
+        ".collect::<HashMap",
+        ".collect::<HashSet",
+        ".collect::<BTree",
+    ];
+    // Only tokens at bracket depth 0 are chain terminals — a `.len()`
+    // inside a `.map(|v| v.len())` closure is not what the chain feeds.
+    let mut depth_at = Vec::with_capacity(tail.len());
+    let mut d = 0i64;
+    for &b in tail.as_bytes() {
+        match b {
+            b'(' | b'[' | b'{' => {
+                depth_at.push(d);
+                d += 1;
+            }
+            b')' | b']' | b'}' => {
+                d -= 1;
+                depth_at.push(d);
+            }
+            _ => depth_at.push(d),
+        }
+    }
+    let top_find = |pat: &str| -> Option<usize> {
+        let mut from = 0usize;
+        while from + pat.len() <= tail.len() {
+            match tail[from..].find(pat) {
+                None => return None,
+                Some(rel) => {
+                    let p = from + rel;
+                    if depth_at[p] == 0 {
+                        return Some(p);
+                    }
+                    from = p + 1;
+                }
+            }
+        }
+        None
+    };
+    let mut best: Option<(usize, Sink)> = None;
+    let mut consider = |pos: Option<usize>, sink: Sink| {
+        if let Some(p) = pos {
+            if best.map(|(b, _)| p < b).unwrap_or(true) {
+                best = Some((p, sink));
+            }
+        }
+    };
+    for t in FLOAT_ACCUM {
+        consider(top_find(t), Sink::FloatAccum);
+    }
+    for t in SAFE {
+        consider(top_find(t), Sink::Safe);
+    }
+    consider(top_find(".collect").filter(|_| sorted_later), Sink::Safe);
+    match best {
+        Some((_, s)) => s,
+        None => Sink::Ordered,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The lint proper.
+// ---------------------------------------------------------------------
+
+/// Lint one file's source.  `relpath` uses forward slashes relative to
+/// `rust/` (e.g. `src/util/pool.rs`) and drives the per-file rule
+/// exemptions (the sanctioned owners of a hazard).
+pub fn lint_source(relpath: &str, src: &str) -> FileReport {
+    let raw: Vec<&str> = src.split('\n').collect();
+    let code = strip_source(src);
+    debug_assert_eq!(raw.len(), code.len());
+    let mask = test_mask(&code);
+    let mut allows = parse_allows(&raw, &code);
+    let names = unordered_names(&code, &mask);
+
+    // Joined buffer (test lines blanked) with offset → line mapping,
+    // so method chains split across lines still match.
+    let mut buf = String::new();
+    let mut line_of: Vec<usize> = Vec::new();
+    for (i, line) in code.iter().enumerate() {
+        let text: &str = if mask[i] { "" } else { line };
+        for _ in 0..text.len() + 1 {
+            line_of.push(i);
+        }
+        buf.push_str(text);
+        buf.push('\n');
+    }
+
+    let mut hits: BTreeMap<(usize, &'static str), String> = BTreeMap::new();
+    let mut add = |line: usize, rule: &'static str, msg: String| {
+        hits.entry((line, rule)).or_insert(msg);
+    };
+
+    // D002: float ordering via partial_cmp (definitions excluded).
+    let mut from = 0;
+    while let Some(p) = find_token(&buf, "partial_cmp", from) {
+        from = p + 1;
+        let is_def = p >= 3 && &buf[p - 3..p] == "fn ";
+        if !is_def {
+            add(
+                line_of[p],
+                "D002",
+                "float ordering via `partial_cmp` — use `f64::total_cmp` (crate ordering policy)"
+                    .into(),
+            );
+        }
+    }
+
+    // D003: ambient nondeterminism sources.
+    for tok in ["Instant::now", "SystemTime", "RandomState", "DefaultHasher"] {
+        let mut from = 0;
+        while let Some(p) = find_token(&buf, tok, from) {
+            from = p + 1;
+            add(
+                line_of[p],
+                "D003",
+                format!("ambient nondeterminism: `{tok}` in simulation code"),
+            );
+        }
+    }
+
+    // D004: threads outside the sanctioned pool.
+    if !relpath.ends_with("util/pool.rs") {
+        let mut from = 0;
+        while let Some(p) = find_token(&buf, "thread::spawn", from) {
+            from = p + 1;
+            add(
+                line_of[p],
+                "D004",
+                "`thread::spawn` outside `util/pool.rs` — use `util::pool::run_ordered`".into(),
+            );
+        }
+    }
+
+    // D006: ad-hoc RNG roots.
+    if !relpath.ends_with("util/rng.rs") {
+        let mut from = 0;
+        while let Some(p) = find_token(&buf, "Rng::new", from) {
+            from = p + 1;
+            add(
+                line_of[p],
+                "D006",
+                "`Rng::new` outside `util/rng.rs` — fork a substream (`Rng::fork`) instead"
+                    .into(),
+            );
+        }
+    }
+
+    // D001/D005: unordered iteration.
+    for name in &names {
+        let mut from = 0;
+        while let Some(p) = find_token(&buf, name, from) {
+            from = p + name.len();
+            // `for x in [&mut] [recv.]name`-style iteration: strip a
+            // receiver path (`self.`, `st.inner.`), then borrows, then
+            // look for the `in` keyword.
+            let before = &buf[..p];
+            let trimmed = before.trim_end_matches(|c: char| is_ident(c) || c == '.');
+            let trimmed = trimmed.trim_end_matches(['&', ' ']);
+            let trimmed = if trimmed.ends_with("mut") {
+                trimmed[..trimmed.len() - 3].trim_end_matches(['&', ' '])
+            } else {
+                trimmed
+            };
+            let for_ctx = trimmed.ends_with(" in") || trimmed.ends_with("\tin");
+            let mut after = buf[p + name.len()..].chars().peekable();
+            let mut skipped = 0usize;
+            while matches!(after.peek(), Some(' ') | Some('\n')) {
+                after.next();
+                skipped += 1;
+            }
+            if for_ctx {
+                let next = after.peek().copied().unwrap_or('\0');
+                if next == '{' {
+                    // `for x in map {` — direct unordered iteration.
+                    add(
+                        line_of[p],
+                        "D001",
+                        format!("iteration over unordered `{name}` in a `for` loop"),
+                    );
+                    continue;
+                }
+                // `for x in map.<method>` falls through: flagged below
+                // only when the method is an iteration method.
+            }
+            // `name.method(` chains.
+            let q = p + name.len() + skipped;
+            if buf[q..].starts_with('.') {
+                let meth: String = buf[q + 1..].chars().take_while(|&c| is_ident(c)).collect();
+                let call = q + 1 + meth.len();
+                if ITER_METHODS.contains(&meth.as_str()) && buf[call..].starts_with('(') {
+                    // Find the matching close paren of the method call.
+                    let mut depth = 0i64;
+                    let mut end = call;
+                    for (k, c) in buf[call..].char_indices() {
+                        if c == '(' {
+                            depth += 1;
+                        } else if c == ')' {
+                            depth -= 1;
+                            if depth == 0 {
+                                end = call + k + 1;
+                                break;
+                            }
+                        }
+                    }
+                    if for_ctx {
+                        add(
+                            line_of[p],
+                            "D001",
+                            format!("iteration over unordered `{name}` in a `for` loop"),
+                        );
+                        continue;
+                    }
+                    let tail = chain_tail(&buf, end);
+                    let l = line_of[p];
+                    // Collect-then-sort window: anchored at the end of
+                    // the statement (chains may span several lines), a
+                    // `.sort` within two lines after it cancels D001.
+                    let stmt_end = line_of[(end + tail.len()).min(line_of.len() - 1)];
+                    let sorted_later = code[l..(stmt_end + 3).min(code.len())]
+                        .iter()
+                        .any(|ln| ln.contains(".sort"));
+                    match classify_tail(&tail, sorted_later) {
+                        Sink::Safe => {}
+                        Sink::FloatAccum => add(
+                            l,
+                            "D005",
+                            format!(
+                                "float accumulation over unordered `{name}` — \
+                                 order-dependent rounding"
+                            ),
+                        ),
+                        Sink::Ordered => add(
+                            l,
+                            "D001",
+                            format!(
+                                "unordered iteration over `{name}` feeds ordered state — \
+                                 sort or annotate"
+                            ),
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    // Assemble: suppression via allows, D000 for reason-less allows.
+    let mut report = FileReport {
+        file: relpath.to_string(),
+        ..FileReport::default()
+    };
+    for ((line, rule), msg) in hits {
+        let mut covered = false;
+        for a in allows.iter_mut() {
+            if a.target == line && a.rules.iter().any(|r| r == rule) {
+                a.used = true;
+                if a.has_reason {
+                    covered = true;
+                }
+            }
+        }
+        if covered {
+            report.suppressed += 1;
+        } else {
+            report.findings.push(Finding {
+                file: relpath.to_string(),
+                line: line + 1,
+                rule,
+                message: msg,
+            });
+        }
+    }
+    for a in &allows {
+        if !a.has_reason {
+            report.findings.push(Finding {
+                file: relpath.to_string(),
+                line: a.at + 1,
+                rule: "D000",
+                message: "simlint allow annotation without a reason — write \
+                          `// simlint: allow(D00X): why this is sound`"
+                    .into(),
+            });
+        } else if !a.used {
+            report
+                .unused_allows
+                .push((a.at + 1, a.rules.join(", ")));
+        }
+    }
+    report
+        .findings
+        .sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    report
+}
+
+// ---------------------------------------------------------------------
+// Directory driver.
+// ---------------------------------------------------------------------
+
+/// Recursively collect `.rs` files under `dir`, sorted by path so the
+/// report order is stable across platforms.
+pub fn rust_files(dir: &std::path::Path) -> std::io::Result<Vec<std::path::PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for entry in std::fs::read_dir(&d)? {
+            let p = entry?.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `src/**/*.rs` under `root` (the `rust/` crate dir).
+/// Returns `(reports, total unsuppressed findings)`.
+pub fn lint_tree(root: &std::path::Path) -> std::io::Result<(Vec<FileReport>, usize)> {
+    let src = root.join("src");
+    let mut reports = Vec::new();
+    let mut total = 0usize;
+    for path in rust_files(&src)? {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = std::fs::read_to_string(&path)?;
+        let rep = lint_source(&rel, &text);
+        total += rep.findings.len();
+        reports.push(rep);
+    }
+    Ok((reports, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(rep: &FileReport) -> Vec<&'static str> {
+        rep.findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn d002_flags_partial_cmp_but_not_definitions() {
+        let src = "fn cmp_things(a: f64, b: f64) {\n    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert_eq!(rules_of(&rep), vec!["D002"]);
+        assert_eq!(rep.findings[0].line, 2);
+
+        let def = "impl PartialOrd for X {\n    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n        Some(self.cmp(other))\n    }\n}\n";
+        let rep = lint_source("src/x.rs", def);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn d003_flags_ambient_time_and_hashers() {
+        for snippet in [
+            "let t = std::time::Instant::now();",
+            "let t = SystemTime::now();",
+            "let h = RandomState::new();",
+            "let h = DefaultHasher::new();",
+        ] {
+            let rep = lint_source("src/x.rs", snippet);
+            assert_eq!(rules_of(&rep), vec!["D003"], "{snippet}");
+        }
+        // BuildHasherDefault<SeqHasher> is the deterministic replacement.
+        let rep = lint_source(
+            "src/x.rs",
+            "type M = HashMap<usize, u32, BuildHasherDefault<SeqHasher>>;",
+        );
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn d004_flags_spawn_outside_pool() {
+        let src = "let h = std::thread::spawn(|| 1);";
+        assert_eq!(rules_of(&lint_source("src/x.rs", src)), vec!["D004"]);
+        assert!(lint_source("src/util/pool.rs", src).findings.is_empty());
+        // Scoped spawns inside the pool's scope are a different token.
+        let scoped = "std::thread::scope(|scope| { scope.spawn(|| 1); });";
+        assert!(lint_source("src/x.rs", scoped).findings.is_empty());
+    }
+
+    #[test]
+    fn d006_flags_adhoc_rng_outside_rng_module() {
+        let src = "let mut rng = Rng::new(42);";
+        assert_eq!(rules_of(&lint_source("src/x.rs", src)), vec!["D006"]);
+        assert!(lint_source("src/util/rng.rs", src).findings.is_empty());
+        let forked = "let mut sub = rng.fork(7);";
+        assert!(lint_source("src/x.rs", forked).findings.is_empty());
+    }
+
+    #[test]
+    fn d001_flags_unordered_iteration_feeding_ordered_state() {
+        let src = "struct S { m: HashMap<u32, f64> }\nfn f(s: &S) -> Vec<u32> {\n    s.m.keys().copied().collect()\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert_eq!(rules_of(&rep), vec!["D001"]);
+        assert_eq!(rep.findings[0].line, 3);
+    }
+
+    #[test]
+    fn d001_for_loop_over_map() {
+        let src = "fn f(m: &HashMap<u32, u32>, out: &mut Vec<u32>) {\n    for (k, _) in m {\n        out.push(*k);\n    }\n}\n";
+        assert_eq!(rules_of(&lint_source("src/x.rs", src)), vec!["D001"]);
+        let meth = "fn f(m: &HashMap<u32, u32>, out: &mut Vec<u32>) {\n    for k in m.keys() {\n        out.push(*k);\n    }\n}\n";
+        assert_eq!(rules_of(&lint_source("src/x.rs", meth)), vec!["D001"]);
+    }
+
+    #[test]
+    fn d001_safe_sinks_do_not_fire() {
+        for sink in [
+            "m.values().count()",
+            "m.keys().any(|k| *k == 0)",
+            "m.values().map(|v| v.len()).sum::<usize>()",
+            "m.iter().all(|(_, v)| *v > 0)",
+        ] {
+            let src = format!("fn f(m: &HashMap<u32, Vec<u8>>) -> bool {{\n    let _x = {sink};\n    true\n}}\n");
+            let rep = lint_source("src/x.rs", &src);
+            assert!(rep.findings.is_empty(), "{sink}: {:?}", rep.findings);
+        }
+    }
+
+    #[test]
+    fn d001_collect_then_sort_is_safe() {
+        let src = "fn f(m: &HashMap<u32, u32>) -> Vec<u32> {\n    let mut v: Vec<u32> = m.keys().copied().collect();\n    v.sort_unstable();\n    v\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+        // Collecting into a BTreeMap re-sorts by key.
+        let bt = "fn f(m: &HashMap<u32, u32>) -> BTreeMap<u32, u32> {\n    m.iter().map(|(k, v)| (*k, *v)).collect::<BTreeMap<u32, u32>>()\n}\n";
+        assert!(lint_source("src/x.rs", bt).findings.is_empty());
+    }
+
+    #[test]
+    fn d005_flags_float_accumulation() {
+        let src = "fn f(m: &HashMap<u32, f64>) -> f64 {\n    m.values().sum()\n}\n";
+        assert_eq!(rules_of(&lint_source("src/x.rs", src)), vec!["D005"]);
+        let fold = "fn f(m: &HashMap<u32, f64>) -> f64 {\n    m.values().fold(0.0, |a, b| a + b)\n}\n";
+        assert_eq!(rules_of(&lint_source("src/x.rs", fold)), vec!["D005"]);
+        let turbo = "fn f(m: &HashMap<u32, f64>) -> f64 {\n    m.values().copied().sum::<f64>()\n}\n";
+        assert_eq!(rules_of(&lint_source("src/x.rs", turbo)), vec!["D005"]);
+    }
+
+    #[test]
+    fn multi_line_collect_then_sort_is_safe() {
+        // The fpgrowth shape: rustfmt-split chain, retain between the
+        // collect and the sort — the window anchors at statement end.
+        let src = "fn f(h: &HashMap<u32, u32>) -> Vec<(u32, u32)> {\n    let mut items: Vec<(u32, u32)> = h\n        .iter()\n        .map(|(&k, &v)| (k, v))\n        .collect();\n    items.retain(|(_, v)| *v > 0);\n    items.sort_unstable();\n    items\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn safe_token_inside_closure_is_not_a_terminal() {
+        // `.len()` belongs to the closure, not the chain: the collect
+        // is still an ordered sink.
+        let src = "fn f(m: &HashMap<u32, Vec<u8>>) -> Vec<usize> {\n    m.values().map(|v| v.len()).collect()\n}\n";
+        assert_eq!(rules_of(&lint_source("src/x.rs", src)), vec!["D001"]);
+    }
+
+    #[test]
+    fn integer_product_is_safe() {
+        let src = "fn f(m: &HashMap<u32, u64>) -> u64 {\n    m.values().product::<u64>()\n}\n";
+        assert!(lint_source("src/x.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn annotation_skips_attribute_lines() {
+        let src = "fn f() {\n    // simlint: allow(D003): timing for logs only\n    #[allow(clippy::disallowed_methods)]\n    let t0 = std::time::Instant::now();\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+        assert_eq!(rep.suppressed, 1);
+    }
+
+    #[test]
+    fn alias_types_track_like_base_types() {
+        let src = "type Reqs = HashMap<usize, u32>;\nstruct S { live: Reqs }\nfn f(s: &S) -> Vec<usize> {\n    s.live.keys().copied().collect()\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert_eq!(rules_of(&rep), vec!["D001"]);
+    }
+
+    #[test]
+    fn cross_line_chains_match() {
+        let src = "struct S { subs: HashMap<u32, u32> }\nfn f(s: &S) -> Vec<u32> {\n    s.subs\n        .values()\n        .copied()\n        .collect()\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert_eq!(rules_of(&rep), vec!["D001"]);
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_skipped() {
+        let src = "struct S { m: HashMap<u32, u32> }\n#[cfg(test)]\nmod tests {\n    fn f(m: &HashMap<u32, u32>) -> Vec<u32> {\n        let t = std::time::Instant::now();\n        m.keys().copied().collect()\n    }\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn annotation_with_reason_suppresses() {
+        let src = "fn f(m: &HashMap<u32, u32>) -> Vec<u32> {\n    // simlint: allow(D001): assertion-only, order-independent\n    m.keys().copied().collect()\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+        assert_eq!(rep.suppressed, 1);
+    }
+
+    #[test]
+    fn trailing_annotation_suppresses_same_line() {
+        let src = "fn f(m: &HashMap<u32, u32>) -> usize {\n    let v: Vec<u32> = m.keys().copied().collect(); // simlint: allow(D001): diagnostic path\n    v.len()\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+        assert_eq!(rep.suppressed, 1);
+    }
+
+    #[test]
+    fn annotation_without_reason_is_d000() {
+        let src = "fn f(m: &HashMap<u32, u32>) -> Vec<u32> {\n    // simlint: allow(D001)\n    m.keys().copied().collect()\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        let rules = rules_of(&rep);
+        assert!(rules.contains(&"D000"), "{rules:?}");
+        assert!(rules.contains(&"D001"), "reason-less allow must not suppress: {rules:?}");
+    }
+
+    #[test]
+    fn unused_annotation_is_reported() {
+        let src = "// simlint: allow(D003): stale\nfn f() -> u32 {\n    1\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert!(rep.findings.is_empty());
+        assert_eq!(rep.unused_allows.len(), 1);
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_fire() {
+        let src = "fn f() -> &'static str {\n    // Instant::now() would be flagged as code\n    \"partial_cmp Instant::now thread::spawn\"\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn strip_source_keeps_line_numbers() {
+        let src = "a\n/* multi\nline */ b\n\"str\nacross\" c\n";
+        let lines = strip_source(src);
+        assert_eq!(lines.len(), src.split('\n').count());
+        assert_eq!(lines[2].trim(), "b");
+        assert_eq!(lines[4].trim_start().trim_end(), "\" c");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'t>(x: &'t HashMap<u32, u32>) -> usize {\n    x.len()\n}\n";
+        let rep = lint_source("src/x.rs", src);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    }
+}

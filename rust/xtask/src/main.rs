@@ -1,0 +1,87 @@
+//! Repo automation tasks. Currently one: `lint` — the simlint
+//! determinism pass (see `lint.rs` and DESIGN.md §10).
+//!
+//! ```text
+//! cargo run -p xtask -- lint [--root <rust-crate-dir>]
+//! ```
+//!
+//! Exits non-zero when any unsuppressed finding remains, so CI can
+//! gate on it directly.
+
+mod lint;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo run -p xtask -- lint [--root <rust-crate-dir>]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        return usage();
+    };
+    if cmd != "lint" {
+        return usage();
+    }
+
+    // Default root: the crate directory that owns `src/` — xtask lives
+    // at `rust/xtask`, so the sibling parent is `rust/`.
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask has a parent dir")
+        .to_path_buf();
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                let Some(v) = args.get(i + 1) else {
+                    return usage();
+                };
+                root = PathBuf::from(v);
+                i += 2;
+            }
+            _ => return usage(),
+        }
+    }
+
+    let (reports, total) = match lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("simlint: cannot scan {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let mut suppressed = 0usize;
+    let mut files = 0usize;
+    for rep in &reports {
+        suppressed += rep.suppressed;
+        files += 1;
+        for f in &rep.findings {
+            println!("{}:{}: {} {}", f.file, f.line, f.rule, f.message);
+        }
+        for (line, rules) in &rep.unused_allows {
+            // Warning only: stale allows rot loudly but don't gate.
+            eprintln!(
+                "simlint: warning: unused allow({rules}) at {}:{line}",
+                rep.file
+            );
+        }
+    }
+
+    if total == 0 {
+        println!(
+            "simlint: OK — {files} files clean, {suppressed} finding(s) suppressed by reasoned allows"
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "simlint: {total} unsuppressed finding(s) across {files} files ({suppressed} suppressed)"
+        );
+        eprintln!("simlint: fix the hazard or annotate: // simlint: allow(D00X): <reason>");
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Collate `cargo bench` results into a machine-readable perf snapshot.
+
+Every bench target already dumps its measurements as JSON under
+`rust/results/bench_*.json` (see `rust/src/util/bench.rs` and
+`rust/benches/sweep_bench.rs`).  This script runs the benches and folds
+those files into a single `BENCH_<label>.json` at the repo root — the
+per-PR perf trajectory that EXPERIMENTS.md §Perf narrates in prose.
+
+Usage:
+    python3 scripts/bench_snapshot.py [--label pr6] [--quick] [--no-run]
+
+`--no-run` skips `cargo bench` and collates whatever result files are
+already on disk.  When no cargo toolchain is available and no results
+exist, the script writes a snapshot with `"status": "pending"` and
+exits 0 — CI (which always has a toolchain) replaces it with real
+numbers, and the schema stays stable either way.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUST = os.path.join(REPO, "rust")
+RESULTS = os.path.join(RUST, "results")
+
+
+def run_benches(quick: bool) -> bool:
+    """Run `cargo bench`; returns False when no toolchain is available."""
+    if shutil.which("cargo") is None:
+        print("bench_snapshot: cargo not found; collating existing results only")
+        return False
+    cmd = ["cargo", "bench"]
+    if quick:
+        cmd += ["--", "--quick"]
+    print("bench_snapshot: $", " ".join(cmd))
+    proc = subprocess.run(cmd, cwd=RUST)
+    if proc.returncode != 0:
+        sys.exit(f"bench_snapshot: cargo bench failed ({proc.returncode})")
+    return True
+
+
+def collate() -> dict:
+    """Fold rust/results/bench_*.json into {suite: payload}."""
+    suites = {}
+    if not os.path.isdir(RESULTS):
+        return suites
+    for fn in sorted(os.listdir(RESULTS)):
+        if not (fn.startswith("bench_") and fn.endswith(".json")):
+            continue
+        suite = fn[len("bench_") : -len(".json")]
+        path = os.path.join(RESULTS, fn)
+        try:
+            with open(path) as f:
+                suites[suite] = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"bench_snapshot: skipping unreadable {path}: {e}")
+    return suites
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--label", default="pr6", help="snapshot label (BENCH_<label>.json)")
+    ap.add_argument("--quick", action="store_true", help="pass --quick to the benches")
+    ap.add_argument("--no-run", action="store_true", help="collate existing results only")
+    args = ap.parse_args()
+
+    ran = False if args.no_run else run_benches(args.quick)
+    suites = collate()
+
+    snapshot = {
+        "label": args.label,
+        "status": "measured" if suites else "pending",
+        "quick": bool(args.quick and ran),
+        # Suite name -> the bench target's own JSON dump: a list of
+        # {name, mean_ns, p50_ns, p95_ns, iters} for Bencher targets,
+        # or {cells, jobs, serial_ms, parallel_ms, speedup, ...} for
+        # the sweep parity bench.
+        "suites": suites,
+    }
+    out = os.path.join(REPO, f"BENCH_{args.label}.json")
+    with open(out, "w") as f:
+        json.dump(snapshot, f, indent=2, sort_keys=True)
+        f.write("\n")
+    n = len(suites)
+    print(f"bench_snapshot: wrote {out} ({n} suite(s), status={snapshot['status']})")
+
+
+if __name__ == "__main__":
+    main()

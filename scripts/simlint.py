@@ -1,0 +1,554 @@
+#!/usr/bin/env python3
+"""Mirror of the `simlint` determinism pass (rust/xtask/src/lint.rs).
+
+The Rust implementation is authoritative — it is what CI runs
+(`cargo run -p xtask -- lint`).  This mirror exists so the pass can be
+run in environments without a Rust toolchain (triage, pre-commit hooks
+on minimal containers).  It transliterates the same algorithm
+token-for-token; if the two ever disagree on this tree, that is a bug
+in the mirror.
+
+Usage:  python3 scripts/simlint.py [--root rust]
+Exit:   0 clean, 1 findings, 2 usage.
+"""
+
+import os
+import sys
+
+ITER_METHODS = {
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+}
+
+FLOAT_ACCUM = [".sum::<f64>", ".sum()", ".product()", ".product::<f64>", ".fold("]
+SAFE = [
+    ".count()",
+    ".len()",
+    ".any(",
+    ".all(",
+    ".contains(",
+    ".is_empty()",
+    ".min()",
+    ".max()",
+    ".sum::<",
+    ".product::<",
+    ".collect::<HashMap",
+    ".collect::<HashSet",
+    ".collect::<BTree",
+]
+
+
+def is_ident(c):
+    return c.isalnum() and c.isascii() or c == "_"
+
+
+def strip_source(src):
+    """Blank comments and literal contents, preserving line structure."""
+    chars = src
+    out, cur = [], []
+    st = "code"
+    raw_hashes = 0
+    block_depth = 0
+    i, n = 0, len(chars)
+    while i < n:
+        c = chars[i]
+        if c == "\n":
+            out.append("".join(cur))
+            cur = []
+            i += 1
+            continue
+        if st == "code":
+            if c == "/" and i + 1 < n and chars[i + 1] == "/":
+                while i < n and chars[i] != "\n":
+                    i += 1
+            elif c == "/" and i + 1 < n and chars[i + 1] == "*":
+                st, block_depth = "block", 1
+                i += 2
+            elif c == '"':
+                st = "str"
+                cur.append('"')
+                i += 1
+            elif (
+                c == "r"
+                and not (cur and is_ident(cur[-1]))
+                and i + 1 < n
+                and chars[i + 1] in '"#'
+            ):
+                hashes, j = 0, i + 1
+                while j < n and chars[j] == "#":
+                    hashes += 1
+                    j += 1
+                if j < n and chars[j] == '"':
+                    st, raw_hashes = "rawstr", hashes
+                    cur.append('"')
+                    i = j + 1
+                else:
+                    cur.append(c)
+                    i += 1
+            elif c == "'":
+                if i + 1 < n and chars[i + 1] == "\\":
+                    j = i + 2
+                    while j < n and chars[j] != "'":
+                        j += 1
+                    cur.append("''")
+                    i = j + 1
+                elif i + 2 < n and chars[i + 2] == "'":
+                    cur.append("''")
+                    i += 3
+                else:
+                    cur.append(c)
+                    i += 1
+            else:
+                cur.append(c)
+                i += 1
+        elif st == "str":
+            if c == "\\":
+                i += 1 if (i + 1 < n and chars[i + 1] == "\n") else 2
+            elif c == '"':
+                cur.append('"')
+                st = "code"
+                i += 1
+            else:
+                i += 1
+        elif st == "rawstr":
+            if c == '"' and chars[i + 1 : i + 1 + raw_hashes] == "#" * raw_hashes:
+                cur.append('"')
+                st = "code"
+                i += 1 + raw_hashes
+            else:
+                i += 1
+        else:  # block
+            if c == "*" and i + 1 < n and chars[i + 1] == "/":
+                block_depth -= 1
+                if block_depth == 0:
+                    st = "code"
+                i += 2
+            elif c == "/" and i + 1 < n and chars[i + 1] == "*":
+                block_depth += 1
+                i += 2
+            else:
+                i += 1
+    out.append("".join(cur))
+    return out
+
+
+def test_mask(code):
+    n = len(code)
+    mask = [False] * n
+    i = 0
+    while i < n:
+        attr = code[i].find("#[cfg(test)]")
+        if attr < 0:
+            i += 1
+            continue
+        depth, started, done = 0, False, False
+        j = i
+        while j < n and not done:
+            start_col = attr + len("#[cfg(test)]") if j == i else 0
+            for c in code[j][start_col:]:
+                if c == "{":
+                    depth += 1
+                    started = True
+                elif c == "}":
+                    depth -= 1
+                    if started and depth == 0:
+                        done = True
+                        break
+            mask[j] = True
+            j += 1
+        i = max(j, i + 1)
+    return mask
+
+
+def parse_allows(raw, code):
+    allows = []
+    for i, line in enumerate(raw):
+        c0 = line.find("//")
+        if c0 < 0:
+            continue
+        rel = line[c0:].find("simlint: allow(")
+        if rel < 0:
+            continue
+        open_ = c0 + rel + len("simlint: allow(")
+        close_rel = line[open_:].find(")")
+        if close_rel < 0:
+            continue
+        rules = [s.strip() for s in line[open_ : open_ + close_rel].split(",")]
+        rules = [r for r in rules if r]
+        after = line[open_ + close_rel + 1 :]
+        has_reason = after.startswith(":") and len(after[1:].strip()) >= 3
+        def skippable(s):
+            t = s.strip()
+            return t == "" or (t.startswith("#[") and t.endswith("]"))
+
+        own_line = code[i].strip() == ""
+        if own_line:
+            t = i + 1
+            while t < len(code) and skippable(code[t]):
+                t += 1
+            target = t
+        else:
+            target = i
+        allows.append(
+            {"at": i, "target": target, "rules": rules, "reason": has_reason, "used": False}
+        )
+    return allows
+
+
+def find_token(hay, tok, from_):
+    start = from_
+    while start + len(tok) <= len(hay):
+        p = hay.find(tok, start)
+        if p < 0:
+            return -1
+        before_ok = p == 0 or not is_ident(hay[p - 1])
+        end = p + len(tok)
+        after_ok = end >= len(hay) or not is_ident(hay[end])
+        if before_ok and after_ok:
+            return p
+        start = p + 1
+    return -1
+
+
+def ident_before(hay, end):
+    s = end
+    while s > 0 and is_ident(hay[s - 1]):
+        s -= 1
+    return hay[s:end]
+
+
+def unordered_names(code, mask):
+    types = ["HashMap", "HashSet"]
+    for i, line in enumerate(code):
+        if mask[i]:
+            continue
+        t = line.lstrip()
+        if not t.startswith("type "):
+            continue
+        rest = t[len("type ") :]
+        eq = rest.find("=")
+        if eq < 0:
+            continue
+        rhs = rest[eq + 1 :]
+        if find_token(rhs, "HashMap", 0) >= 0 or find_token(rhs, "HashSet", 0) >= 0:
+            name = ""
+            for c in rest[:eq].strip():
+                if is_ident(c):
+                    name += c
+                else:
+                    break
+            if name:
+                types.append(name)
+
+    names = []
+    for i, line in enumerate(code):
+        if mask[i]:
+            continue
+        for tok in types:
+            from_ = 0
+            while True:
+                p = find_token(line, tok, from_)
+                if p < 0:
+                    break
+                from_ = p + len(tok)
+                is_alias = tok not in ("HashMap", "HashSet")
+                if line[p + len(tok) : p + len(tok) + 1] == "<" or is_alias:
+                    q = p
+                    while q >= 2 and line[q - 2 : q] == "::":
+                        q -= 2
+                        while q > 0 and is_ident(line[q - 1]):
+                            q -= 1
+                    q2 = q
+                    while True:
+                        prev = line[q2 - 1] if q2 > 0 else "\0"
+                        if prev in " &'":
+                            q2 -= 1
+                            continue
+                        if q2 >= 3 and line[q2 - 3 : q2] in ("mut", "dyn"):
+                            q2 -= 3
+                            continue
+                        break
+                    if (
+                        q2 > 0
+                        and line[q2 - 1] == ":"
+                        and (q2 < 2 or line[q2 - 2] != ":")
+                    ):
+                        name = ident_before(line, q2 - 1)
+                        if name and name not in names:
+                            names.append(name)
+                for ctor in ("::new(", "::default()", "::with_capacity(", "::from("):
+                    if line[p + len(tok) :].startswith(ctor):
+                        q = p
+                        while q > 0 and line[q - 1] == " ":
+                            q -= 1
+                        if q > 0 and line[q - 1] == "=" and (q < 2 or line[q - 2] != "="):
+                            r = q - 1
+                            while r > 0 and line[r - 1] == " ":
+                                r -= 1
+                            name = ident_before(line, r)
+                            if name and name not in names:
+                                names.append(name)
+    return names
+
+
+def chain_tail(buf, start):
+    depth = 0
+    out = []
+    for c in buf[start : start + 1500]:
+        if c in "([":
+            depth += 1
+        elif c in ")]":
+            if depth == 0:
+                break
+            depth -= 1
+        elif c == "{":
+            if depth == 0:
+                break
+            depth += 1
+        elif c == "}":
+            if depth == 0:
+                break
+            depth -= 1
+        elif c == ";":
+            if depth == 0:
+                break
+        out.append(c)
+    return "".join(out)
+
+
+def classify_tail(tail, sorted_later):
+    depth_at = []
+    d = 0
+    for c in tail:
+        if c in "([{":
+            depth_at.append(d)
+            d += 1
+        elif c in ")]}":
+            d -= 1
+            depth_at.append(d)
+        else:
+            depth_at.append(d)
+
+    def top_find(pat):
+        from_ = 0
+        while from_ + len(pat) <= len(tail):
+            p = tail.find(pat, from_)
+            if p < 0:
+                return -1
+            if depth_at[p] == 0:
+                return p
+            from_ = p + 1
+        return -1
+
+    best = None  # (pos, sink)
+    def consider(pos, sink):
+        nonlocal best
+        if pos >= 0 and (best is None or pos < best[0]):
+            best = (pos, sink)
+
+    for t in FLOAT_ACCUM:
+        consider(top_find(t), "float")
+    for t in SAFE:
+        consider(top_find(t), "safe")
+    if sorted_later:
+        consider(top_find(".collect"), "safe")
+    return best[1] if best else "ordered"
+
+
+def lint_source(relpath, src):
+    raw = src.split("\n")
+    code = strip_source(src)
+    assert len(raw) == len(code), relpath
+    mask = test_mask(code)
+    allows = parse_allows(raw, code)
+    names = unordered_names(code, mask)
+
+    buf_parts = []
+    line_of = []
+    for i, line in enumerate(code):
+        text = "" if mask[i] else line
+        line_of.extend([i] * (len(text) + 1))
+        buf_parts.append(text)
+    buf = "\n".join(buf_parts) + "\n"
+    line_of.append(len(code) - 1)
+
+    hits = {}
+
+    def add(line, rule, msg):
+        hits.setdefault((line, rule), msg)
+
+    # D002
+    from_ = 0
+    while True:
+        p = find_token(buf, "partial_cmp", from_)
+        if p < 0:
+            break
+        from_ = p + 1
+        if not (p >= 3 and buf[p - 3 : p] == "fn "):
+            add(line_of[p], "D002", "float ordering via `partial_cmp` — use `f64::total_cmp`")
+
+    # D003
+    for tok in ("Instant::now", "SystemTime", "RandomState", "DefaultHasher"):
+        from_ = 0
+        while True:
+            p = find_token(buf, tok, from_)
+            if p < 0:
+                break
+            from_ = p + 1
+            add(line_of[p], "D003", f"ambient nondeterminism: `{tok}` in simulation code")
+
+    # D004
+    if not relpath.endswith("util/pool.rs"):
+        from_ = 0
+        while True:
+            p = find_token(buf, "thread::spawn", from_)
+            if p < 0:
+                break
+            from_ = p + 1
+            add(line_of[p], "D004", "`thread::spawn` outside `util/pool.rs`")
+
+    # D006
+    if not relpath.endswith("util/rng.rs"):
+        from_ = 0
+        while True:
+            p = find_token(buf, "Rng::new", from_)
+            if p < 0:
+                break
+            from_ = p + 1
+            add(line_of[p], "D006", "`Rng::new` outside `util/rng.rs` — fork a substream instead")
+
+    # D001 / D005
+    for name in names:
+        from_ = 0
+        while True:
+            p = find_token(buf, name, from_)
+            if p < 0:
+                break
+            from_ = p + len(name)
+            before = buf[:p]
+            trimmed = before
+            while trimmed and (is_ident(trimmed[-1]) or trimmed[-1] == "."):
+                trimmed = trimmed[:-1]
+            trimmed = trimmed.rstrip("& ")
+            if trimmed.endswith("mut"):
+                trimmed = trimmed[:-3].rstrip("& ")
+            for_ctx = trimmed.endswith(" in") or trimmed.endswith("\tin")
+            q = p + len(name)
+            skipped = 0
+            while q + skipped < len(buf) and buf[q + skipped] in " \n":
+                skipped += 1
+            q += skipped
+            nxt = buf[q] if q < len(buf) else "\0"
+            if for_ctx and nxt == "{":
+                add(line_of[p], "D001", f"iteration over unordered `{name}` in a `for` loop")
+                continue
+            if nxt != ".":
+                continue
+            meth = ""
+            for c in buf[q + 1 :]:
+                if is_ident(c):
+                    meth += c
+                else:
+                    break
+            call = q + 1 + len(meth)
+            if meth not in ITER_METHODS or not buf[call : call + 1] == "(":
+                continue
+            depth = 0
+            end = call
+            for k in range(call, len(buf)):
+                if buf[k] == "(":
+                    depth += 1
+                elif buf[k] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = k + 1
+                        break
+            if for_ctx:
+                add(line_of[p], "D001", f"iteration over unordered `{name}` in a `for` loop")
+                continue
+            tail = chain_tail(buf, end)
+            l = line_of[p]
+            stmt_end = line_of[min(end + len(tail), len(line_of) - 1)]
+            sorted_later = any(
+                ".sort" in ln for ln in code[l : min(stmt_end + 3, len(code))]
+            )
+            sink = classify_tail(tail, sorted_later)
+            if sink == "float":
+                add(l, "D005", f"float accumulation over unordered `{name}`")
+            elif sink == "ordered":
+                add(l, "D001", f"unordered iteration over `{name}` feeds ordered state")
+
+    findings = []
+    suppressed = 0
+    for (line, rule) in sorted(hits):
+        covered = False
+        for a in allows:
+            if a["target"] == line and rule in a["rules"]:
+                a["used"] = True
+                if a["reason"]:
+                    covered = True
+        if covered:
+            suppressed += 1
+        else:
+            findings.append((relpath, line + 1, rule, hits[(line, rule)]))
+    unused = []
+    for a in allows:
+        if not a["reason"]:
+            findings.append(
+                (relpath, a["at"] + 1, "D000", "allow annotation without a reason")
+            )
+        elif not a["used"]:
+            unused.append((a["at"] + 1, ", ".join(a["rules"])))
+    findings.sort(key=lambda f: (f[1], f[2]))
+    return findings, suppressed, unused
+
+
+def main(argv):
+    root = "rust"
+    args = argv[1:]
+    i = 0
+    while i < len(args):
+        if args[i] == "--root" and i + 1 < len(args):
+            root = args[i + 1]
+            i += 2
+        else:
+            print(__doc__, file=sys.stderr)
+            return 2
+    src_dir = os.path.join(root, "src")
+    files = []
+    for dirpath, _dirnames, filenames in os.walk(src_dir):
+        for fn in filenames:
+            if fn.endswith(".rs"):
+                files.append(os.path.join(dirpath, fn))
+    files.sort()
+    total, suppressed_total = 0, 0
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        findings, suppressed, unused = lint_source(rel, src)
+        suppressed_total += suppressed
+        for f in findings:
+            print(f"{f[0]}:{f[1]}: {f[2]} {f[3]}")
+            total += 1
+        for (line, rules) in unused:
+            print(f"simlint: warning: unused allow({rules}) at {rel}:{line}", file=sys.stderr)
+    if total == 0:
+        print(
+            f"simlint: OK — {len(files)} files clean, "
+            f"{suppressed_total} finding(s) suppressed by reasoned allows"
+        )
+        return 0
+    print(f"simlint: {total} unsuppressed finding(s) ({suppressed_total} suppressed)", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
