@@ -56,7 +56,7 @@ miri:
 # Machine-readable perf trajectory: run the benches and fold their
 # rust/results/bench_*.json dumps into BENCH_<label>.json at the root.
 bench-snapshot:
-	python3 scripts/bench_snapshot.py --label pr6
+	python3 scripts/bench_snapshot.py --label pr7
 
 # Regenerate the golden-report fixtures (tests/fixtures/*.report.json)
 # after an intentional behavior change, then verify once against the

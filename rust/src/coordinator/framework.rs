@@ -17,11 +17,11 @@
 //! replicates hot chunks to local data hubs.
 
 use std::collections::{HashMap, HashSet};
-use std::hash::{BuildHasherDefault, Hasher};
 
 use crate::cache::network::CacheNetwork;
 use crate::cache::policy::PolicyKind;
 use crate::cache::{chunk_bytes, chunks_for, ChunkKey, Origin};
+use crate::coordinator::slab::{ReqId, ReqSlab};
 use crate::metrics::{RunMetrics, ServedBy};
 use crate::placement::kmeans::{ClusterBackend, RustKmeans};
 use crate::placement::Placement;
@@ -164,7 +164,7 @@ enum Event {
 enum Step {
     Completion(FlowId),
     Queued(Event),
-    Arrival(usize, Request),
+    Arrival(Request),
 }
 
 /// The arrival leg of the event spine: where demand requests come from.
@@ -224,9 +224,9 @@ impl ArrivalLeg<'_> {
 enum FlowCtx {
     /// Observatory → user's DTN (framework) or user WAN (NoCache),
     /// serving part of demand request `req`.
-    Serve { req: usize, dest: usize, chunks: Vec<ChunkKey> },
+    Serve { req: ReqId, dest: usize, chunks: Vec<ChunkKey> },
     /// Peer DTN → user's DTN, serving part of demand request `req`.
-    Peer { req: usize, dest: usize, chunks: Vec<ChunkKey> },
+    Peer { req: ReqId, dest: usize, chunks: Vec<ChunkKey> },
     /// Observatory → DTN, model-predicted pre-fetch.
     Prefetch { dest: usize, chunks: Vec<ChunkKey> },
     /// Observatory → DTN, streaming push.
@@ -235,49 +235,9 @@ enum FlowCtx {
     Replicate { dest: usize, chunks: Vec<ChunkKey> },
 }
 
-/// Multiplicative hasher for the dense sequential arrival indices
-/// keying `req_states` — that map is consulted several times per chunk
-/// on the simulator's hottest path, where SipHash would be pure
-/// overhead.  Deterministic by construction (no per-process seeding).
-#[derive(Default)]
-struct SeqHasher(u64);
-
-impl Hasher for SeqHasher {
-    fn finish(&self) -> u64 {
-        self.0
-    }
-
-    fn write(&mut self, bytes: &[u8]) {
-        // FNV-1a fallback for non-integer keys (unused in practice).
-        for &b in bytes {
-            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01B3);
-        }
-    }
-
-    fn write_usize(&mut self, i: usize) {
-        // Fibonacci multiplicative spread of sequential indices.
-        self.0 = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-    }
-}
-
-type ReqStateMap = HashMap<usize, ReqState, BuildHasherDefault<SeqHasher>>;
-
-/// Per-demand-request progress.  States are created on arrival and
-/// dropped on finalize, so the resident set tracks requests *in
-/// flight*, not the whole trace (`RunMetrics::peak_req_states`).
-struct ReqState {
-    submitted: f64,
-    bytes: f64,
-    pending_parts: usize,
-    any_origin: bool,
-    any_peer: bool,
-    local_cache_bytes: f64,
-    local_prefetch_bytes: f64,
-}
-
 /// Observatory task payload: which request part to ship where.
 struct ObsTask {
-    req: usize,
+    req: ReqId,
     dest: usize,
     chunks: Vec<ChunkKey>,
     bytes: f64,
@@ -307,8 +267,11 @@ pub struct Framework<'t> {
     /// source) — arrivals merge into the loop directly instead of
     /// heaping ~10^6 entries.
     arrivals: ArrivalLeg<'t>,
-    /// Live per-request progress, keyed by arrival index.
-    req_states: ReqStateMap,
+    /// Live per-request progress: a generational struct-of-arrays slab
+    /// whose slots recycle on finalize, so residency tracks requests
+    /// *in flight* (`RunMetrics::peak_req_states`) and the steady-state
+    /// loop allocates nothing (see [`crate::coordinator::slab`]).
+    req_slab: ReqSlab,
     /// Chunks with an in-flight transfer toward a DTN (dedup).
     inflight: HashSet<(usize, ChunkKey)>,
     pub metrics: RunMetrics,
@@ -460,7 +423,7 @@ fn run_inner<'t>(
         flow_ctx: HashMap::new(),
         events: EventQueue::new(),
         arrivals,
-        req_states: ReqStateMap::default(),
+        req_slab: ReqSlab::new(),
         inflight: HashSet::new(),
         metrics: RunMetrics::new(),
         now: 0.0,
@@ -470,6 +433,9 @@ fn run_inner<'t>(
     fw.run_loop();
     let mut metrics = fw.metrics;
     metrics.recall = fw.caches.total_recall();
+    // Slab memory high-water: slots only grow, so the final count is
+    // the peak (live-request peak is tracked separately per arrival).
+    metrics.peak_slab_slots = fw.req_slab.slots() as u64;
     // Interior-link accounting (tiered topologies): bytes carried per
     // labeled link over the simulated window.
     let window = fw.now.max(trace.duration);
@@ -530,8 +496,8 @@ impl<'t> Framework<'t> {
             match step {
                 Step::Completion(fid) => self.on_flow_complete(fid),
                 Step::Queued(ev) => self.on_event(ev),
-                Step::Arrival(i, req) => {
-                    self.on_arrival(i, req);
+                Step::Arrival(req) => {
+                    self.on_arrival(req);
                     self.drain_arrival_burst(t);
                 }
             }
@@ -563,8 +529,8 @@ impl<'t> Framework<'t> {
             let (t, ev) = self.events.pop().unwrap();
             Some((t, Step::Queued(ev)))
         } else {
-            let (i, req) = self.arrivals.pop().expect("peeked arrival");
-            Some((t_arr, Step::Arrival(i, req)))
+            let (_i, req) = self.arrivals.pop().expect("peeked arrival");
+            Some((t_arr, Step::Arrival(req)))
         }
     }
 
@@ -585,8 +551,8 @@ impl<'t> Framework<'t> {
                     break;
                 }
             }
-            let (i, req) = self.arrivals.pop().expect("peeked arrival");
-            self.on_arrival(i, req);
+            let (_i, req) = self.arrivals.pop().expect("peeked arrival");
+            self.on_arrival(req);
         }
     }
 
@@ -608,21 +574,10 @@ impl<'t> Framework<'t> {
         }
     }
 
-    fn on_arrival(&mut self, i: usize, req: Request) {
+    fn on_arrival(&mut self, req: Request) {
         let user_dtn = self.trace.user(req.user).dtn();
-        self.req_states.insert(
-            i,
-            ReqState {
-                submitted: req.ts,
-                bytes: 0.0,
-                pending_parts: 0,
-                any_origin: false,
-                any_peer: false,
-                local_cache_bytes: 0.0,
-                local_prefetch_bytes: 0.0,
-            },
-        );
-        let live = self.req_states.len() as u64;
+        let rid = self.req_slab.alloc(req.ts);
+        let live = self.req_slab.live() as u64;
         self.metrics.peak_req_states = self.metrics.peak_req_states.max(live);
 
         // Feed the engines (every prefetching scenario).
@@ -642,11 +597,10 @@ impl<'t> Framework<'t> {
             // data ships over the user's commodity WAN — today's
             // delivery practice, no publication awareness at the edge.
             let bytes = req.bytes(&self.trace.streams);
-            self.rstate(i).bytes = bytes;
-            self.submit_obs_task(i, user_dtn, Vec::new(), bytes, Some(user_dtn));
-            let st = self.rstate(i);
-            st.pending_parts = 1;
-            st.any_origin = true;
+            self.req_slab.set_bytes(rid, bytes);
+            self.submit_obs_task(rid, user_dtn, Vec::new(), bytes, Some(user_dtn));
+            self.req_slab.set_pending_parts(rid, 1);
+            self.req_slab.set_any_origin(rid);
             return;
         }
 
@@ -692,14 +646,14 @@ impl<'t> Framework<'t> {
             0.0
         };
         bytes += tail_bytes;
-        self.rstate(i).bytes = bytes;
+        self.req_slab.set_bytes(rid, bytes);
         if chunks.is_empty() && tail_bytes == 0.0 {
             // Nothing published in range and no tail: catalog answers
             // locally ("no new data yet").
-            self.finalize_request(i);
+            self.finalize_request(rid);
             return;
         }
-        let mut parts = 0;
+        let mut parts: u32 = 0;
 
         // Framework path: resolve chunks local → peer → observatory.
         let mut missing: Vec<ChunkKey> = Vec::new();
@@ -710,9 +664,9 @@ impl<'t> Framework<'t> {
             if let Some(origin) = self.caches.access(user_dtn, &key) {
                 match origin {
                     Origin::Prefetch | Origin::Stream => {
-                        self.rstate(i).local_prefetch_bytes += per_chunk
+                        self.req_slab.add_local_prefetch(rid, per_chunk)
                     }
-                    _ => self.rstate(i).local_cache_bytes += per_chunk,
+                    _ => self.req_slab.add_local_cache(rid, per_chunk),
                 }
                 self.metrics.cache_bytes += per_chunk;
                 continue;
@@ -746,14 +700,14 @@ impl<'t> Framework<'t> {
 
         for (peer, keys) in peer_parts {
             let part_bytes = per_chunk * keys.len() as f64;
-            self.rstate(i).any_peer = true;
+            self.req_slab.set_any_peer(rid);
             self.metrics.cache_bytes += part_bytes;
             let pipe = self.dmz_pipe(peer, user_dtn);
             let fid = self.flows.start(self.now, part_bytes, pipe);
             self.flow_ctx.insert(
                 fid,
                 FlowCtx::Peer {
-                    req: i,
+                    req: rid,
                     dest: user_dtn,
                     chunks: keys,
                 },
@@ -762,14 +716,14 @@ impl<'t> Framework<'t> {
         }
         if !missing.is_empty() || tail_bytes > 0.0 {
             let part_bytes = per_chunk * missing.len() as f64 + tail_bytes;
-            self.rstate(i).any_origin = true;
-            self.submit_obs_task(i, user_dtn, missing, part_bytes, None);
+            self.req_slab.set_any_origin(rid);
+            self.submit_obs_task(rid, user_dtn, missing, part_bytes, None);
             parts += 1;
         }
-        self.rstate(i).pending_parts = parts;
+        self.req_slab.set_pending_parts(rid, parts);
         if parts == 0 {
             // Fully local: served at the user edge.
-            self.finalize_request(i);
+            self.finalize_request(rid);
         }
     }
 
@@ -803,14 +757,9 @@ impl<'t> Framework<'t> {
         t_peer < t_obs
     }
 
-    /// Live request state for arrival `i` (must not be finalized yet).
-    fn rstate(&mut self, i: usize) -> &mut ReqState {
-        self.req_states.get_mut(&i).expect("live request state")
-    }
-
     fn submit_obs_task(
         &mut self,
-        req: usize,
+        req: ReqId,
         dest: usize,
         chunks: Vec<ChunkKey>,
         bytes: f64,
@@ -1080,20 +1029,20 @@ impl<'t> Framework<'t> {
         }
     }
 
-    fn part_done(&mut self, req: usize) {
-        let Some(st) = self.req_states.get_mut(&req) else {
+    fn part_done(&mut self, req: ReqId) {
+        let Some(remaining) = self.req_slab.dec_pending(req) else {
             return; // already finalized
         };
-        st.pending_parts = st.pending_parts.saturating_sub(1);
-        if st.pending_parts == 0 {
+        if remaining == 0 {
             self.finalize_request(req);
         }
     }
 
-    fn finalize_request(&mut self, req: usize) {
-        // Removing the state marks the request done and releases its
-        // residency (the peak is what the scale sweep reports).
-        let Some(st) = self.req_states.remove(&req) else {
+    fn finalize_request(&mut self, req: ReqId) {
+        // Freeing the slot marks the request done and releases its
+        // residency (the peak is what the scale sweep reports); the
+        // slot itself is recycled by a later arrival.
+        let Some(st) = self.req_slab.free(req) else {
             return; // already finalized
         };
         let user_edge = self.topology.user_edge();

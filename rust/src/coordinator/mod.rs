@@ -15,6 +15,7 @@
 
 pub mod framework;
 pub mod server;
+pub mod slab;
 
 pub use framework::{
     run, run_core, run_streaming, run_streaming_core, Framework, RunParams, SimConfig,

@@ -1,0 +1,270 @@
+//! Generational struct-of-arrays slab for live per-request state.
+//!
+//! The coordinator consults per-request progress several times per
+//! chunk on the simulator's hottest path.  The pre-PR 7 representation
+//! — a `HashMap<usize, ReqState>` keyed by arrival index — paid a hash
+//! probe plus a heap allocation per request; at 10M users that is
+//! millions of allocator round-trips in the steady state.  [`ReqSlab`]
+//! replaces it with parallel field vectors (struct-of-arrays, so the
+//! per-chunk byte counters share cache lines) indexed by a recycled
+//! slot, so the steady-state loop allocates nothing once the slab has
+//! grown to the peak in-flight population.
+//!
+//! # Generational handles
+//!
+//! Slots are recycled on finalize, so a bare index could silently read
+//! a *different* request's state through a stale handle (e.g. a flow
+//! completing after its request finalized).  [`ReqId`] therefore
+//! carries the slot's *generation*: allocation bumps the slot
+//! generation to odd, free bumps it to even, and every access checks
+//! that the handle's generation still matches.  A stale handle can
+//! never alias a live one — the slot must be re-allocated to become
+//! live again, which bumps it past the stale generation.
+//!
+//! Determinism: slot assignment is LIFO over the free list, which is
+//! fed exclusively by the (deterministic) finalize order, so the whole
+//! structure is reproducible run-to-run — and the live count equals
+//! the old map's `len()`, keeping `RunMetrics::peak_req_states`
+//! bit-identical.
+
+/// Handle to one live request's slab slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ReqId {
+    slot: u32,
+    generation: u32,
+}
+
+/// Final field values of a freed request, for metrics recording.
+#[derive(Debug, Clone, Copy)]
+pub struct ReqFinal {
+    pub submitted: f64,
+    pub bytes: f64,
+    pub any_origin: bool,
+    pub any_peer: bool,
+    pub local_cache_bytes: f64,
+    pub local_prefetch_bytes: f64,
+}
+
+const ANY_ORIGIN: u8 = 1;
+const ANY_PEER: u8 = 2;
+
+/// Struct-of-arrays request-state slab with generation-checked slots.
+#[derive(Debug, Default)]
+pub struct ReqSlab {
+    /// Per-slot generation: odd = live, even = free.
+    generations: Vec<u32>,
+    submitted: Vec<f64>,
+    bytes: Vec<f64>,
+    pending_parts: Vec<u32>,
+    flags: Vec<u8>,
+    local_cache_bytes: Vec<f64>,
+    local_prefetch_bytes: Vec<f64>,
+    /// Recycled slots, LIFO.
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl ReqSlab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Requests currently in flight (what `peak_req_states` tracks).
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Slots ever allocated — the slab's memory high-water mark
+    /// (`RunMetrics::peak_slab_slots`).
+    pub fn slots(&self) -> usize {
+        self.generations.len()
+    }
+
+    /// Allocate a slot for a request submitted at `submitted`, all
+    /// other fields zeroed.  Recycles a freed slot when one exists.
+    pub fn alloc(&mut self, submitted: f64) -> ReqId {
+        self.live += 1;
+        if let Some(slot) = self.free.pop() {
+            let s = slot as usize;
+            self.generations[s] += 1; // even -> odd: live again
+            self.submitted[s] = submitted;
+            self.bytes[s] = 0.0;
+            self.pending_parts[s] = 0;
+            self.flags[s] = 0;
+            self.local_cache_bytes[s] = 0.0;
+            self.local_prefetch_bytes[s] = 0.0;
+            ReqId {
+                slot,
+                generation: self.generations[s],
+            }
+        } else {
+            let slot = u32::try_from(self.generations.len()).expect("slab slot overflow");
+            self.generations.push(1);
+            self.submitted.push(submitted);
+            self.bytes.push(0.0);
+            self.pending_parts.push(0);
+            self.flags.push(0);
+            self.local_cache_bytes.push(0.0);
+            self.local_prefetch_bytes.push(0.0);
+            ReqId {
+                slot,
+                generation: 1,
+            }
+        }
+    }
+
+    /// Slot index when `id` is still live, `None` when it is stale
+    /// (freed, or freed-and-recycled under a newer generation).
+    fn live_idx(&self, id: ReqId) -> Option<usize> {
+        let s = id.slot as usize;
+        (self.generations.get(s).copied() == Some(id.generation)).then_some(s)
+    }
+
+    /// Panicking accessor for the mutators below: the coordinator only
+    /// mutates requests it knows to be in flight, so a stale handle
+    /// here is a logic bug, not a tolerated race.
+    fn idx(&self, id: ReqId) -> usize {
+        self.live_idx(id).expect("live request state")
+    }
+
+    pub fn set_bytes(&mut self, id: ReqId, v: f64) {
+        let s = self.idx(id);
+        self.bytes[s] = v;
+    }
+
+    pub fn add_local_cache(&mut self, id: ReqId, v: f64) {
+        let s = self.idx(id);
+        self.local_cache_bytes[s] += v;
+    }
+
+    pub fn add_local_prefetch(&mut self, id: ReqId, v: f64) {
+        let s = self.idx(id);
+        self.local_prefetch_bytes[s] += v;
+    }
+
+    pub fn set_any_origin(&mut self, id: ReqId) {
+        let s = self.idx(id);
+        self.flags[s] |= ANY_ORIGIN;
+    }
+
+    pub fn set_any_peer(&mut self, id: ReqId) {
+        let s = self.idx(id);
+        self.flags[s] |= ANY_PEER;
+    }
+
+    pub fn set_pending_parts(&mut self, id: ReqId, n: u32) {
+        let s = self.idx(id);
+        self.pending_parts[s] = n;
+    }
+
+    /// Decrement the pending-part counter (saturating) and return the
+    /// remaining count, or `None` when the request already finalized —
+    /// a completion may race its own request's finalize, which the old
+    /// map tolerated via `get_mut` returning `None`.
+    pub fn dec_pending(&mut self, id: ReqId) -> Option<u32> {
+        let s = self.live_idx(id)?;
+        self.pending_parts[s] = self.pending_parts[s].saturating_sub(1);
+        Some(self.pending_parts[s])
+    }
+
+    /// Free a request's slot, returning its final field values, or
+    /// `None` when the handle is stale (already finalized).  The slot
+    /// is recycled by a later [`ReqSlab::alloc`].
+    pub fn free(&mut self, id: ReqId) -> Option<ReqFinal> {
+        let s = self.live_idx(id)?;
+        self.generations[s] += 1; // odd -> even: stale from here on
+        self.free.push(id.slot);
+        self.live -= 1;
+        Some(ReqFinal {
+            submitted: self.submitted[s],
+            bytes: self.bytes[s],
+            any_origin: self.flags[s] & ANY_ORIGIN != 0,
+            any_peer: self.flags[s] & ANY_PEER != 0,
+            local_cache_bytes: self.local_cache_bytes[s],
+            local_prefetch_bytes: self.local_prefetch_bytes[s],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut slab = ReqSlab::new();
+        let a = slab.alloc(1.5);
+        slab.set_bytes(a, 100.0);
+        slab.add_local_cache(a, 40.0);
+        slab.add_local_prefetch(a, 60.0);
+        slab.set_any_peer(a);
+        slab.set_pending_parts(a, 2);
+        assert_eq!(slab.live(), 1);
+        assert_eq!(slab.dec_pending(a), Some(1));
+        assert_eq!(slab.dec_pending(a), Some(0));
+        let fin = slab.free(a).expect("live");
+        assert_eq!(fin.submitted, 1.5);
+        assert_eq!(fin.bytes, 100.0);
+        assert!(fin.any_peer && !fin.any_origin);
+        assert_eq!(fin.local_cache_bytes, 40.0);
+        assert_eq!(fin.local_prefetch_bytes, 60.0);
+        assert_eq!(slab.live(), 0);
+    }
+
+    #[test]
+    fn slots_recycle_and_track_high_water() {
+        let mut slab = ReqSlab::new();
+        let ids: Vec<ReqId> = (0..8).map(|i| slab.alloc(i as f64)).collect();
+        assert_eq!(slab.slots(), 8);
+        for id in ids {
+            slab.free(id).unwrap();
+        }
+        // Steady-state churn reuses the 8 slots: no growth.
+        for round in 0..10 {
+            let id = slab.alloc(round as f64);
+            assert!(id.slot < 8, "allocated fresh slot {}", id.slot);
+            slab.free(id).unwrap();
+        }
+        assert_eq!(slab.slots(), 8);
+        assert_eq!(slab.live(), 0);
+    }
+
+    #[test]
+    fn generation_check_catches_stale_handle() {
+        // The satellite test: a stale ReqId (freed, slot since
+        // recycled) must not alias the new occupant.
+        let mut slab = ReqSlab::new();
+        let old = slab.alloc(1.0);
+        slab.free(old).unwrap();
+        let new = slab.alloc(2.0);
+        assert_eq!(old.slot, new.slot, "LIFO recycling reuses the slot");
+        assert_ne!(old.generation, new.generation);
+        // Tolerant paths report stale instead of touching the slot.
+        assert!(slab.free(old).is_none(), "double free must miss");
+        assert!(slab.dec_pending(old).is_none());
+        // The new occupant is untouched and still live.
+        let fin = slab.free(new).expect("new handle live");
+        assert_eq!(fin.submitted, 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "live request state")]
+    fn mutating_through_stale_handle_panics() {
+        let mut slab = ReqSlab::new();
+        let id = slab.alloc(0.0);
+        slab.free(id).unwrap();
+        slab.set_bytes(id, 1.0);
+    }
+
+    #[test]
+    fn double_free_never_corrupts_live_count() {
+        let mut slab = ReqSlab::new();
+        let a = slab.alloc(0.0);
+        let b = slab.alloc(0.0);
+        slab.free(a).unwrap();
+        assert!(slab.free(a).is_none());
+        assert_eq!(slab.live(), 1);
+        slab.free(b).unwrap();
+        assert_eq!(slab.live(), 0);
+    }
+}

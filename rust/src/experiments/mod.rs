@@ -722,28 +722,32 @@ fn traffic_sweep(opts: &ExpOptions) -> Result<String> {
 }
 
 /// Extension: user-population scale sweep over the **streaming**
-/// arrival source (ISSUE 3).  `n_users` sweeps 1 k → 1 M on the VDC
-/// star and the OSDF-style federation; demand is never materialized,
-/// so the row to watch is *peak resident request state* against the
-/// total request count — the footprint stays at the in-flight
-/// population while requests grow by orders of magnitude.  The paper's
-/// ten 4-second service processes saturate at 2.5 req/s, which would
-/// turn the sweep into a queueing study of the origin; the scale axis
-/// probes the delivery fabric instead, so the origin service is
-/// provisioned out of the way (20 ms overhead, 1 GB/s reads).
-/// `ExpOptions::scale` multiplies the user grid (CI runs it at a tiny
-/// fraction); the full 1 M row is minutes of wall-clock.
+/// arrival source (ISSUE 3, extended to 10 M in ISSUE 7).  `n_users`
+/// sweeps 1 k → 10 M on the VDC star and the OSDF-style federation;
+/// demand is never materialized, so the rows to watch are *peak
+/// resident request state* against the total request count and *peak
+/// slab slots* (the request-memory high-water) — the footprint stays
+/// at the in-flight population while requests grow by orders of
+/// magnitude.  The paper's ten 4-second service processes saturate at
+/// 2.5 req/s, which would turn the sweep into a queueing study of the
+/// origin; the scale axis probes the delivery fabric instead, so the
+/// origin service is provisioned out of the way (20 ms overhead,
+/// 1 GB/s reads).  `ExpOptions::scale` multiplies the user grid (CI
+/// runs it at a tiny fraction); the full 10 M row is feasible because
+/// the coordinator's hot loop is allocation-free over the calendar
+/// event queue and request slab (DESIGN.md §11).
 fn scale_sweep(opts: &ExpOptions) -> Result<String> {
     let runner = Runner::new();
-    let user_grid: [usize; 4] = [1_000, 10_000, 100_000, 1_000_000];
+    let user_grid: [usize; 5] = [1_000, 10_000, 100_000, 1_000_000, 10_000_000];
     let mut t = Table::new(
-        "Scale sweep — streaming arrivals, 1k → 1M users (CacheOnly, LRU, provisioned origin)",
+        "Scale sweep — streaming arrivals, 1k → 10M users (CacheOnly, LRU, provisioned origin)",
     )
     .header(&[
         "Topology",
         "Users",
         "Requests",
         "Peak req-state",
+        "Peak slab",
         "Peak flows",
         "Origin frac",
         "Thrpt (Mbps)",
@@ -751,7 +755,7 @@ fn scale_sweep(opts: &ExpOptions) -> Result<String> {
         "Wall (s)",
     ]);
     let mut csv = String::from(
-        "topology,users,requests,peak_req_states,peak_flows,origin_frac,thrpt_mbps,core_util,wall_secs\n",
+        "topology,users,requests,peak_req_states,peak_slab_slots,peak_flows,origin_frac,thrpt_mbps,core_util,wall_secs\n",
     );
     // Expand every (topology, population) sweep point first, then run
     // the whole batch over the pool — the 1 M-user rows dominate
@@ -798,6 +802,7 @@ fn scale_sweep(opts: &ExpOptions) -> Result<String> {
             format!("{n_eff}"),
             format!("{}", m.requests_total),
             format!("{}", m.peak_req_states),
+            format!("{}", m.peak_slab_slots),
             format!("{}", m.peak_flows),
             format!("{:.4}", m.origin_fraction()),
             format!("{:.2}", m.throughput_mbps()),
@@ -806,9 +811,10 @@ fn scale_sweep(opts: &ExpOptions) -> Result<String> {
         ]);
         let _ = writeln!(
             csv,
-            "{tname},{n_eff},{},{},{},{:.4},{:.3},{:.5},{:.3}",
+            "{tname},{n_eff},{},{},{},{},{:.4},{:.3},{:.5},{:.3}",
             m.requests_total,
             m.peak_req_states,
+            m.peak_slab_slots,
             m.peak_flows,
             m.origin_fraction(),
             m.throughput_mbps(),
@@ -1037,11 +1043,11 @@ mod tests {
 
     #[test]
     fn scale_sweep_runs_small() {
-        // Shrink the 1k→1M grid to 2→2000 users: exercises the
+        // Shrink the 1k→10M grid to 8→2000 users: exercises the
         // streaming coordinator path on both topologies without the
         // full sweep's wall-clock.
         let opts = ExpOptions {
-            scale: 0.002,
+            scale: 0.0002,
             days_factor: 1.0,
             out_dir: None,
             seed: None,

@@ -81,6 +81,11 @@ pub struct RunMetrics {
     /// source this is the resident demand footprint of a run (the
     /// scale sweep reports it against the total request count).
     pub peak_req_states: u64,
+    /// Slab slots ever allocated for request state — the coordinator's
+    /// request-memory high-water mark.  Slots recycle on finalize, so
+    /// this tracks peak concurrency, not request count; the scale sweep
+    /// reports it to show the 10M-user run's footprint stays bounded.
+    pub peak_slab_slots: u64,
     /// Interior-link utilization per labeled tier link (empty on the
     /// star; populated for hierarchical/federation topologies).
     pub interior_util: Vec<TierUtil>,
@@ -213,6 +218,10 @@ impl RunMetrics {
             "peak_req_states".to_string(),
             Json::Num(self.peak_req_states as f64),
         );
+        m.insert(
+            "peak_slab_slots".to_string(),
+            Json::Num(self.peak_slab_slots as f64),
+        );
         m.insert("wall_secs".to_string(), Json::Num(self.wall_secs));
         m.insert("throughput".to_string(), accum(&self.throughput));
         m.insert("latency".to_string(), accum(&self.latency));
@@ -299,6 +308,7 @@ impl RunMetrics {
             recall: num("recall")?,
             peak_flows: count("peak_flows")?,
             peak_req_states: count("peak_req_states")?,
+            peak_slab_slots: count("peak_slab_slots")?,
             interior_util,
             wall_secs: num("wall_secs")?,
         })
@@ -327,6 +337,7 @@ impl RunMetrics {
             ("served_peer", self.served_peer, other.served_peer),
             ("peak_flows", self.peak_flows, other.peak_flows),
             ("peak_req_states", self.peak_req_states, other.peak_req_states),
+            ("peak_slab_slots", self.peak_slab_slots, other.peak_slab_slots),
             ("throughput.count", self.throughput.count, other.throughput.count),
             ("latency.count", self.latency.count, other.latency.count),
             (
@@ -460,6 +471,7 @@ mod tests {
         m.recall = 0.1 + 0.2; // deliberately not exactly 0.3
         m.peak_flows = 42;
         m.peak_req_states = 7;
+        m.peak_slab_slots = 9;
         m.throughput.add(2.0e8);
         m.latency.add(0.125);
         m.peer_throughput.add(3.0e7);

@@ -1,8 +1,14 @@
 //! Discrete-event scheduling primitives.
 //!
 //! [`EventQueue`] is a time-ordered priority queue with FIFO tie-break
-//! (stable ordering makes simulations reproducible).  The coordinator's
-//! unified event spine merges this queue with the indexed
+//! (stable ordering makes simulations reproducible).  Since PR 7 it is
+//! backed by a [`CalendarQueue`] — a bucketed calendar structure that
+//! beats a binary heap on the dense same-epoch event storms the scale
+//! sweep produces (millions of arrivals landing in the same few
+//! simulated seconds) — with [`HeapEventQueue`], the original
+//! `BinaryHeap` implementation, kept as the bit-exactness oracle the
+//! property tests compare against.  The coordinator's unified event
+//! spine merges this queue with the indexed
 //! [`crate::simnet::FlowSim::next_completion`] under `f64::total_cmp` ordering
 //! (transfer completions are dynamic — fair-share rates change as flows
 //! churn — so they live in the flow simulator's own completion index,
@@ -11,49 +17,236 @@
 //! Event times must be finite: [`EventQueue::push`] rejects NaN and
 //! ±∞ in release builds too, because a single NaN key would silently
 //! corrupt heap ordering for every later event.
+//!
+//! # Calendar-queue design (DESIGN.md §11)
+//!
+//! Entries are keyed `(time, K)` where `K: Ord` breaks same-timestamp
+//! ties (`seq` FIFO counters here, `FlowId` in the flow simulator's
+//! completion index).  The queue directories entries by *group id*
+//! `⌊time / width⌋` — a monotone map, so equal times always share a
+//! group and entries in a lower group strictly precede every entry in
+//! a higher one.  Three stores:
+//!
+//! * `current` — the active (lowest) group, sorted descending by
+//!   `(time, K)` once on activation; pops come off the back in O(1).
+//! * `incoming` — a small binary min-heap catching pushes whose group
+//!   is ≤ the active group (events scheduled at or before the epoch
+//!   being drained — e.g. zero-delay reschedules).  In the worst case
+//!   (every push lands here) the structure degenerates to exactly a
+//!   binary heap, never worse.
+//! * `groups` — a `BTreeMap<u64, Vec<Entry>>` year directory of future
+//!   groups; pushes append unsorted in O(log #groups).
+//!
+//! The eager-activation invariant — whenever the queue is non-empty,
+//! `current ∪ incoming` contains the global minimum — holds because a
+//! new group is only activated (and sorted) when both drain empty, and
+//! every entry of a future group strictly exceeds every entry of the
+//! active group and of `incoming` (whose group ids are ≤ active).
+//! That keeps [`CalendarQueue::peek`] a pure `&self` read.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BinaryHeap};
 
-struct Item<T> {
+/// Bucket width (simulated seconds) for the coordinator event spine.
+/// A power of two so `time / width` is exact; the value only affects
+/// performance (group fan-out), never ordering.
+const EVENT_BUCKET_SECS: f64 = 64.0;
+
+#[derive(Debug)]
+struct Entry<K, V> {
     time: f64,
-    seq: u64,
-    payload: T,
+    key: K,
+    value: V,
 }
 
-impl<T> PartialEq for Item<T> {
+impl<K: Ord, V> Entry<K, V> {
+    /// Strict `(time, key)` precedence under `total_cmp`.
+    fn precedes(&self, other: &Self) -> bool {
+        self.time
+            .total_cmp(&other.time)
+            .then_with(|| self.key.cmp(&other.key))
+            == Ordering::Less
+    }
+}
+
+impl<K: Ord, V> PartialEq for Entry<K, V> {
     fn eq(&self, other: &Self) -> bool {
         self.cmp(other) == Ordering::Equal
     }
 }
 
-impl<T> Eq for Item<T> {}
+impl<K: Ord, V> Eq for Entry<K, V> {}
 
-impl<T> PartialOrd for Item<T> {
+impl<K: Ord, V> PartialOrd for Entry<K, V> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
-impl<T> Ord for Item<T> {
+impl<K: Ord, V> Ord for Entry<K, V> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for min-heap on (time, seq).  `total_cmp` is a total
-        // order over all f64 bit patterns — the old
-        // `partial_cmp(..).unwrap_or(Equal)` silently treated NaN as
-        // equal to everything, breaking heap invariants.
+        // Reverse for min-heap / descending-sort use on (time, key).
+        // `total_cmp` is a total order over all f64 bit patterns.
         other
             .time
             .total_cmp(&self.time)
-            .then(other.seq.cmp(&self.seq))
+            .then_with(|| other.key.cmp(&self.key))
     }
 }
 
-/// Min-heap event queue ordered by (time, insertion order).
+/// Calendar priority queue over `(time, key)` with deterministic
+/// total order (`f64::total_cmp`, then `K: Ord`).
+///
+/// Pop order is bit-identical to a global binary min-heap on the same
+/// keys — pinned by `prop_calendar_matches_heap_oracle` below and by
+/// the flow simulator's indexed-vs-linear parity tests.  Times may be
+/// `+∞` (open-ended completions park in the top group); NaN is the
+/// caller's bug (`debug_assert`ed — the saturating cast would misfile
+/// it into group 0).
+#[derive(Debug)]
+pub struct CalendarQueue<K, V> {
+    width: f64,
+    /// Future groups, keyed by group id; entries unsorted until
+    /// activation.
+    groups: BTreeMap<u64, Vec<Entry<K, V>>>,
+    /// Group id of `current`.
+    active_k: u64,
+    /// Active group, sorted descending by `(time, key)` — min at the
+    /// back.
+    current: Vec<Entry<K, V>>,
+    /// Min-heap fallback for pushes into group ≤ `active_k`.
+    incoming: BinaryHeap<Entry<K, V>>,
+    len: usize,
+}
+
+impl<K: Ord + Copy, V> Default for CalendarQueue<K, V> {
+    /// 64-second buckets — suits simulators whose event times are
+    /// seconds.  Width only affects performance, never pop order.
+    fn default() -> Self {
+        Self::new(EVENT_BUCKET_SECS)
+    }
+}
+
+impl<K: Ord + Copy, V> CalendarQueue<K, V> {
+    pub fn new(width: f64) -> Self {
+        assert!(
+            width.is_finite() && width > 0.0,
+            "calendar bucket width must be positive and finite: {width}"
+        );
+        Self {
+            width,
+            groups: BTreeMap::new(),
+            active_k: 0,
+            current: Vec::new(),
+            incoming: BinaryHeap::new(),
+            len: 0,
+        }
+    }
+
+    /// Group id `⌊time / width⌋`, clamped to `u64` by the saturating
+    /// float→int cast (`-x` → 0, `+∞` → `u64::MAX`): a monotone map,
+    /// so equal times share a group and cross-group order is strict.
+    fn group(&self, time: f64) -> u64 {
+        debug_assert!(!time.is_nan(), "NaN event time");
+        (time / self.width).floor() as u64
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn push(&mut self, time: f64, key: K, value: V) {
+        let k = self.group(time);
+        let entry = Entry { time, key, value };
+        if self.len == 0 {
+            // Everything is empty: re-anchor the calendar here.
+            self.active_k = k;
+            self.current.push(entry);
+        } else if k <= self.active_k {
+            self.incoming.push(entry);
+        } else {
+            self.groups.entry(k).or_default().push(entry);
+        }
+        self.len += 1;
+    }
+
+    /// The minimum entry as `(time, key, value)` without removing it.
+    pub fn peek(&self) -> Option<(f64, &K, &V)> {
+        let cur = self.current.last();
+        let inc = self.incoming.peek();
+        let min = match (cur, inc) {
+            (Some(c), Some(i)) => {
+                if i.precedes(c) {
+                    i
+                } else {
+                    c
+                }
+            }
+            (Some(c), None) => c,
+            (None, Some(i)) => i,
+            (None, None) => return None,
+        };
+        Some((min.time, &min.key, &min.value))
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, K, V)> {
+        let take_incoming = match (self.current.last(), self.incoming.peek()) {
+            (Some(c), Some(i)) => i.precedes(c),
+            (Some(_), None) => false,
+            (None, Some(_)) => true,
+            (None, None) => return None,
+        };
+        let entry = if take_incoming {
+            self.incoming.pop().expect("non-empty incoming")
+        } else {
+            self.current.pop().expect("non-empty current")
+        };
+        self.len -= 1;
+        if self.current.is_empty() && self.incoming.is_empty() {
+            self.activate_next_group();
+        }
+        Some((entry.time, entry.key, entry.value))
+    }
+
+    /// Promote the lowest future group into `current` (eager
+    /// activation: restores the peek invariant after a drain).
+    fn activate_next_group(&mut self) {
+        let Some(k) = self.groups.keys().next().copied() else {
+            return;
+        };
+        let mut v = self.groups.remove(&k).expect("group present");
+        // Descending (time, key): Entry's Ord is already reversed.
+        // Unstable sort is fine — it is deterministic for a given
+        // input sequence, and duplicate (time, key) pairs are only
+        // distinguishable through lazy-deletion version checks that
+        // are order-insensitive.
+        v.sort_unstable();
+        self.active_k = k;
+        self.current = v;
+    }
+
+    /// Iterate every queued entry (current, incoming, then future
+    /// groups) in an unspecified but deterministic order.  For
+    /// order-insensitive audits and compaction rebuilds.
+    pub fn iter(&self) -> impl Iterator<Item = (f64, &K, &V)> {
+        self.current
+            .iter()
+            .chain(self.incoming.iter())
+            .chain(self.groups.values().flatten())
+            .map(|e| (e.time, &e.key, &e.value))
+    }
+}
+
+/// Min event queue ordered by (time, insertion order), calendar-backed.
 pub struct EventQueue<T> {
-    heap: BinaryHeap<Item<T>>,
+    cal: CalendarQueue<u64, T>,
     seq: u64,
     /// Audit (feature `sim-audit`): time of the last popped event —
-    /// pops must be monotone or the heap ordering has been corrupted.
+    /// pops must be monotone or the queue ordering has been corrupted.
     #[cfg(feature = "sim-audit")]
     last_pop: f64,
 }
@@ -67,10 +260,78 @@ impl<T> Default for EventQueue<T> {
 impl<T> EventQueue<T> {
     pub fn new() -> Self {
         Self {
-            heap: BinaryHeap::new(),
+            cal: CalendarQueue::new(EVENT_BUCKET_SECS),
             seq: 0,
             #[cfg(feature = "sim-audit")]
             last_pop: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cal.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cal.is_empty()
+    }
+
+    /// Schedule `payload` at absolute time `time`.
+    ///
+    /// # Panics
+    /// Panics (in release builds too) when `time` is NaN or infinite:
+    /// a non-finite key would poison the ordering of every later event,
+    /// which is far harder to debug than an immediate failure.
+    pub fn push(&mut self, time: f64, payload: T) {
+        assert!(time.is_finite(), "non-finite event time: {time}");
+        self.cal.push(time, self.seq, payload);
+        self.seq += 1;
+    }
+
+    /// Time of the earliest event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.cal.peek().map(|(t, _, _)| t)
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let popped = self.cal.pop().map(|(t, _, payload)| (t, payload));
+        #[cfg(feature = "sim-audit")]
+        if let Some((t, _)) = &popped {
+            assert!(
+                *t >= self.last_pop,
+                "audit: event queue pop went backwards: {t} < {}",
+                self.last_pop
+            );
+            self.last_pop = *t;
+        }
+        popped
+    }
+}
+
+// ---------------------------------------------------------------------
+// Binary-heap oracle (the pre-PR 7 EventQueue implementation).
+// ---------------------------------------------------------------------
+
+/// The original `BinaryHeap`-backed event queue, kept verbatim as the
+/// bit-exactness oracle for [`EventQueue`]: same API, same
+/// `(time, seq)` FIFO order under `total_cmp`.  Property tests drive
+/// both with identical storms and assert identical pop sequences.
+pub struct HeapEventQueue<T> {
+    heap: BinaryHeap<Entry<u64, T>>,
+    seq: u64,
+}
+
+impl<T> Default for HeapEventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> HeapEventQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
         }
     }
 
@@ -82,40 +343,23 @@ impl<T> EventQueue<T> {
         self.heap.is_empty()
     }
 
-    /// Schedule `payload` at absolute time `time`.
-    ///
-    /// # Panics
-    /// Panics (in release builds too) when `time` is NaN or infinite:
-    /// a non-finite key would poison the ordering of every later event,
-    /// which is far harder to debug than an immediate failure.
+    /// See [`EventQueue::push`].
     pub fn push(&mut self, time: f64, payload: T) {
         assert!(time.is_finite(), "non-finite event time: {time}");
-        self.heap.push(Item {
+        self.heap.push(Entry {
             time,
-            seq: self.seq,
-            payload,
+            key: self.seq,
+            value: payload,
         });
         self.seq += 1;
     }
 
-    /// Time of the earliest event.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|i| i.time)
+        self.heap.peek().map(|e| e.time)
     }
 
-    /// Pop the earliest event.
     pub fn pop(&mut self) -> Option<(f64, T)> {
-        let popped = self.heap.pop().map(|i| (i.time, i.payload));
-        #[cfg(feature = "sim-audit")]
-        if let Some((t, _)) = &popped {
-            assert!(
-                *t >= self.last_pop,
-                "audit: event queue pop went backwards: {t} < {}",
-                self.last_pop
-            );
-            self.last_pop = *t;
-        }
-        popped
+        self.heap.pop().map(|e| (e.time, e.value))
     }
 }
 
@@ -171,6 +415,39 @@ mod tests {
     }
 
     #[test]
+    fn push_at_or_before_active_epoch_pops_first() {
+        // A zero-delay reschedule (push at exactly the time being
+        // drained) must pop before every later event even though the
+        // active group was already sorted — it lands in `incoming`.
+        // Uses the raw calendar: the EventQueue's sim-audit wrapper
+        // (rightly) forbids the backwards pop exercised at the end.
+        let mut q: CalendarQueue<u64, &str> = CalendarQueue::new(64.0);
+        q.push(10.0, 0, "later");
+        q.push(500.0, 1, "far");
+        assert_eq!(q.pop().unwrap(), (10.0, 0, "later"));
+        q.push(10.0, 2, "reschedule");
+        q.push(9.5, 3, "past");
+        assert_eq!(q.pop().unwrap(), (9.5, 3, "past"));
+        assert_eq!(q.pop().unwrap(), (10.0, 2, "reschedule"));
+        assert_eq!(q.pop().unwrap(), (500.0, 1, "far"));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn calendar_handles_infinite_times() {
+        // The raw calendar (flow completion index) parks +inf entries
+        // in the top group; they pop last and never wedge the queue.
+        let mut q: CalendarQueue<u64, &str> = CalendarQueue::new(64.0);
+        q.push(f64::INFINITY, 0, "never");
+        q.push(3.0, 1, "soon");
+        q.push(1e18, 2, "huge");
+        assert_eq!(q.pop().unwrap(), (3.0, 1, "soon"));
+        assert_eq!(q.pop().unwrap(), (1e18, 2, "huge"));
+        assert_eq!(q.pop().unwrap(), (f64::INFINITY, 0, "never"));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
     fn prop_monotone_pop_order() {
         crate::util::prop::check("eventqueue-monotone", |rng| {
             let mut q = EventQueue::new();
@@ -182,6 +459,61 @@ mod tests {
                 assert!(t >= last);
                 last = t;
             }
+        });
+    }
+
+    #[test]
+    fn prop_calendar_matches_heap_oracle() {
+        // Random event storms with dense same-epoch ties: interleaved
+        // pushes and pops through both implementations must yield
+        // bit-identical (time, payload) sequences.  Times are drawn
+        // from a small discrete grid so most events collide on both
+        // the timestamp and the calendar group.
+        crate::util::prop::check("calendar-vs-heap-oracle", |rng| {
+            let mut cal = EventQueue::new();
+            let mut heap = HeapEventQueue::new();
+            let mut frontier = 0.0f64;
+            for step in 0..400 {
+                if rng.below(3) == 0 {
+                    let got = cal.pop();
+                    let want = heap.pop();
+                    match (&got, &want) {
+                        (Some((tc, pc)), Some((th, ph))) => {
+                            assert_eq!(tc.to_bits(), th.to_bits(), "step {step}");
+                            assert_eq!(pc, ph, "step {step}");
+                            frontier = frontier.max(*tc);
+                        }
+                        (None, None) => {}
+                        _ => panic!("pop disagreement at step {step}: {got:?} vs {want:?}"),
+                    }
+                    assert_eq!(
+                        cal.peek_time().map(f64::to_bits),
+                        heap.peek_time().map(f64::to_bits)
+                    );
+                } else {
+                    // Mix: dense ties on a coarse grid at or after the
+                    // pop frontier (same group, same timestamp), plus
+                    // the occasional far-future outlier.  Never before
+                    // the frontier — the coordinator clamps schedules
+                    // to `now`, and sim-audit builds enforce monotone
+                    // pops.
+                    let t = match rng.below(4) {
+                        0 => frontier + rng.below(8) as f64 * 16.0,
+                        1 => frontier,
+                        _ => frontier + rng.below(64) as f64 * 0.25,
+                    };
+                    cal.push(t, step);
+                    heap.push(t, step);
+                }
+                assert_eq!(cal.len(), heap.len());
+            }
+            // Drain: full order must agree.
+            while let Some((tc, pc)) = cal.pop() {
+                let (th, ph) = heap.pop().expect("oracle non-empty");
+                assert_eq!(tc.to_bits(), th.to_bits());
+                assert_eq!(pc, ph);
+            }
+            assert!(heap.pop().is_none());
         });
     }
 }

@@ -26,19 +26,30 @@
 //! # Indexed completion scheduling
 //!
 //! Completion times are delivered through [`FlowSim::next_completion`],
-//! backed by a lazy-deletion binary heap keyed on
-//! `(completion_time, FlowId)` with a per-flow *version* counter: a
-//! component replan bumps the versions of that component's flows and
-//! pushes fresh heap entries, so stale entries are discarded on pop and
-//! a query is O(log n) amortized instead of a linear scan over every
-//! active flow.  [`FlowSim::next_completion_linear`] keeps the
-//! brute-force scan as a property-test oracle and benchmark baseline,
-//! and [`FlowSim::max_min_oracle`] recomputes every routed flow's rate
+//! backed by a lazy-deletion [`CalendarQueue`] (see
+//! [`crate::simnet::engine`]) keyed on `(completion_time, FlowId)` with
+//! a per-flow *version* counter: a component replan bumps the versions
+//! of that component's flows and pushes fresh index entries, so stale
+//! entries are discarded on pop and a query is O(1) amortized on the
+//! dense same-epoch storms the scale sweep produces (worst case the
+//! calendar degenerates to exactly the old binary heap).
+//! [`FlowSim::next_completion_linear`] keeps the brute-force scan as a
+//! property-test oracle and benchmark baseline, and
+//! [`FlowSim::max_min_oracle`] recomputes every routed flow's rate
 //! from scratch — the planning oracle the property tests hold the
 //! incremental planner to, bit-for-bit.
+//!
+//! # Allocation-free steady state (DESIGN.md §11)
+//!
+//! The replan path — component discovery, settle, water-filling —
+//! runs on persistent [`Scratch`] buffers owned by the simulator and
+//! cleared (not dropped) per flush, so the steady-state event loop
+//! performs no heap allocation once buffers have grown to the
+//! workload's component sizes.
 
+use crate::simnet::engine::CalendarQueue;
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::{HashMap, HashSet};
 
 /// Identifies one transfer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -127,39 +138,6 @@ fn completion_time(f: &Flow) -> f64 {
     }
 }
 
-/// Completion-index heap entry; min-ordered by `(time, id)`.
-#[derive(Debug)]
-struct Pending {
-    time: f64,
-    id: FlowId,
-    version: u64,
-}
-
-impl PartialEq for Pending {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
-    }
-}
-
-impl Eq for Pending {}
-
-impl PartialOrd for Pending {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Pending {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for a min-heap on (time, id); `total_cmp` keeps the
-        // order total even for non-finite completion times.
-        other
-            .time
-            .total_cmp(&self.time)
-            .then(other.id.cmp(&self.id))
-    }
-}
-
 /// Per-link bookkeeping: capacity plus resident flows.  The membership
 /// vector stays in ascending [`FlowId`] order (flows are appended with
 /// monotonically increasing ids and removal preserves order), which
@@ -171,6 +149,36 @@ struct LinkState {
     flows: Vec<FlowId>,
 }
 
+/// Reusable replan buffers (component discovery + water-filling), kept
+/// across flushes so the steady-state loop allocates nothing.  The
+/// water-filling's per-link member lists and per-flow route positions
+/// are flattened CSR-style (`*_data` indexed by `*_off` ranges) so the
+/// nested vectors of the original formulation never reallocate either.
+#[derive(Debug, Default)]
+struct Scratch {
+    /// Component link worklist (doubles as the planner's link set).
+    comp_links: Vec<LinkId>,
+    seen_links: HashSet<LinkId>,
+    comp_flows: Vec<FlowId>,
+    seen_flows: HashSet<FlowId>,
+    /// Water-filling output, in freeze order.
+    planned: Vec<(FlowId, f64)>,
+    residual: Vec<f64>,
+    flow_ids: Vec<FlowId>,
+    slot_of: HashMap<FlowId, usize>,
+    pos_of: HashMap<LinkId, usize>,
+    /// Per-link member flow slots: link `li`'s members are
+    /// `mem_data[mem_off[li]..mem_off[li + 1]]`.
+    mem_data: Vec<usize>,
+    mem_off: Vec<usize>,
+    /// Per-flow route link positions: flow slot `fi`'s links are
+    /// `route_data[route_off[fi]..route_off[fi + 1]]`.
+    route_data: Vec<usize>,
+    route_off: Vec<usize>,
+    active: Vec<usize>,
+    frozen: Vec<bool>,
+}
+
 /// Fluid-flow simulator state.
 #[derive(Debug, Default)]
 pub struct FlowSim {
@@ -178,8 +186,11 @@ pub struct FlowSim {
     flows: HashMap<FlowId, Flow>,
     /// link id → capacity and resident flows.
     links: HashMap<LinkId, LinkState>,
-    /// Lazy-deletion completion index.
-    completions: BinaryHeap<Pending>,
+    /// Lazy-deletion completion index keyed `(time, FlowId)`, valued
+    /// by the plan version the entry was pushed under.
+    completions: CalendarQueue<FlowId, u64>,
+    /// Persistent replan buffers (see [`Scratch`]).
+    scratch: Scratch,
     /// Links whose components need replanning (deferred to the next
     /// query or time advance), in deterministic mark order.
     dirty_links: Vec<LinkId>,
@@ -245,11 +256,7 @@ impl FlowSim {
                     started: now,
                     version: 0,
                 };
-                self.completions.push(Pending {
-                    time: completion_time(&flow),
-                    id,
-                    version: 0,
-                });
+                self.completions.push(completion_time(&flow), id, 0);
                 self.flows.insert(id, flow);
                 return id;
             }
@@ -295,13 +302,10 @@ impl FlowSim {
     /// any stale entries — O(log n) amortized over a run.
     pub fn next_completion(&mut self) -> Option<(f64, FlowId)> {
         self.flush();
-        while let Some(top) = self.completions.peek() {
-            let fresh = self
-                .flows
-                .get(&top.id)
-                .is_some_and(|f| f.version == top.version);
+        while let Some((time, &id, &version)) = self.completions.peek() {
+            let fresh = self.flows.get(&id).is_some_and(|f| f.version == version);
             if fresh {
-                return Some((top.time, top.id));
+                return Some((time, id));
             }
             self.completions.pop();
         }
@@ -391,31 +395,41 @@ impl FlowSim {
             return;
         }
         let now = self.dirty_at;
-        let seeds = std::mem::take(&mut self.dirty_links);
-        self.dirty_set.clear();
 
-        // Component discovery.
-        let mut comp_links: Vec<LinkId> = Vec::new();
-        let mut seen_links: HashSet<LinkId> = HashSet::new();
-        let mut comp_flows: Vec<FlowId> = Vec::new();
-        let mut seen_flows: HashSet<FlowId> = HashSet::new();
-        for l in seeds {
-            if seen_links.insert(l) {
-                comp_links.push(l);
+        // Component discovery, into the persistent scratch buffers
+        // (clear keeps capacity — the steady state allocates nothing).
+        {
+            let Self {
+                links,
+                flows,
+                dirty_links,
+                dirty_set,
+                scratch,
+                ..
+            } = self;
+            scratch.comp_links.clear();
+            scratch.seen_links.clear();
+            scratch.comp_flows.clear();
+            scratch.seen_flows.clear();
+            for l in dirty_links.drain(..) {
+                if scratch.seen_links.insert(l) {
+                    scratch.comp_links.push(l);
+                }
             }
-        }
-        let mut qi = 0;
-        while qi < comp_links.len() {
-            let l = comp_links[qi];
-            qi += 1;
-            let Some(st) = self.links.get(&l) else { continue };
-            // simlint: allow(D001): LinkState.flows is a Vec kept ascending by flow id, not the flow table
-            for &fid in &st.flows {
-                if seen_flows.insert(fid) {
-                    comp_flows.push(fid);
-                    for hop in &self.flows[&fid].route.hops {
-                        if seen_links.insert(hop.link) {
-                            comp_links.push(hop.link);
+            dirty_set.clear();
+            let mut qi = 0;
+            while qi < scratch.comp_links.len() {
+                let l = scratch.comp_links[qi];
+                qi += 1;
+                let Some(st) = links.get(&l) else { continue };
+                // simlint: allow(D001): LinkState.flows is a Vec kept ascending by flow id, not the flow table
+                for &fid in &st.flows {
+                    if scratch.seen_flows.insert(fid) {
+                        scratch.comp_flows.push(fid);
+                        for hop in &flows[&fid].route.hops {
+                            if scratch.seen_links.insert(hop.link) {
+                                scratch.comp_links.push(hop.link);
+                            }
                         }
                     }
                 }
@@ -425,11 +439,15 @@ impl FlowSim {
         // Settle every affected flow at its old rate up to the replan
         // instant, so the rate change never rewrites history.
         {
-            let flows = &mut self.flows;
-            let carried = &mut self.carried;
+            let Self {
+                flows,
+                carried,
+                scratch,
+                ..
+            } = self;
             #[cfg(feature = "sim-audit")]
             let mut hop_settled = 0.0;
-            for fid in &comp_flows {
+            for fid in &scratch.comp_flows {
                 if let Some(f) = flows.get_mut(fid) {
                     let _moved = settle_flow(f, now, carried);
                     #[cfg(feature = "sim-audit")]
@@ -445,16 +463,20 @@ impl FlowSim {
         }
 
         // Water-fill the component and index the new plans.
-        let planned = self.progressive_fill(comp_links);
-        for (fid, rate) in planned {
-            if let Some(f) = self.flows.get_mut(&fid) {
-                f.rate = rate;
-                f.version += 1;
-                self.completions.push(Pending {
-                    time: completion_time(f),
-                    id: fid,
-                    version: f.version,
-                });
+        self.progressive_fill_scratch();
+        {
+            let Self {
+                flows,
+                completions,
+                scratch,
+                ..
+            } = self;
+            for &(fid, rate) in &scratch.planned {
+                if let Some(f) = flows.get_mut(&fid) {
+                    f.rate = rate;
+                    f.version += 1;
+                    completions.push(completion_time(f), fid, f.version);
+                }
             }
         }
         self.maybe_compact();
@@ -539,17 +561,15 @@ impl FlowSim {
         // after a flush each active flow must be covered by a fresh
         // entry whose time is bit-identical to its projected completion.
         let mut fresh_ids: HashSet<FlowId> = HashSet::new();
-        for p in &self.completions {
-            if let Some(f) = self.flows.get(&p.id) {
-                if p.version == f.version {
+        for (time, &id, &version) in self.completions.iter() {
+            if let Some(f) = self.flows.get(&id) {
+                if version == f.version {
                     assert!(
-                        p.time.to_bits() == completion_time(f).to_bits(),
-                        "audit: fresh heap entry for {:?} has time {} != plan {}",
-                        p.id,
-                        p.time,
+                        time.to_bits() == completion_time(f).to_bits(),
+                        "audit: fresh index entry for {id:?} has time {time} != plan {}",
                         completion_time(f)
                     );
-                    fresh_ids.insert(p.id);
+                    fresh_ids.insert(id);
                 }
             }
         }
@@ -573,78 +593,111 @@ impl FlowSim {
         );
     }
 
-    /// Progressive-filling max-min over the given links and every flow
-    /// resident on them: repeatedly find the bottleneck link (smallest
-    /// `residual / active`, ties to the lowest link id), freeze its
-    /// unfrozen flows at that fill level, and subtract their share from
-    /// every link they cross.  Returns `(flow, rate)` in freeze order.
+    /// Progressive-filling max-min over the links in
+    /// `scratch.comp_links` and every flow resident on them: repeatedly
+    /// find the bottleneck link (smallest `residual / active`, ties to
+    /// the lowest link id), freeze its unfrozen flows at that fill
+    /// level, and subtract their share from every link they cross.
+    /// Leaves `(flow, rate)` in freeze order in `scratch.planned`.
     ///
     /// Determinism/bit-exactness contract (shared with
     /// [`FlowSim::max_min_oracle`]): links are scanned in ascending id
     /// order, flows freeze in ascending id order (the membership-vector
     /// invariant), and a length-1 component plans exactly
-    /// `capacity / n` — the pre-routing per-link fair share.
-    fn progressive_fill(&self, mut link_ids: Vec<LinkId>) -> Vec<(FlowId, f64)> {
-        link_ids.retain(|l| self.links.contains_key(l));
-        link_ids.sort_unstable();
-        link_ids.dedup();
+    /// `capacity / n` — the pre-routing per-link fair share.  The CSR
+    /// scratch layout changes where intermediates live, not any
+    /// iteration order or arithmetic, so plans stay bit-identical to
+    /// the original nested-vector formulation.
+    fn progressive_fill_scratch(&mut self) {
+        let Self {
+            links,
+            flows,
+            scratch,
+            ..
+        } = self;
+        let Scratch {
+            comp_links,
+            planned,
+            residual,
+            flow_ids,
+            slot_of,
+            pos_of,
+            mem_data,
+            mem_off,
+            route_data,
+            route_off,
+            active,
+            frozen,
+            ..
+        } = scratch;
+        planned.clear();
+        comp_links.retain(|l| links.contains_key(l));
+        comp_links.sort_unstable();
+        comp_links.dedup();
+        if comp_links.is_empty() {
+            return;
+        }
 
         // Fast path: a single-link component — the entire VDC star and
         // the dominant case elsewhere.  Identical arithmetic to one
         // round of the general loop below (level = capacity / n, every
         // resident frozen at it, membership order).
-        if link_ids.len() == 1 {
-            let st = &self.links[&link_ids[0]];
+        if comp_links.len() == 1 {
+            let st = &links[&comp_links[0]];
             let level = st.capacity / st.flows.len() as f64;
             // simlint: allow(D001): LinkState.flows is a Vec kept ascending by flow id (membership-vector invariant), not the flow table
-            return st.flows.iter().map(|&fid| (fid, level)).collect();
+            planned.extend(st.flows.iter().map(|&fid| (fid, level)));
+            return;
         }
 
-        // Index the component: links by position, flows by slot.
-        let members: Vec<&[FlowId]> = link_ids
-            .iter()
-            .map(|l| self.links[l].flows.as_slice())
-            .collect();
-        let mut residual: Vec<f64> = link_ids.iter().map(|l| self.links[l].capacity).collect();
-        let mut flow_ids: Vec<FlowId> = Vec::new();
-        let mut slot_of: HashMap<FlowId, usize> = HashMap::new();
-        for mem in &members {
-            for &fid in *mem {
-                if !slot_of.contains_key(&fid) {
-                    slot_of.insert(fid, flow_ids.len());
+        // Index the component: links by position, flows by slot
+        // (first-seen order — ascending link id, then ascending flow
+        // id within a link's membership vector).
+        residual.clear();
+        residual.extend(comp_links.iter().map(|l| links[l].capacity));
+        flow_ids.clear();
+        slot_of.clear();
+        mem_data.clear();
+        mem_off.clear();
+        mem_off.push(0);
+        for l in comp_links.iter() {
+            // LinkState.flows is a Vec kept ascending by flow id
+            // (membership-vector invariant), so first-seen slot order
+            // is deterministic.
+            for &fid in &links[l].flows {
+                let slot = *slot_of.entry(fid).or_insert_with(|| {
                     flow_ids.push(fid);
-                }
+                    flow_ids.len() - 1
+                });
+                mem_data.push(slot);
             }
+            mem_off.push(mem_data.len());
         }
-        let mem_slots: Vec<Vec<usize>> = members
-            .iter()
-            .map(|mem| mem.iter().map(|f| slot_of[f]).collect())
-            .collect();
-        let pos_of: HashMap<LinkId, usize> = link_ids
-            .iter()
-            .enumerate()
-            .map(|(i, &l)| (l, i))
-            .collect();
-        let route_pos: Vec<Vec<usize>> = flow_ids
-            .iter()
-            .map(|fid| {
-                self.flows[fid]
-                    .route
-                    .hops
-                    .iter()
-                    .map(|h| pos_of[&h.link])
-                    .collect()
-            })
-            .collect();
+        pos_of.clear();
+        for (i, &l) in comp_links.iter().enumerate() {
+            pos_of.insert(l, i);
+        }
+        route_data.clear();
+        route_off.clear();
+        route_off.push(0);
+        for fid in flow_ids.iter() {
+            for h in &flows[fid].route.hops {
+                route_data.push(pos_of[&h.link]);
+            }
+            route_off.push(route_data.len());
+        }
 
         // Water-filling.
-        let mut active: Vec<usize> = mem_slots.iter().map(|m| m.len()).collect();
-        let mut frozen = vec![false; flow_ids.len()];
-        let mut out: Vec<(FlowId, f64)> = Vec::with_capacity(flow_ids.len());
+        active.clear();
+        for li in 0..comp_links.len() {
+            active.push(mem_off[li + 1] - mem_off[li]);
+        }
+        frozen.clear();
+        frozen.resize(flow_ids.len(), false);
         loop {
             let mut level = f64::INFINITY;
             let mut bl = usize::MAX;
-            for li in 0..link_ids.len() {
+            for li in 0..comp_links.len() {
                 if active[li] == 0 {
                     continue;
                 }
@@ -662,19 +715,20 @@ impl FlowSim {
             // a negative (or NaN) rate from it.  Exact for every
             // regular level (positive stays bit-identical).
             let level = level.max(0.0);
-            for &fi in &mem_slots[bl] {
+            for mi in mem_off[bl]..mem_off[bl + 1] {
+                let fi = mem_data[mi];
                 if frozen[fi] {
                     continue;
                 }
                 frozen[fi] = true;
-                out.push((flow_ids[fi], level));
-                for &li in &route_pos[fi] {
+                planned.push((flow_ids[fi], level));
+                for ri in route_off[fi]..route_off[fi + 1] {
+                    let li = route_data[ri];
                     active[li] -= 1;
                     residual[li] -= level;
                 }
             }
         }
-        out
     }
 
     /// Brute-force max-min oracle: recompute the rate of **every**
@@ -685,25 +739,34 @@ impl FlowSim {
     /// deterministic freeze order.
     pub fn max_min_oracle(&mut self) -> Vec<(FlowId, f64)> {
         self.flush();
-        let all_links: Vec<LinkId> = self.links.keys().copied().collect();
-        let mut rates = self.progressive_fill(all_links);
+        let mut all_links: Vec<LinkId> = self.links.keys().copied().collect();
+        all_links.sort_unstable();
+        self.scratch.comp_links.clear();
+        self.scratch.comp_links.extend_from_slice(&all_links);
+        self.progressive_fill_scratch();
+        let mut rates = self.scratch.planned.clone();
         rates.sort_unstable_by_key(|(id, _)| *id);
         rates
     }
 
-    /// Rebuild the heap when stale entries dominate, keeping memory
-    /// proportional to the active-flow population.
+    /// Rebuild the completion index when stale entries dominate,
+    /// keeping memory proportional to the active-flow population.
     fn maybe_compact(&mut self) {
         if self.completions.len() <= 64 + 4 * self.flows.len() {
             return;
         }
         let flows = &self.flows;
-        let fresh: Vec<Pending> = self
+        let fresh: Vec<(f64, FlowId, u64)> = self
             .completions
-            .drain()
-            .filter(|p| flows.get(&p.id).is_some_and(|f| f.version == p.version))
+            .iter()
+            .filter(|(_, id, ver)| flows.get(*id).is_some_and(|f| f.version == **ver))
+            .map(|(t, id, ver)| (t, *id, *ver))
             .collect();
-        self.completions = fresh.into_iter().collect();
+        let mut rebuilt = CalendarQueue::default();
+        for (t, id, ver) in fresh {
+            rebuilt.push(t, id, ver);
+        }
+        self.completions = rebuilt;
     }
 
     /// Current instantaneous rate of a flow (bytes/s).

@@ -15,7 +15,7 @@ pub mod engine;
 pub mod flow;
 pub mod topology;
 
-pub use engine::EventQueue;
+pub use engine::{CalendarQueue, EventQueue, HeapEventQueue};
 pub use flow::{Completed, FlowId, FlowSim, Hop, LinkId, Pipe, Route};
 pub use topology::{
     NetCondition, TierLink, Topology, TopologyKind, N_CLIENT_DTNS, N_DTNS, SERVER, TIER_LABELS,

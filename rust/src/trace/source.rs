@@ -303,13 +303,30 @@ impl ArrivalSource<'_> {
     }
 
     /// Pop the next arrival in `(ts, UserId)` order.
+    ///
+    /// Uses `peek_mut` replace-top instead of pop-then-push when the
+    /// popped user's substream yields a successor: one heap sift
+    /// instead of two on the per-request hot path.  `(ts, UserId)`
+    /// keys are unique (one heap entry per user), so the emitted
+    /// sequence is observably identical either way.
     pub fn next_request(&mut self) -> Option<Request> {
-        let req = self.heap.pop()?.req;
-        let u = req.user.0 as usize;
-        if let Some(next) = self.step_user(u) {
-            self.heap.push(MinEntry::by_user(next));
-        }
-        self.emitted += 1;
+        let Self { st, gens, heap, emitted } = self;
+        let mut top = heap.peek_mut()?;
+        let u = top.req.user.0 as usize;
+        let next = match &mut gens[u] {
+            UserGen::Program(g) => g.step(&st.cfg),
+            UserGen::Human(g) => g.step(st),
+            UserGen::Done => None,
+        };
+        let req = match next {
+            Some(n) => std::mem::replace(&mut *top, MinEntry::by_user(n)).req,
+            None => {
+                // Drop the generator state: finished users cost nothing.
+                gens[u] = UserGen::Done;
+                std::collections::binary_heap::PeekMut::pop(top).req
+            }
+        };
+        *emitted += 1;
         Some(req)
     }
 

@@ -148,6 +148,22 @@ impl Bencher {
         &self.results
     }
 
+    /// Mean time of a recorded measurement by name (NaN when absent),
+    /// for cross-case comparisons in bench binaries.
+    pub fn mean_of(&self, name: &str) -> f64 {
+        self.results
+            .iter()
+            .find(|m| m.name == name)
+            .map(|m| m.mean_ns)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Speedup of `new` over `base` from the recorded means
+    /// (> 1 ⇒ `new` is faster); NaN when either case is missing.
+    pub fn speedup(&self, base: &str, new: &str) -> f64 {
+        self.mean_of(base) / self.mean_of(new)
+    }
+
     /// JSON dump for the §Perf log.
     pub fn to_json(&self) -> String {
         use crate::util::json::Json;
@@ -205,5 +221,28 @@ mod tests {
         b.bench("x", || 1 + 1);
         let parsed = crate::util::json::Json::parse(&b.to_json()).unwrap();
         assert_eq!(parsed.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn speedup_compares_recorded_means() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(2),
+            measure: Duration::from_millis(5),
+            min_samples: 2,
+            min_warmup_iters: 1,
+            results: Vec::new(),
+        };
+        b.bench("fast", || 1 + 1);
+        b.bench("slow", || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(b.mean_of("fast") > 0.0);
+        assert!(b.mean_of("missing").is_nan());
+        assert!(b.speedup("slow", "fast") > 0.0);
+        assert!(b.speedup("slow", "missing").is_nan());
     }
 }

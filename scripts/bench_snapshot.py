@@ -8,13 +8,20 @@ those files into a single `BENCH_<label>.json` at the repo root — the
 per-PR perf trajectory that EXPERIMENTS.md §Perf narrates in prose.
 
 Usage:
-    python3 scripts/bench_snapshot.py [--label pr6] [--quick] [--no-run]
+    python3 scripts/bench_snapshot.py [--label pr7] [--quick] [--no-run]
+    python3 scripts/bench_snapshot.py --check [--label pr7]
 
 `--no-run` skips `cargo bench` and collates whatever result files are
 already on disk.  When no cargo toolchain is available and no results
 exist, the script writes a snapshot with `"status": "pending"` and
 exits 0 — CI (which always has a toolchain) replaces it with real
 numbers, and the schema stays stable either way.
+
+`--check` validates an existing `BENCH_<label>.json` against the
+snapshot schema instead of writing one (exit 1 on violations) — the
+CI `bench-smoke` step runs it after a `--quick` bench pass so schema
+drift or a truncated snapshot fails the build rather than rotting in
+the perf trajectory.
 """
 
 import argparse
@@ -62,12 +69,60 @@ def collate() -> dict:
     return suites
 
 
+def check(label: str) -> None:
+    """Validate BENCH_<label>.json against the snapshot schema."""
+    path = os.path.join(REPO, f"BENCH_{label}.json")
+    try:
+        with open(path) as f:
+            snap = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"bench_snapshot: --check: unreadable {path}: {e}")
+    errors = []
+    if snap.get("label") != label:
+        errors.append(f"label {snap.get('label')!r} != {label!r}")
+    if snap.get("status") not in ("measured", "pending"):
+        errors.append(f"status {snap.get('status')!r} not 'measured' or 'pending'")
+    suites = snap.get("suites")
+    if not isinstance(suites, dict):
+        errors.append("'suites' missing or not an object")
+        suites = {}
+    if snap.get("status") == "measured" and not suites:
+        errors.append("status 'measured' but no suites collated")
+    for name, payload in suites.items():
+        if isinstance(payload, list):
+            # Bencher dumps: a list of measurements.
+            for i, m in enumerate(payload):
+                missing = {"name", "mean_ns", "p50_ns", "p95_ns", "iters"} - set(m)
+                if missing:
+                    errors.append(f"suite {name}[{i}]: missing {sorted(missing)}")
+        elif not isinstance(payload, dict):
+            # Sweep parity bench dumps a single object.
+            errors.append(f"suite {name}: payload is {type(payload).__name__}")
+    if errors:
+        for e in errors:
+            print(f"bench_snapshot: --check {path}: {e}")
+        sys.exit(1)
+    print(
+        f"bench_snapshot: --check OK {path} "
+        f"(status={snap['status']}, {len(suites)} suite(s))"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--label", default="pr6", help="snapshot label (BENCH_<label>.json)")
+    ap.add_argument("--label", default="pr7", help="snapshot label (BENCH_<label>.json)")
     ap.add_argument("--quick", action="store_true", help="pass --quick to the benches")
     ap.add_argument("--no-run", action="store_true", help="collate existing results only")
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="validate the existing snapshot instead of writing one",
+    )
     args = ap.parse_args()
+
+    if args.check:
+        check(args.label)
+        return
 
     ran = False if args.no_run else run_benches(args.quick)
     suites = collate()
