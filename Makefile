@@ -67,9 +67,10 @@ golden:
 
 # Scenario smoke (wired into CI): one preset and one non-preset axis
 # combination (markov + gdsf + federation + streaming) run end-to-end
-# with `--quick --json`, plus one quick experiment grid over the worker
-# pool (--jobs 4).  scripts/check_report.py validates the two simulate
-# reports and every <id>.json RunReport array the grid emits.
+# with `--quick --json`, plus two quick experiment grids over the worker
+# pool (--jobs 4) — the federation sweep and the cache-depth placement
+# sweep (the tiered-cache path).  scripts/check_report.py validates the
+# two simulate reports and every <id>.json RunReport array the grids emit.
 smoke: artifacts-quick
 	cd rust && cargo build --release
 	rust/target/release/repro simulate --observatory tiny --quick --json \
@@ -79,6 +80,8 @@ smoke: artifacts-quick
 		> /tmp/obsd_smoke_combo.json
 	rm -rf /tmp/obsd_smoke_grid
 	rust/target/release/repro experiment --id federation --quick --jobs 4 \
+		--out /tmp/obsd_smoke_grid
+	rust/target/release/repro experiment --id cache-depth --quick --jobs 4 \
 		--out /tmp/obsd_smoke_grid
 	python3 scripts/check_report.py /tmp/obsd_smoke_preset.json \
 		/tmp/obsd_smoke_combo.json /tmp/obsd_smoke_grid/*.json

@@ -10,10 +10,14 @@
 //!   GDSF) behind one trait.
 //! * [`store`] — a byte-capacity-bounded chunk cache for one DTN.
 //! * [`network`] — the interconnected cache network with peer lookup
-//!   and replica registry (client DTNs #2-#7 in Fig. 7).
+//!   and replica registry (client DTNs #2-#7 in Fig. 7), plus the
+//!   placement axis that moves capacity onto interior tier nodes.
+//! * [`reuse`] — sampled reuse-distance (stack-distance) analytics
+//!   per cache node, mergeable per tier.
 
 pub mod network;
 pub mod policy;
+pub mod reuse;
 pub mod store;
 
 use crate::trace::{StreamId, TimeRange};

@@ -11,6 +11,66 @@ use std::collections::{HashMap, HashSet};
 use crate::cache::policy::PolicyKind;
 use crate::cache::store::DtnCache;
 use crate::cache::{ChunkKey, Origin};
+use crate::trace::UserId;
+
+/// Where cache capacity lives in the topology (DESIGN.md §12).
+///
+/// `Edge` is the paper's endpoint-only deployment and the default —
+/// every preset keeps it, so pre-tier behavior is reproduced
+/// bit-identically.  The other placements move the *same total
+/// capacity* onto interior [`crate::simnet::CacheSite`] nodes
+/// (regional hubs / the federation DMZ), split evenly across the
+/// nodes of the named tier; `All` splits it across edges and every
+/// interior site.  A placement naming a tier the topology does not
+/// have (e.g. `core` on the star) degrades to `Edge`, so sweeps run
+/// on every topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CachePlacementSpec {
+    /// All capacity at the six client DTNs (pre-tier behavior).
+    #[default]
+    Edge,
+    /// All capacity split across the regional-tier interior nodes.
+    Regional,
+    /// All capacity split across the core-tier interior nodes.
+    Core,
+    /// Capacity split evenly across edges and every interior site.
+    All,
+}
+
+impl CachePlacementSpec {
+    pub const ALL: [CachePlacementSpec; 4] = [
+        CachePlacementSpec::Edge,
+        CachePlacementSpec::Regional,
+        CachePlacementSpec::Core,
+        CachePlacementSpec::All,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CachePlacementSpec::Edge => "edge",
+            CachePlacementSpec::Regional => "regional",
+            CachePlacementSpec::Core => "core",
+            CachePlacementSpec::All => "all",
+        }
+    }
+}
+
+impl std::str::FromStr for CachePlacementSpec {
+    type Err = crate::util::parse::ParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        crate::util::parse::lookup(
+            "cache placement",
+            s,
+            &[
+                (&["edge", "dtn"], CachePlacementSpec::Edge),
+                (&["regional", "region"], CachePlacementSpec::Regional),
+                (&["core", "dmz"], CachePlacementSpec::Core),
+                (&["all", "split"], CachePlacementSpec::All),
+            ],
+        )
+    }
+}
 
 /// Cache layer spanning `n_nodes` DTNs; node 0 is the observatory-side
 /// server DTN (no client cache), nodes 1.. are client DTNs.
@@ -18,6 +78,13 @@ pub struct CacheNetwork {
     stores: Vec<DtnCache>,
     /// chunk → set of client DTNs currently holding it.
     registry: HashMap<ChunkKey, HashSet<usize>>,
+    /// First inserter of each currently-resident copy, for cross-user
+    /// hit attribution — `Some` only under interior placements, so the
+    /// edge-only path carries zero extra state or work.  Records are
+    /// created on fresh user-attributed inserts, survive refreshes
+    /// (the resident copy's lineage is unchanged), and die with the
+    /// entry on eviction or removal.
+    inserters: Option<HashMap<(usize, ChunkKey), UserId>>,
     /// Audit (feature `sim-audit`): mutation counter driving sampled
     /// `check_registry` sweeps — the full check is O(registry), so it
     /// runs every [`Self::AUDIT_SAMPLE`]-th insert/remove rather than
@@ -32,6 +99,21 @@ impl CacheNetwork {
         Self {
             stores: (0..n_nodes).map(|_| DtnCache::new(capacity, policy)).collect(),
             registry: HashMap::new(),
+            inserters: None,
+            #[cfg(feature = "sim-audit")]
+            audit_mutations: 0,
+        }
+    }
+
+    /// Build with explicit per-node capacities (interior placements
+    /// give tier nodes capacity and zero out the edges — a 0-capacity
+    /// [`DtnCache`] rejects every insert, so those stores no-op).
+    /// `track_inserters` turns on the cross-user attribution side-map.
+    pub fn with_capacities(caps: Vec<u64>, policy: PolicyKind, track_inserters: bool) -> Self {
+        Self {
+            stores: caps.into_iter().map(|c| DtnCache::new(c, policy)).collect(),
+            registry: HashMap::new(),
+            inserters: track_inserters.then(HashMap::new),
             #[cfg(feature = "sim-audit")]
             audit_mutations: 0,
         }
@@ -71,6 +153,23 @@ impl CacheNetwork {
 
     /// Insert at a node, maintaining the replica registry.
     pub fn insert(&mut self, node: usize, key: ChunkKey, size: u64, origin: Origin, now: f64) {
+        self.insert_by(node, key, size, origin, now, None);
+    }
+
+    /// Insert with user attribution for cross-user hit accounting.
+    /// `user` is the requester whose demand pulled the chunk in (`None`
+    /// for system-initiated inserts like placement replication, which
+    /// are never cross-user credited).
+    pub fn insert_by(
+        &mut self,
+        node: usize,
+        key: ChunkKey,
+        size: u64,
+        origin: Origin,
+        now: f64,
+        user: Option<UserId>,
+    ) {
+        let fresh = !self.stores[node].contains(&key);
         let evicted = self.stores[node].insert(key, size, origin, now);
         for (k, _) in evicted.keys {
             if let Some(set) = self.registry.get_mut(&k) {
@@ -79,12 +178,26 @@ impl CacheNetwork {
                     self.registry.remove(&k);
                 }
             }
+            if let Some(map) = &mut self.inserters {
+                map.remove(&(node, k));
+            }
         }
         if self.stores[node].contains(&key) {
             self.registry.entry(key).or_default().insert(node);
+            if fresh {
+                if let (Some(map), Some(u)) = (&mut self.inserters, user) {
+                    map.insert((node, key), u);
+                }
+            }
         }
         #[cfg(feature = "sim-audit")]
         self.audit_tick();
+    }
+
+    /// First inserter of the currently-resident copy of `key` at
+    /// `node`, when attribution is tracked and the insert carried one.
+    pub fn first_inserter(&self, node: usize, key: &ChunkKey) -> Option<UserId> {
+        self.inserters.as_ref()?.get(&(node, *key)).copied()
     }
 
     /// Remove at a node, maintaining the registry.
@@ -95,6 +208,9 @@ impl CacheNetwork {
                 if set.is_empty() {
                     self.registry.remove(key);
                 }
+            }
+            if let Some(map) = &mut self.inserters {
+                map.remove(&(node, *key));
             }
         }
         #[cfg(feature = "sim-audit")]
@@ -148,6 +264,16 @@ impl CacheNetwork {
                 );
             }
         }
+        if let Some(map) = &self.inserters {
+            let mut recs: Vec<(usize, ChunkKey)> = map.keys().copied().collect();
+            recs.sort_unstable();
+            for (node, key) in recs {
+                assert!(
+                    self.stores[node].contains(&key),
+                    "inserter record dangles for {key:?} @ {node}"
+                );
+            }
+        }
     }
 }
 
@@ -194,6 +320,51 @@ mod tests {
     }
 
     #[test]
+    fn placement_spec_names_and_defaults() {
+        assert_eq!(CachePlacementSpec::default(), CachePlacementSpec::Edge);
+        for p in CachePlacementSpec::ALL {
+            assert_eq!(p.name().parse::<CachePlacementSpec>(), Ok(p));
+        }
+        assert_eq!("dmz".parse::<CachePlacementSpec>(), Ok(CachePlacementSpec::Core));
+        assert_eq!("split".parse::<CachePlacementSpec>(), Ok(CachePlacementSpec::All));
+    }
+
+    #[test]
+    fn zero_capacity_stores_reject_and_tier_stores_accept() {
+        // Interior placement shape: edges zeroed, one tier node funded.
+        let mut net =
+            CacheNetwork::with_capacities(vec![0, 0, 10_000], PolicyKind::Lru, true);
+        net.insert_by(1, key(1), 100, Origin::Demand, 0.0, Some(UserId(9)));
+        assert!(!net.contains(1, &key(1)), "0-capacity store accepted an insert");
+        net.insert_by(2, key(1), 100, Origin::Demand, 0.0, Some(UserId(9)));
+        assert!(net.contains(2, &key(1)));
+        net.check_registry();
+    }
+
+    #[test]
+    fn first_inserter_survives_refresh_and_dies_with_eviction() {
+        let mut net = CacheNetwork::with_capacities(vec![0, 250], PolicyKind::Lru, true);
+        net.insert_by(1, key(1), 100, Origin::Demand, 0.0, Some(UserId(7)));
+        assert_eq!(net.first_inserter(1, &key(1)), Some(UserId(7)));
+        // Refresh by another user keeps the resident copy's lineage.
+        net.insert_by(1, key(1), 100, Origin::Demand, 1.0, Some(UserId(8)));
+        assert_eq!(net.first_inserter(1, &key(1)), Some(UserId(7)));
+        // Evicting the copy ends the lineage; a fresh insert restarts it.
+        net.insert_by(1, key(2), 200, Origin::Demand, 2.0, Some(UserId(8)));
+        assert_eq!(net.first_inserter(1, &key(1)), None);
+        net.insert_by(1, key(1), 100, Origin::Demand, 3.0, Some(UserId(8)));
+        assert_eq!(net.first_inserter(1, &key(1)), Some(UserId(8)));
+        net.check_registry();
+    }
+
+    #[test]
+    fn untracked_network_reports_no_inserters() {
+        let mut net = CacheNetwork::new(3, 10_000, PolicyKind::Lru);
+        net.insert_by(1, key(1), 100, Origin::Demand, 0.0, Some(UserId(3)));
+        assert_eq!(net.first_inserter(1, &key(1)), None);
+    }
+
+    #[test]
     fn total_recall_aggregates() {
         let mut net = CacheNetwork::new(3, 10_000, PolicyKind::Lru);
         net.insert(1, key(1), 100, Origin::Prefetch, 0.0);
@@ -215,20 +386,23 @@ mod tests {
         const KEYS: u64 = 24;
         crate::util::prop::check("registry-consistent", |rng| {
             let policy = PolicyKind::ALL[rng.below(PolicyKind::ALL.len())];
-            let mut net = CacheNetwork::new(NODES, 500, policy);
+            // Inserter tracking on: the sweep also proves attribution
+            // records never dangle past eviction/removal.
+            let mut net = CacheNetwork::with_capacities(vec![500; NODES], policy, true);
             for step in 0..250 {
                 let node = rng.below(NODES);
                 let k = key(rng.below(KEYS as usize) as u64);
                 let origin = [Origin::Demand, Origin::Prefetch, Origin::Replica][rng.below(3)];
+                let user = (rng.below(2) == 0).then(|| UserId(rng.below(5) as u32));
                 match rng.below(4) {
-                    0 => net.insert(node, k, (rng.below(300) + 1) as u64, origin, step as f64),
+                    0 => net.insert_by(node, k, (rng.below(300) + 1) as u64, origin, step as f64, user),
                     1 => net.remove(node, &k),
                     2 => {
                         net.access(node, &k);
                     }
                     // Near-capacity insert: evicts most of the node's
                     // store in one call.
-                    _ => net.insert(node, k, (rng.below(150) + 300) as u64, origin, step as f64),
+                    _ => net.insert_by(node, k, (rng.below(150) + 300) as u64, origin, step as f64, user),
                 }
                 net.check_registry();
                 // Registry-vs-store agreement for peer lookup, probed

@@ -1,0 +1,251 @@
+//! Reuse-distance (LRU stack-distance) analytics for cache tiers
+//! (DESIGN.md §12).
+//!
+//! A reference's *reuse distance* is the number of distinct chunks
+//! touched since the previous reference to the same chunk — the
+//! classic Mattson stack distance.  Its distribution tells you how
+//! much capacity a tier needs: a tier of C chunks serves exactly the
+//! references whose distance is < C (under LRU), so the histogram is
+//! the miss-ratio curve in disguise.
+//!
+//! Tracking every reference costs O(stack) per access; this module
+//! uses deterministic **spatial sampling** (cf. counter-stack /
+//! SHARDS-style samplers): only chunks whose key hashes under the
+//! sampling threshold are tracked, and each sampled distance is
+//! scaled by the sampling rate.  Because the filter is a pure hash of
+//! the key — no RNG, no clocks, no address-dependent state — the
+//! tracker is bit-reproducible across runs, worker counts, and
+//! platforms, which is what lets golden fixtures pin its output
+//! (DESIGN.md §10 determinism rules).
+//!
+//! Distances land in power-of-two buckets, and histograms from
+//! different nodes of the same tier merge by element-wise addition,
+//! so per-tier aggregation over any node partition is associative and
+//! order-insensitive by construction.
+
+use crate::cache::ChunkKey;
+
+/// Power-of-two reuse-distance histogram, mergeable across nodes.
+///
+/// `buckets[i]` counts sampled references whose scaled stack distance
+/// `d` satisfies `2^i <= d+1 < 2^(i+1)` (so bucket 0 is distance 0,
+/// an immediate re-reference).  `cold` counts first-touch references
+/// (infinite distance); `samples` counts every sampled re-reference.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ReuseHistogram {
+    /// Sampled first-touch (cold, infinite-distance) references.
+    pub cold: u64,
+    /// Sampled finite-distance re-references (== sum of `buckets`).
+    pub samples: u64,
+    /// Log2 distance buckets, index = floor(log2(distance + 1)).
+    pub buckets: Vec<u64>,
+}
+
+impl ReuseHistogram {
+    /// Record one finite scaled distance.
+    fn record(&mut self, distance: u64) {
+        let idx = (64 - (distance + 1).leading_zeros() - 1) as usize;
+        if self.buckets.len() <= idx {
+            self.buckets.resize(idx + 1, 0);
+        }
+        self.buckets[idx] += 1;
+        self.samples += 1;
+    }
+
+    /// Element-wise merge of another histogram into this one.
+    /// Associative and commutative, so per-tier aggregation is
+    /// independent of node visit order.
+    pub fn merge(&mut self, other: &ReuseHistogram) {
+        self.cold += other.cold;
+        self.samples += other.samples;
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+    }
+}
+
+/// Deterministic 64-bit key hash (splitmix64 finalizer over the
+/// stream/chunk pair).  Pure function of the key: the sampling
+/// decision is identical in every run.
+fn mix(key: &ChunkKey) -> u64 {
+    let mut z = ((key.stream.0 as u64) << 32) ^ key.chunk ^ 0x9E37_79B9_7F4A_7C15;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Sampled LRU stack-distance tracker for one cache node.
+///
+/// Keeps an LRU stack of only the *sampled* chunks (those with
+/// `mix(key) % rate == 0`); a re-reference's distance is the number of
+/// sampled chunks above it on the stack, scaled by `rate` — the
+/// standard spatial-sampling estimator.  `rate == 1` tracks every
+/// chunk exactly (the oracle configuration the property tests pin
+/// against).
+#[derive(Debug, Clone)]
+pub struct ReuseTracker {
+    rate: u64,
+    /// Sampled chunks, most-recently-referenced last.
+    stack: Vec<ChunkKey>,
+    hist: ReuseHistogram,
+}
+
+/// Default spatial sampling rate: 1 in 8 chunks tracked.
+pub const DEFAULT_SAMPLE_RATE: u64 = 8;
+
+impl ReuseTracker {
+    pub fn new(rate: u64) -> Self {
+        Self {
+            rate: rate.max(1),
+            stack: Vec::new(),
+            hist: ReuseHistogram::default(),
+        }
+    }
+
+    /// Record one reference to `key` (hit or miss alike — reuse
+    /// distance is a property of the reference stream, not of the
+    /// cache contents).
+    pub fn touch(&mut self, key: &ChunkKey) {
+        if mix(key) % self.rate != 0 {
+            return;
+        }
+        match self.stack.iter().rposition(|k| k == key) {
+            Some(pos) => {
+                // Distinct sampled chunks touched since the previous
+                // reference, scaled up by the sampling rate.
+                let above = (self.stack.len() - 1 - pos) as u64;
+                self.hist.record(above * self.rate);
+                self.stack.remove(pos);
+            }
+            None => self.hist.cold += 1,
+        }
+        self.stack.push(*key);
+    }
+
+    pub fn histogram(&self) -> &ReuseHistogram {
+        &self.hist
+    }
+
+    /// Sampled chunks currently on the stack.
+    pub fn stack_len(&self) -> usize {
+        self.stack.len()
+    }
+}
+
+/// Naive O(n²) reuse-distance oracle over a full reference trace:
+/// for each reference, scan backward to the previous reference of the
+/// same key, counting distinct keys in between, then apply the same
+/// sampling filter and scaling as [`ReuseTracker`].  Exists only to
+/// pin the incremental tracker bitwise in property tests.
+pub fn oracle_histogram(trace: &[ChunkKey], rate: u64) -> ReuseHistogram {
+    let rate = rate.max(1);
+    let mut hist = ReuseHistogram::default();
+    for (i, key) in trace.iter().enumerate() {
+        if mix(key) % rate != 0 {
+            continue;
+        }
+        let mut prev = None;
+        for (j, past) in trace[..i].iter().enumerate().rev() {
+            if past == key {
+                prev = Some(j);
+                break;
+            }
+        }
+        let Some(prev) = prev else {
+            hist.cold += 1;
+            continue;
+        };
+        // Distinct *sampled* keys referenced strictly between the two
+        // references to `key` — exactly the tracker's "chunks above on
+        // the stack" count.
+        let mut distinct: Vec<&ChunkKey> = Vec::new();
+        for past in &trace[prev + 1..i] {
+            if mix(past) % rate == 0 && *past != *key && !distinct.contains(&past) {
+                distinct.push(past);
+            }
+        }
+        hist.record(distinct.len() as u64 * rate);
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::StreamId;
+
+    fn key(stream: u32, chunk: u64) -> ChunkKey {
+        ChunkKey { stream: StreamId(stream), chunk }
+    }
+
+    #[test]
+    fn exact_tracker_matches_hand_computed_distances() {
+        // Trace a b c a b a with rate 1: distances are
+        // a: cold, b: cold, c: cold, a: 2, b: 2, a: 1.
+        let mut t = ReuseTracker::new(1);
+        for k in [key(0, 0), key(0, 1), key(0, 2), key(0, 0), key(0, 1), key(0, 0)] {
+            t.touch(&k);
+        }
+        let h = t.histogram();
+        assert_eq!(h.cold, 3);
+        assert_eq!(h.samples, 3);
+        // distance 2 → bucket log2(3) = 1; distance 1 → bucket 1.
+        assert_eq!(h.buckets, vec![0, 3]);
+    }
+
+    #[test]
+    fn immediate_rereference_lands_in_bucket_zero() {
+        let mut t = ReuseTracker::new(1);
+        t.touch(&key(1, 7));
+        t.touch(&key(1, 7));
+        assert_eq!(t.histogram().buckets, vec![1]);
+    }
+
+    #[test]
+    fn merge_is_elementwise_and_commutative() {
+        let (mut a, mut b) = (ReuseHistogram::default(), ReuseHistogram::default());
+        a.record(0);
+        a.record(5);
+        a.cold = 2;
+        b.record(1000);
+        b.cold = 1;
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.cold, 3);
+        assert_eq!(ab.samples, 3);
+        assert_eq!(ab.samples, ab.buckets.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn sampling_filter_is_a_pure_key_hash() {
+        // The same key always makes the same sampling decision, and
+        // roughly 1/rate of keys pass at rate 8.
+        let rate = 8u64;
+        let passed: Vec<bool> =
+            (0..4096).map(|c| mix(&key(3, c)) % rate == 0).collect();
+        let again: Vec<bool> =
+            (0..4096).map(|c| mix(&key(3, c)) % rate == 0).collect();
+        assert_eq!(passed, again);
+        let n = passed.iter().filter(|p| **p).count();
+        assert!((256..=768).contains(&n), "sampled {n}/4096 at rate 8");
+    }
+
+    #[test]
+    fn sampled_tracker_matches_oracle_on_fixed_trace() {
+        let trace: Vec<ChunkKey> =
+            (0..512u64).map(|i| key((i % 5) as u32, (i * i) % 37)).collect();
+        for rate in [1, 2, 8] {
+            let mut t = ReuseTracker::new(rate);
+            for k in &trace {
+                t.touch(k);
+            }
+            assert_eq!(t.histogram(), &oracle_histogram(&trace, rate), "rate {rate}");
+        }
+    }
+}

@@ -29,7 +29,9 @@ use anyhow::{bail, Result};
 
 use crate::cache::policy::PolicyKind;
 use crate::prefetch::Strategy;
-use crate::scenario::{ModelSpec, RunReport, Runner, Scenario, ScenarioGrid, WorkloadSpec};
+use crate::scenario::{
+    CachePlacementSpec, ModelSpec, RunReport, Runner, Scenario, ScenarioGrid, WorkloadSpec,
+};
 use crate::simnet::{NetCondition, TopologyKind};
 use crate::trace::{generator, presets, Trace};
 use crate::util::json::Json;
@@ -88,9 +90,9 @@ impl ExpOptions {
 /// experiments bench iterate it, and either sweep's cost would
 /// dominate a paper-figures run — invoke them explicitly with
 /// `--id traffic` / `--id scale`.
-pub const ALL_IDS: [&str; 16] = [
+pub const ALL_IDS: [&str; 17] = [
     "fig2", "table1", "table2", "fig3", "fig4", "fig9", "fig10", "fig11", "fig12", "table3",
-    "fig13", "table4", "table5", "headline", "policies", "federation",
+    "fig13", "table4", "table5", "headline", "policies", "federation", "cache-depth",
 ];
 
 /// Ids accepted by [`run_experiment`] but excluded from `all` (see
@@ -211,6 +213,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Result<String> {
         "scale" => scale_sweep(opts),
         "policies" => policies(opts),
         "federation" => federation(opts),
+        "cache-depth" => cache_depth(opts),
         "all" => {
             let mut out = String::new();
             for id in ALL_IDS {
@@ -916,6 +919,86 @@ fn federation(opts: &ExpOptions) -> Result<String> {
     Ok(t.render())
 }
 
+/// Extension: the cache-placement depth sweep (DESIGN.md §12).  The
+/// same *total* cache capacity is deployed at the client edges, on the
+/// regional tier, at the federation core, or split across all of them,
+/// on the star (where interior placements degrade to edge) and the
+/// OSDF-style federation — sweeping *where* capacity buys the most
+/// origin offload.  Cache Only keeps the attribution clean: every
+/// origin byte saved is the cache placement's doing, not a model's.
+fn cache_depth(opts: &ExpOptions) -> Result<String> {
+    let trace = build_trace("federation", opts)?;
+    let topo_axis: [(&str, TopologyKind); 2] = [
+        ("star", TopologyKind::VdcStar),
+        ("federation", TopologyKind::federation_default()),
+    ];
+    // Small enough that eviction pressure is real at the edge — the
+    // regime where consolidating capacity on a shared tier can win.
+    let cap_axis: [(&str, u64); 2] = [("1G", 1 << 30), ("4G", 4 << 30)];
+    let mut base = Scenario::preset(Strategy::CacheOnly);
+    base.workload = workload_for("federation", opts);
+    let sweep = ScenarioGrid::new(base)
+        .topologies(&topo_axis)
+        .cache_sizes(&cap_axis)
+        .placements(&CachePlacementSpec::ALL);
+    let reports = sweep.run_all(&Runner::new(), &trace, opts.jobs);
+    let mut t = Table::new(
+        "Cache-depth sweep — equal total capacity at edge / regional / core / split (Cache Only)",
+    )
+    .header(&[
+        "Topology",
+        "Cache",
+        "Placement",
+        "Origin frac",
+        "Origin vol",
+        "Hit vol",
+        "Cross-user",
+        "Thrpt (Mbps)",
+        "Wall (s)",
+    ]);
+    let mut csv = String::from(
+        "topology,cache,placement,origin_frac,origin_bytes,cache_bytes,hit_chunks,\
+         cross_user_frac,edge_byte_hits,regional_byte_hits,core_byte_hits,wall_secs\n",
+    );
+    let n_pl = CachePlacementSpec::ALL.len();
+    for (ti, (topo, _)) in topo_axis.iter().enumerate() {
+        for (ci, (cap, _)) in cap_axis.iter().enumerate() {
+            for (pi, placement) in CachePlacementSpec::ALL.into_iter().enumerate() {
+                let m = &reports[(ti * cap_axis.len() + ci) * n_pl + pi].metrics;
+                let tier_bytes = |tier: &str| m.tier_hit(tier).map_or(0.0, |h| h.byte_hits);
+                t.row(vec![
+                    topo.to_string(),
+                    cap.to_string(),
+                    placement.name().to_string(),
+                    format!("{:.4}", m.origin_fraction()),
+                    crate::util::fmt_bytes(m.origin_bytes),
+                    crate::util::fmt_bytes(m.cache_bytes),
+                    format!("{:.4}", m.cross_user_hit_fraction()),
+                    format!("{:.2}", m.throughput_mbps()),
+                    format!("{:.2}", m.wall_secs),
+                ]);
+                let _ = writeln!(
+                    csv,
+                    "{topo},{cap},{},{:.4},{:.0},{:.0},{},{:.5},{:.0},{:.0},{:.0},{:.3}",
+                    placement.name(),
+                    m.origin_fraction(),
+                    m.origin_bytes,
+                    m.cache_bytes,
+                    m.cache_hit_chunks,
+                    m.cross_user_hit_fraction(),
+                    tier_bytes("edge"),
+                    tier_bytes("regional"),
+                    tier_bytes("core"),
+                    m.wall_secs
+                );
+            }
+        }
+    }
+    write_csv(opts, "cache_depth.csv", &csv)?;
+    write_reports(opts, "cache-depth", &reports)?;
+    Ok(t.render())
+}
+
 /// Extension: all five eviction policies at the smallest cache size
 /// (the paper compares only LRU/LFU and defers the rest, §V-B1).
 fn policies(opts: &ExpOptions) -> Result<String> {
@@ -1039,6 +1122,50 @@ mod tests {
         assert!(out.contains("Federation sweep"));
         assert!(out.contains("1:1:1"));
         assert!(out.contains("Core util"));
+    }
+
+    #[test]
+    fn cache_depth_runs_small() {
+        let dir = std::env::temp_dir().join("obsd_exp_cache_depth_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = ExpOptions {
+            scale: 0.05,
+            days_factor: 0.3,
+            out_dir: Some(dir.clone()),
+            seed: None,
+            jobs: 2,
+        };
+        let out = run_experiment("cache-depth", &opts).unwrap();
+        assert!(out.contains("Cache-depth sweep"));
+        assert!(out.contains("regional"));
+        let csv = std::fs::read_to_string(dir.join("cache_depth.csv")).unwrap();
+        assert!(csv.starts_with("topology,cache,placement"));
+        let json = std::fs::read_to_string(dir.join("cache-depth.json")).unwrap();
+        let v = Json::parse(&json).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 16, "2 topologies × 2 capacities × 4 placements");
+        // The scenario echo carries the placement axis, and the metrics
+        // carry the per-tier report the sweep pivots on.
+        assert_eq!(
+            arr[1].get("scenario").unwrap().get("cache_placement").unwrap().as_str(),
+            Some("regional")
+        );
+        assert!(arr[0].get("metrics").unwrap().get("tier_hits").is_some());
+        // On the star every placement degrades to edge: the first four
+        // cells (one per placement) must report identical origin bytes.
+        let origin = |i: usize| {
+            arr[i]
+                .get("metrics")
+                .unwrap()
+                .get("origin_bytes")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert_eq!(origin(0), origin(1));
+        assert_eq!(origin(0), origin(2));
+        assert_eq!(origin(0), origin(3));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -27,7 +27,7 @@ const USAGE: &str = "\
 repro — push-based data delivery framework (Qin et al. 2020 reproduction)
 
 USAGE:
-  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|scale|policies|federation|all>
+  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|scale|policies|federation|cache-depth|all>
                    [--scale F] [--days F] [--out DIR] [--quick] [--seed N]
                    [--jobs N]
   repro analyze [--scale F]
@@ -35,7 +35,8 @@ USAGE:
                  [--strategy no-cache|cache-only|md1|md2|hpm]
                  [--delivery framework|direct-wan] [--model none|markov|mesh|hybrid]
                  [--offset F] [--top-n N] [--policy lru|lfu|fifo|size|gdsf]
-                 [--cache-gb F] [--net best|medium|worst] [--traffic F]
+                 [--cache-gb F] [--cache-placement edge|regional|core|all]
+                 [--net best|medium|worst] [--traffic F]
                  [--topology vdc|hierarchical|federation]
                  [--users N] [--streaming] [--no-placement]
                  [--scale F] [--days F] [--seed N] [--quick] [--json]
@@ -47,7 +48,11 @@ Scenario axes (simulate): `--strategy` is preset sugar for the paper's
 five-point grid; the orthogonal axes override it — `--delivery` picks
 direct commodity WAN vs the framework's DTN fabric, `--model` the
 prefetch model (with `--offset`/`--top-n` tuning its knobs), `--policy`
-the eviction policy, `--topology` the deployment.  `--users N`
+the eviction policy, `--topology` the deployment.  `--cache-placement`
+moves the same total cache capacity onto the topology's interior tier
+nodes (regional hubs / federation core) instead of the client edges;
+placements naming a tier the topology lacks degrade to edge.
+`--users N`
 overrides the preset's user population; `--streaming` runs over the
 lazy arrival source (O(active-users) memory — required for
 million-user populations) instead of materializing the trace first;
@@ -200,6 +205,9 @@ fn scenario_from_flags(flags: &HashMap<String, String>) -> Result<Scenario> {
     if let Some(t) = flags.get("topology") {
         b = b.topology(t.parse::<TopologyKind>()?);
     }
+    if let Some(p) = flags.get("cache-placement") {
+        b = b.cache_placement(p.parse::<obsd::scenario::CachePlacementSpec>()?);
+    }
     let quick = flags.contains_key("quick");
     // Smoke mode (`--quick`): shrink the workload unless overridden —
     // what CI's scenario smoke job runs.
@@ -288,6 +296,18 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
             u.utilization,
             obsd::util::fmt_bytes(u.carried_bytes)
         );
+    }
+    for t in &m.tier_hits {
+        println!(
+            "tier {:<9}      hits {}  vol {}  cross-user {}",
+            t.tier,
+            t.hits,
+            obsd::util::fmt_bytes(t.byte_hits),
+            t.cross_user_hits
+        );
+    }
+    if !m.tier_hits.is_empty() {
+        println!("cross-user frac     {:.4}", m.cross_user_hit_fraction());
     }
     println!("wall clock          {:.2} s", m.wall_secs);
     Ok(())

@@ -10,6 +10,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::cache::reuse::ReuseHistogram;
 use crate::util::json::Json;
 use crate::util::stats::Accum;
 
@@ -38,6 +39,27 @@ pub struct TierUtil {
     pub carried_bytes: f64,
     /// `carried / (capacity × simulated window)` ∈ [0, 1].
     pub utilization: f64,
+}
+
+/// Cache-hit accounting for one tier of the placement hierarchy
+/// (DESIGN.md §12).  "edge" covers the client-DTN stores (local and
+/// peer serves alike — the serving node's tier attributes the hit);
+/// interior tiers cover their [`crate::simnet::CacheSite`] nodes.
+#[derive(Debug, Clone)]
+pub struct TierHits {
+    /// Tier label from the topology ("edge", "regional", "core").
+    pub tier: &'static str,
+    /// Chunk-level demand hits served by this tier's caches.
+    pub hits: u64,
+    /// Bytes of those hits.
+    pub byte_hits: f64,
+    /// Hits on chunks whose resident copy was first inserted by a
+    /// *different* user than the requester (≤ `hits`; only counted
+    /// when inserter tracking is on, i.e. interior placements).
+    pub cross_user_hits: u64,
+    /// Sampled reuse-distance histogram over the tier's reference
+    /// stream, merged across its nodes (empty when tracking is off).
+    pub reuse: ReuseHistogram,
 }
 
 /// Aggregated metrics for one simulation run.
@@ -89,6 +111,12 @@ pub struct RunMetrics {
     /// Interior-link utilization per labeled tier link (empty on the
     /// star; populated for hierarchical/federation topologies).
     pub interior_util: Vec<TierUtil>,
+    /// Total chunk-level cache hits across every tier — always equals
+    /// the sum of `tier_hits[..].hits` (audited under `sim-audit`).
+    pub cache_hit_chunks: u64,
+    /// Per-tier hit/byte-hit/cross-user accounting, "edge" first, then
+    /// interior tiers in the topology's cache-site order.
+    pub tier_hits: Vec<TierHits>,
     /// Wall-clock spent in the run (for the §Perf log).
     pub wall_secs: f64,
 }
@@ -171,6 +199,23 @@ impl RunMetrics {
         (max_util, bytes)
     }
 
+    /// Hit accounting for one tier, when the run recorded any.
+    pub fn tier_hit(&self, tier: &str) -> Option<&TierHits> {
+        self.tier_hits.iter().find(|t| t.tier == tier)
+    }
+
+    /// Fraction of cache hits (all tiers) that were cross-user — hits
+    /// on chunks first inserted by a different user.  0 for edge-only
+    /// runs, where inserter tracking is off.
+    pub fn cross_user_hit_fraction(&self) -> f64 {
+        let cross: u64 = self.tier_hits.iter().map(|t| t.cross_user_hits).sum();
+        if self.cache_hit_chunks == 0 {
+            0.0
+        } else {
+            cross as f64 / self.cache_hit_chunks as f64
+        }
+    }
+
     /// Network-traffic reduction at the observatory vs a no-cache run
     /// (the paper's headline 60.7% / 19.7%).
     pub fn traffic_reduction_vs(&self, baseline_origin_bytes: f64) -> f64 {
@@ -250,6 +295,43 @@ impl RunMetrics {
                     .collect(),
             ),
         );
+        m.insert(
+            "cache_hit_chunks".to_string(),
+            Json::Num(self.cache_hit_chunks as f64),
+        );
+        m.insert(
+            "cross_user_hit_fraction".to_string(),
+            Json::Num(self.cross_user_hit_fraction()),
+        );
+        m.insert(
+            "tier_hits".to_string(),
+            Json::Arr(
+                self.tier_hits
+                    .iter()
+                    .map(|t| {
+                        let mut h = BTreeMap::new();
+                        h.insert("tier".to_string(), Json::Str(t.tier.to_string()));
+                        h.insert("hits".to_string(), Json::Num(t.hits as f64));
+                        h.insert("byte_hits".to_string(), Json::Num(t.byte_hits));
+                        h.insert(
+                            "cross_user_hits".to_string(),
+                            Json::Num(t.cross_user_hits as f64),
+                        );
+                        let mut r = BTreeMap::new();
+                        r.insert("cold".to_string(), Json::Num(t.reuse.cold as f64));
+                        r.insert("samples".to_string(), Json::Num(t.reuse.samples as f64));
+                        r.insert(
+                            "buckets".to_string(),
+                            Json::Arr(
+                                t.reuse.buckets.iter().map(|&b| Json::Num(b as f64)).collect(),
+                            ),
+                        );
+                        h.insert("reuse".to_string(), Json::Obj(r));
+                        Json::Obj(h)
+                    })
+                    .collect(),
+            ),
+        );
         Json::Obj(m)
     }
 
@@ -291,6 +373,25 @@ impl RunMetrics {
                 utilization: u.get("utilization")?.as_f64()?,
             });
         }
+        let mut tier_hits = Vec::new();
+        for t in v.get("tier_hits")?.as_arr()? {
+            let r = t.get("reuse")?;
+            let mut buckets = Vec::new();
+            for b in r.get("buckets")?.as_arr()? {
+                buckets.push(b.as_f64()? as u64);
+            }
+            tier_hits.push(TierHits {
+                tier: intern_tier(t.get("tier")?.as_str()?)?,
+                hits: t.get("hits")?.as_f64()? as u64,
+                byte_hits: t.get("byte_hits")?.as_f64()?,
+                cross_user_hits: t.get("cross_user_hits")?.as_f64()? as u64,
+                reuse: ReuseHistogram {
+                    cold: r.get("cold")?.as_f64()? as u64,
+                    samples: r.get("samples")?.as_f64()? as u64,
+                    buckets,
+                },
+            });
+        }
         Some(RunMetrics {
             throughput: accum("throughput")?,
             latency: accum("latency")?,
@@ -310,6 +411,8 @@ impl RunMetrics {
             peak_req_states: count("peak_req_states")?,
             peak_slab_slots: count("peak_slab_slots")?,
             interior_util,
+            cache_hit_chunks: count("cache_hit_chunks")?,
+            tier_hits,
             wall_secs: num("wall_secs")?,
         })
     }
@@ -345,6 +448,7 @@ impl RunMetrics {
                 self.peer_throughput.count,
                 other.peer_throughput.count,
             ),
+            ("cache_hit_chunks", self.cache_hit_chunks, other.cache_hit_chunks),
         ];
         for (name, x, y) in counters {
             if x != y {
@@ -395,6 +499,36 @@ impl RunMetrics {
                     diffs.push(format!(
                         "utilization {} {}->{}: {} vs {}",
                         x.tier, x.from, x.to, x.utilization, y.utilization
+                    ));
+                }
+            }
+        }
+        if self.tier_hits.len() != other.tier_hits.len() {
+            diffs.push(format!(
+                "tier_hits.len: {} vs {}",
+                self.tier_hits.len(),
+                other.tier_hits.len()
+            ));
+        } else {
+            for (x, y) in self.tier_hits.iter().zip(&other.tier_hits) {
+                if x.tier != y.tier {
+                    diffs.push(format!("tier_hits label: {} vs {}", x.tier, y.tier));
+                } else if x.hits != y.hits {
+                    diffs.push(format!("{} hits: {} vs {}", x.tier, x.hits, y.hits));
+                } else if x.byte_hits.to_bits() != y.byte_hits.to_bits() {
+                    diffs.push(format!(
+                        "{} byte_hits: {} vs {}",
+                        x.tier, x.byte_hits, y.byte_hits
+                    ));
+                } else if x.cross_user_hits != y.cross_user_hits {
+                    diffs.push(format!(
+                        "{} cross_user_hits: {} vs {}",
+                        x.tier, x.cross_user_hits, y.cross_user_hits
+                    ));
+                } else if x.reuse != y.reuse {
+                    diffs.push(format!(
+                        "{} reuse histogram: {:?} vs {:?}",
+                        x.tier, x.reuse, y.reuse
                     ));
                 }
             }
@@ -482,6 +616,21 @@ mod tests {
             carried_bytes: 1.0e12 + 0.5,
             utilization: 0.75,
         });
+        m.cache_hit_chunks = 13;
+        m.tier_hits.push(TierHits {
+            tier: "edge",
+            hits: 5,
+            byte_hits: 1.25e6 + 0.375,
+            cross_user_hits: 0,
+            reuse: ReuseHistogram::default(),
+        });
+        m.tier_hits.push(TierHits {
+            tier: "regional",
+            hits: 8,
+            byte_hits: 3.5e6,
+            cross_user_hits: 3,
+            reuse: ReuseHistogram { cold: 2, samples: 6, buckets: vec![1, 0, 5] },
+        });
         m.wall_secs = 1.25;
         let text = m.to_json().to_string_pretty();
         let back = RunMetrics::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -496,9 +645,41 @@ mod tests {
         let mut u_drift = back.clone();
         u_drift.interior_util[0].utilization += 1e-9;
         assert_eq!(m.diff_bits(&u_drift).len(), 1);
-        let mut e_drift = back;
+        let mut e_drift = back.clone();
         e_drift.interior_util[0].to = 4;
         assert_eq!(m.diff_bits(&e_drift).len(), 1);
+        // Tier-hit drift is visible too: cross-user counts and the
+        // reuse histogram are compared bit-for-bit.
+        let mut h_drift = back.clone();
+        h_drift.tier_hits[1].cross_user_hits = 2;
+        assert_eq!(m.diff_bits(&h_drift).len(), 1);
+        let mut r_drift = back;
+        r_drift.tier_hits[1].reuse.buckets[2] = 4;
+        assert_eq!(m.diff_bits(&r_drift).len(), 1);
+    }
+
+    #[test]
+    fn cross_user_fraction_aggregates_over_tiers() {
+        let mut m = RunMetrics::new();
+        assert_eq!(m.cross_user_hit_fraction(), 0.0);
+        m.cache_hit_chunks = 10;
+        m.tier_hits.push(TierHits {
+            tier: "edge",
+            hits: 6,
+            byte_hits: 0.0,
+            cross_user_hits: 1,
+            reuse: ReuseHistogram::default(),
+        });
+        m.tier_hits.push(TierHits {
+            tier: "core",
+            hits: 4,
+            byte_hits: 0.0,
+            cross_user_hits: 3,
+            reuse: ReuseHistogram::default(),
+        });
+        assert!((m.cross_user_hit_fraction() - 0.4).abs() < 1e-12);
+        assert_eq!(m.tier_hit("core").unwrap().hits, 4);
+        assert!(m.tier_hit("regional").is_none());
     }
 
     #[test]

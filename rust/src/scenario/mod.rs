@@ -38,6 +38,8 @@ use std::sync::Arc;
 
 use crate::cache::policy::PolicyKind;
 use crate::coordinator::framework::{run_core, run_streaming_core, RunParams};
+
+pub use crate::cache::network::CachePlacementSpec;
 use crate::metrics::RunMetrics;
 use crate::placement::kmeans::{ClusterBackend, RustKmeans};
 use crate::prefetch::arima::{GapPredictor, RustArima};
@@ -381,6 +383,9 @@ pub enum ScenarioError {
     /// Framework delivery with a zero-byte cache cannot serve anything
     /// from the edge (use [`Delivery::DirectWan`] for the baseline).
     ZeroCacheWithFramework,
+    /// A non-edge cache placement needs the framework's cache fabric:
+    /// direct-WAN delivery has no caches to place anywhere.
+    PlacementWithoutFramework { placement: &'static str },
     /// `traffic_factor` must be a finite positive number.
     BadTrafficFactor(f64),
     /// A model's `offset` knob must be finite and non-negative
@@ -402,6 +407,11 @@ impl fmt::Display for ScenarioError {
                 f,
                 "framework delivery needs a non-zero cache capacity \
                  (use direct-WAN delivery for the cacheless baseline)"
+            ),
+            ScenarioError::PlacementWithoutFramework { placement } => write!(
+                f,
+                "cache placement '{placement}' requires framework delivery \
+                 (direct-WAN has no cache fabric to place capacity on)"
             ),
             ScenarioError::BadTrafficFactor(v) => {
                 write!(f, "traffic_factor must be finite and positive, got {v}")
@@ -430,6 +440,12 @@ pub struct Scenario {
     pub policy: PolicyKind,
     /// Per-client-DTN cache capacity in bytes.
     pub cache_bytes: u64,
+    /// Where that capacity sits on the topology (DESIGN.md §12):
+    /// `edge` keeps the historical per-client-DTN stores; `regional` /
+    /// `core` move the same *total* onto the topology's interior cache
+    /// sites; `all` splits it across edges and sites.  Placements
+    /// naming a tier the topology lacks degrade to `edge`.
+    pub cache_placement: CachePlacementSpec,
     /// Data placement strategy on/off (Table IV ablation).
     pub placement: bool,
     pub topology: TopologyKind,
@@ -462,6 +478,7 @@ impl Default for Scenario {
             model: ModelSpec::hybrid(),
             policy: PolicyKind::Lru,
             cache_bytes: 128 << 30,
+            cache_placement: CachePlacementSpec::Edge,
             placement: true,
             topology: TopologyKind::VdcStar,
             net: NetCondition::Best,
@@ -547,6 +564,13 @@ impl Scenario {
         if self.delivery == Delivery::Framework && self.cache_bytes == 0 {
             return Err(ScenarioError::ZeroCacheWithFramework);
         }
+        if self.delivery == Delivery::DirectWan
+            && self.cache_placement != CachePlacementSpec::Edge
+        {
+            return Err(ScenarioError::PlacementWithoutFramework {
+                placement: self.cache_placement.name(),
+            });
+        }
         if !self.traffic_factor.is_finite() || self.traffic_factor <= 0.0 {
             return Err(ScenarioError::BadTrafficFactor(self.traffic_factor));
         }
@@ -600,6 +624,7 @@ impl Scenario {
             replicate_budget: self.replicate_budget,
             obs_overhead: self.obs_overhead,
             obs_io_bps: self.obs_io_bps,
+            cache_placement: self.cache_placement,
             seed: self.seed,
         }
     }
@@ -619,6 +644,10 @@ impl Scenario {
         m.insert("model".to_string(), Json::Obj(model));
         m.insert("policy".to_string(), Json::Str(self.policy.name().to_string()));
         m.insert("cache_bytes".to_string(), Json::Num(self.cache_bytes as f64));
+        m.insert(
+            "cache_placement".to_string(),
+            Json::Str(self.cache_placement.name().to_string()),
+        );
         m.insert("placement".to_string(), Json::Bool(self.placement));
         let mut topo = BTreeMap::new();
         topo.insert("kind".to_string(), Json::Str(self.topology.name().to_string()));
@@ -699,6 +728,12 @@ impl ScenarioBuilder {
     /// Cache capacity in GiB (CLI convenience).
     pub fn cache_gb(self, gb: f64) -> Self {
         self.cache_bytes((gb * (1u64 << 30) as f64) as u64)
+    }
+
+    /// Where the cache capacity sits on the topology.
+    pub fn cache_placement(mut self, p: CachePlacementSpec) -> Self {
+        self.sc.cache_placement = p;
+        self
     }
 
     pub fn placement(mut self, on: bool) -> Self {
@@ -1006,6 +1041,19 @@ impl ScenarioGrid {
         )
     }
 
+    /// Cache-placement axis (where capacity sits on the topology).
+    pub fn placements(self, ps: &[CachePlacementSpec]) -> Self {
+        self.expand(
+            ps.iter()
+                .map(|&p| {
+                    (p.name().to_string(), move |sc: &mut Scenario| {
+                        sc.cache_placement = p
+                    })
+                })
+                .collect(),
+        )
+    }
+
     /// Network-condition axis.
     pub fn nets(self, ns: &[NetCondition]) -> Self {
         self.expand(
@@ -1120,6 +1168,49 @@ mod tests {
             .cache_bytes(0)
             .build()
             .is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_interior_placement_on_direct_wan() {
+        for p in [
+            CachePlacementSpec::Regional,
+            CachePlacementSpec::Core,
+            CachePlacementSpec::All,
+        ] {
+            let err = Scenario::builder()
+                .delivery(Delivery::DirectWan)
+                .model(ModelSpec::none())
+                .cache_placement(p)
+                .build()
+                .unwrap_err();
+            assert_eq!(
+                err,
+                ScenarioError::PlacementWithoutFramework { placement: p.name() }
+            );
+        }
+        // Edge placement is the direct-WAN-compatible default.
+        assert!(Scenario::builder()
+            .delivery(Delivery::DirectWan)
+            .model(ModelSpec::none())
+            .cache_placement(CachePlacementSpec::Edge)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn placement_axis_expands_and_echoes() {
+        let grid = ScenarioGrid::new(Scenario::preset(Strategy::CacheOnly))
+            .placements(&CachePlacementSpec::ALL);
+        assert_eq!(grid.len(), 4);
+        let labels: Vec<String> = grid.cells().iter().map(|(l, _)| l.join("/")).collect();
+        assert_eq!(labels, ["edge", "regional", "core", "all"]);
+        let sc = &grid.cells()[2].1;
+        assert_eq!(sc.cache_placement, CachePlacementSpec::Core);
+        let echo = sc.to_json();
+        assert_eq!(
+            echo.get("cache_placement").unwrap().as_str(),
+            Some("core")
+        );
     }
 
     #[test]

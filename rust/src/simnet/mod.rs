@@ -18,5 +18,6 @@ pub mod topology;
 pub use engine::{CalendarQueue, EventQueue, HeapEventQueue};
 pub use flow::{Completed, FlowId, FlowSim, Hop, LinkId, Pipe, Route};
 pub use topology::{
-    NetCondition, TierLink, Topology, TopologyKind, N_CLIENT_DTNS, N_DTNS, SERVER, TIER_LABELS,
+    CacheSite, NetCondition, TierLink, Topology, TopologyKind, N_CLIENT_DTNS, N_DTNS, SERVER,
+    TIER_LABELS,
 };

@@ -188,6 +188,20 @@ pub struct TierLink {
     pub to: usize,
 }
 
+/// An interior node that can host a shared cache tier (DESIGN.md §12).
+/// The star has none; the hierarchical preset exposes its two regional
+/// hubs; the federation preset exposes the DMZ export DTN (`core`) and
+/// the two federation caches (`regional`).  Listed in route order from
+/// the origin outward, so a requester's tier chain is the subsequence
+/// of sites on its BFS route toward [`SERVER`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheSite {
+    /// Tier label, one of [`TIER_LABELS`].
+    pub tier: &'static str,
+    /// Node index in this topology.
+    pub node: usize,
+}
+
 /// A routed network: direct-link capacity matrix, hop-count-shortest
 /// next-hop table, per-continent commodity WAN rates, and tier labels
 /// on interior links.
@@ -210,6 +224,9 @@ pub struct Topology {
     user_edge: f64,
     /// Directed interior links with tier labels (empty on the star).
     tiers: Vec<TierLink>,
+    /// Interior nodes that can host a shared cache tier (empty on the
+    /// star).
+    sites: Vec<CacheSite>,
 }
 
 /// Client DTN → server bandwidth in Gbps (Fig. 8 reconstruction:
@@ -244,7 +261,7 @@ impl Topology {
                 bw[j * n + i] = bw[i * n + j];
             }
         }
-        Self::assemble(n, bw, cond, wan_mbps, Vec::new())
+        Self::assemble(n, bw, cond, wan_mbps, Vec::new(), Vec::new())
     }
 
     /// Three-tier hierarchy: observatory core (node 0) — two regional
@@ -271,7 +288,11 @@ impl Topology {
             ("core", SERVER, hub_a),
             ("core", SERVER, hub_b),
         ]);
-        Self::assemble(n, bw, cond, wan_mbps, tiers)
+        let sites = vec![
+            CacheSite { tier: "regional", node: hub_a },
+            CacheSite { tier: "regional", node: hub_b },
+        ];
+        Self::assemble(n, bw, cond, wan_mbps, tiers, sites)
     }
 
     /// OSDF-style federation: observatory origin (node 0) exports
@@ -307,7 +328,12 @@ impl Topology {
             ("regional", dmz, cache_a),
             ("regional", dmz, cache_b),
         ]);
-        Self::assemble(n, bw, cond, wan_mbps, tiers)
+        let sites = vec![
+            CacheSite { tier: "core", node: dmz },
+            CacheSite { tier: "regional", node: cache_a },
+            CacheSite { tier: "regional", node: cache_b },
+        ];
+        Self::assemble(n, bw, cond, wan_mbps, tiers, sites)
     }
 
     fn assemble(
@@ -316,6 +342,7 @@ impl Topology {
         cond: NetCondition,
         wan_mbps: &[f64; N_CLIENT_DTNS],
         tiers: Vec<TierLink>,
+        sites: Vec<CacheSite>,
     ) -> Self {
         let mut wan = vec![0.0; n];
         for (i, mbps) in wan_mbps.iter().enumerate() {
@@ -353,6 +380,7 @@ impl Topology {
             wan,
             user_edge: gbps_to_bytes_per_sec(USER_EDGE_GBPS),
             tiers,
+            sites,
         }
     }
 
@@ -427,6 +455,12 @@ impl Topology {
     /// Directed interior links with tier labels (empty on the star).
     pub fn tier_links(&self) -> &[TierLink] {
         &self.tiers
+    }
+
+    /// Interior nodes that can host a shared cache tier (empty on the
+    /// star), origin-outward.
+    pub fn cache_sites(&self) -> &[CacheSite] {
+        &self.sites
     }
 }
 
@@ -518,6 +552,7 @@ mod tests {
             }
         }
         assert!(t.tier_links().is_empty());
+        assert!(t.cache_sites().is_empty());
     }
 
     #[test]
@@ -596,6 +631,52 @@ mod tests {
         // Same-region peer short-circuits through the regional cache.
         assert_eq!(t.route(2, 3).hops.len(), 2);
         assert_eq!(t.route(1, 6).hops.len(), 4);
+    }
+
+    #[test]
+    fn cache_sites_sit_on_routes_toward_the_server() {
+        // Every cache site must lie on some client's route to the
+        // origin, labels must come from TIER_LABELS, and the
+        // origin-outward declaration order must match hop order on the
+        // routes that traverse them.
+        let hier = Topology::hierarchical(NetCondition::Best, &WAN);
+        assert_eq!(
+            hier.cache_sites(),
+            &[
+                CacheSite { tier: "regional", node: 7 },
+                CacheSite { tier: "regional", node: 8 },
+            ]
+        );
+        let fed = Topology::federation(NetCondition::Best, &WAN, 80.0, 40.0, 20.0);
+        assert_eq!(
+            fed.cache_sites(),
+            &[
+                CacheSite { tier: "core", node: 7 },
+                CacheSite { tier: "regional", node: 8 },
+                CacheSite { tier: "regional", node: 9 },
+            ]
+        );
+        for t in [&hier, &fed] {
+            for site in t.cache_sites() {
+                assert!(TIER_LABELS.contains(&site.tier), "{}", site.tier);
+                let on_a_route = t.client_dtns().any(|c| {
+                    let mut at = c;
+                    let mut seen = false;
+                    while at != SERVER {
+                        at = t.next_hop[at * t.n + SERVER];
+                        seen |= at == site.node;
+                    }
+                    seen
+                });
+                assert!(on_a_route, "site {} off every client route", site.node);
+            }
+        }
+        // Federation edge 1's chain toward the origin is regional cache
+        // (8) then DMZ (7): nearest tier first when walking the route.
+        let r = fed.route(1, SERVER);
+        let (_, first) = fed.link_ends(r.hops[0].link);
+        let (_, second) = fed.link_ends(r.hops[1].link);
+        assert_eq!((first, second), (8, 7));
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use obsd::cache::policy::PolicyKind;
 use obsd::experiments::{ExpId, ALL_IDS, EXTRA_IDS};
 use obsd::prefetch::Strategy;
-use obsd::scenario::{ArrivalMode, Delivery, ModelSpec};
+use obsd::scenario::{ArrivalMode, CachePlacementSpec, Delivery, ModelSpec};
 use obsd::simnet::{NetCondition, TopologyKind};
 use obsd::util::parse::normalize;
 
@@ -97,6 +97,24 @@ fn delivery_round_trips() {
     }
     let msg = "carrier-pigeon".parse::<Delivery>().unwrap_err().to_string();
     for alias in ["direct-wan", "wan", "direct", "framework", "dtn"] {
+        assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
+    }
+}
+
+#[test]
+fn cache_placement_round_trips() {
+    for p in CachePlacementSpec::ALL {
+        for sp in spellings(p.name()) {
+            assert_eq!(sp.parse::<CachePlacementSpec>(), Ok(p), "{sp}");
+        }
+    }
+    // Tier-flavored synonyms: the storage layer a placement funds.
+    assert_eq!("dtn".parse::<CachePlacementSpec>(), Ok(CachePlacementSpec::Edge));
+    assert_eq!("region".parse::<CachePlacementSpec>(), Ok(CachePlacementSpec::Regional));
+    assert_eq!("dmz".parse::<CachePlacementSpec>(), Ok(CachePlacementSpec::Core));
+    assert_eq!("split".parse::<CachePlacementSpec>(), Ok(CachePlacementSpec::All));
+    let msg = "everywhere-else".parse::<CachePlacementSpec>().unwrap_err().to_string();
+    for alias in ["edge", "dtn", "regional", "region", "core", "dmz", "all", "split"] {
         assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
     }
 }

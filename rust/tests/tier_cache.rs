@@ -1,0 +1,267 @@
+//! Integration tests for the tiered cache fabric (DESIGN.md §12):
+//! placement parity, conservation accounting, the sampled
+//! reuse-distance tracker's oracle, and the cache-depth headline.
+//!
+//! The parity tests are the cross-layer counterpart of the in-crate
+//! coordinator tests: they go through the full Scenario → Runner →
+//! RunParams lowering, so a placement leak anywhere in that chain
+//! (builder default, `run_params`, grid expansion) shows up as a
+//! non-empty `diff_bits`.
+
+use obsd::cache::reuse::{oracle_histogram, ReuseTracker};
+use obsd::cache::ChunkKey;
+use obsd::prefetch::Strategy;
+use obsd::scenario::{ArrivalMode, CachePlacementSpec, Runner, Scenario};
+use obsd::simnet::TopologyKind;
+use obsd::trace::{generator, presets, StreamId, Trace};
+use obsd::util::prop;
+
+fn small_trace(name: &str, scale: f64, days: f64) -> Trace {
+    let mut cfg = presets::by_name(name).unwrap();
+    cfg.scale = scale;
+    cfg.duration_days = days;
+    generator::generate(&cfg)
+}
+
+fn placed(
+    strategy: Strategy,
+    topology: TopologyKind,
+    placement: CachePlacementSpec,
+) -> Scenario {
+    let mut sc = Scenario::preset(strategy);
+    sc.topology = topology;
+    sc.cache_placement = placement;
+    sc
+}
+
+// ---------------------------------------------------------------------------
+// Parity: edge placement is the pre-tier behavior
+// ---------------------------------------------------------------------------
+
+#[test]
+fn explicit_edge_placement_is_the_default_for_every_preset() {
+    // All five paper presets × both deployment shapes × both arrival
+    // modes: spelling out `--cache-placement edge` must be bit-identical
+    // to not passing the flag at all (edge is the legacy placement).
+    for strategy in Strategy::ALL {
+        for topology in [TopologyKind::VdcStar, TopologyKind::federation_default()] {
+            for arrival in [ArrivalMode::Materialized, ArrivalMode::Streaming] {
+                let mut base = Scenario::preset(strategy);
+                base.topology = topology;
+                base.arrival = arrival;
+                let mut explicit = base.clone();
+                explicit.cache_placement = CachePlacementSpec::Edge;
+                let a = Runner::new().run(&base).unwrap().metrics;
+                let b = Runner::new().run(&explicit).unwrap().metrics;
+                let diff = a.diff_bits(&b);
+                assert!(
+                    diff.is_empty(),
+                    "{} / {} / {}: {diff:?}",
+                    strategy.name(),
+                    topology.name(),
+                    arrival.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn placements_without_a_matching_tier_degrade_to_edge() {
+    // The star topology has no interior cache sites, so every placement
+    // degrades to edge there; `core` additionally degrades on the
+    // hierarchical topology (regional hubs only).  Degraded runs must
+    // be bit-identical to edge, through the full scenario lowering.
+    let mut cells: Vec<(TopologyKind, CachePlacementSpec)> = vec![
+        (TopologyKind::Hierarchical, CachePlacementSpec::Core),
+    ];
+    for p in [CachePlacementSpec::Regional, CachePlacementSpec::Core, CachePlacementSpec::All] {
+        cells.push((TopologyKind::VdcStar, p));
+    }
+    for (topology, placement) in cells {
+        let edge = Runner::new()
+            .run(&placed(Strategy::CacheOnly, topology, CachePlacementSpec::Edge))
+            .unwrap()
+            .metrics;
+        let degraded = Runner::new()
+            .run(&placed(Strategy::CacheOnly, topology, placement))
+            .unwrap()
+            .metrics;
+        let diff = edge.diff_bits(&degraded);
+        assert!(diff.is_empty(), "{}/{}: {diff:?}", topology.name(), placement.name());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conservation accounting (satellite: property test)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tier_accounting_conserves_bytes_and_hits() {
+    // For every placement, on both tiered topologies and with and
+    // without prefetching: per-tier hits sum to the total hit count,
+    // per-tier byte-hits sum to the cache-served volume, cross-user
+    // hits never exceed hits, and origin + cache volume accounts for
+    // every delivered byte (each request contributes `bytes.max(1.0)`
+    // to `sum_bytes`, so zero-byte catalog answers leave at most one
+    // unit of slack apiece).  Under `--features sim-audit` the settle
+    // path re-checks the hit invariants on every account.
+    let trace = small_trace("ooi", 0.2, 1.5);
+    for strategy in [Strategy::CacheOnly, Strategy::Hpm] {
+        for topology in [TopologyKind::Hierarchical, TopologyKind::federation_default()] {
+            for placement in CachePlacementSpec::ALL {
+                let sc = placed(strategy, topology, placement);
+                let m = Runner::new().run_trace(&trace, &sc).metrics;
+                let label = format!(
+                    "{}/{}/{}",
+                    strategy.name(),
+                    topology.name(),
+                    placement.name()
+                );
+                assert_eq!(
+                    m.requests_total as usize,
+                    trace.requests.len(),
+                    "{label}: not every request finalized"
+                );
+                let hits: u64 = m.tier_hits.iter().map(|t| t.hits).sum();
+                assert_eq!(hits, m.cache_hit_chunks, "{label}: tier hits != total");
+                for t in &m.tier_hits {
+                    assert!(
+                        t.cross_user_hits <= t.hits,
+                        "{label}: tier {} cross {} > hits {}",
+                        t.tier,
+                        t.cross_user_hits,
+                        t.hits
+                    );
+                }
+                let byte_hits: f64 = m.tier_hits.iter().map(|t| t.byte_hits).sum();
+                assert!(
+                    (byte_hits - m.cache_bytes).abs() <= 1e-6 * m.cache_bytes.max(1.0),
+                    "{label}: tier byte-hits {byte_hits} != cache volume {}",
+                    m.cache_bytes
+                );
+                let slack = m.sum_bytes - (m.origin_bytes + m.cache_bytes);
+                assert!(
+                    slack >= -1e-6 * m.sum_bytes,
+                    "{label}: delivered < origin + cached ({slack})"
+                );
+                assert!(
+                    slack <= m.requests_total as f64 + 1e-6 * m.sum_bytes,
+                    "{label}: unaccounted bytes ({slack})"
+                );
+                let frac = m.cross_user_hit_fraction();
+                assert!((0.0..=1.0).contains(&frac), "{label}: frac {frac}");
+            }
+        }
+    }
+}
+
+#[test]
+fn no_cache_runs_report_no_tier_activity() {
+    // Direct-WAN delivery has no cache anywhere, so unlike framework
+    // runs (which always report at least the "edge" tier) the tier
+    // table must come out empty.  Edge is the only placement valid on
+    // direct-WAN — interior placements are rejected by `validate()`,
+    // pinned in the scenario builder tests.
+    let trace = small_trace("ooi", 0.2, 1.5);
+    let sc = placed(
+        Strategy::NoCache,
+        TopologyKind::federation_default(),
+        CachePlacementSpec::Edge,
+    );
+    let m = Runner::new().run_trace(&trace, &sc).metrics;
+    assert!(m.tier_hits.is_empty());
+    assert_eq!(m.cache_hit_chunks, 0);
+    assert!((m.origin_fraction() - 1.0).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// Reuse-distance tracker vs the naive oracle (satellite: property test)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reuse_tracker_matches_oracle_on_random_traces() {
+    // Random traces over a small key universe so re-references (and the
+    // LRU-adversarial pattern, sequential scans longer than the working
+    // set) are dense.  The incremental sampled tracker must agree with
+    // the O(n²) full-trace oracle bitwise at every sampling rate.
+    prop::check("reuse-tracker-oracle", |rng| {
+        let n_streams = 1 + rng.below(4) as u32;
+        let universe = 4 + rng.below(28) as u64;
+        let len = 1 + rng.below(300);
+        let mut trace: Vec<ChunkKey> = Vec::with_capacity(len);
+        while trace.len() < len {
+            if rng.below(4) == 0 {
+                // Scan segment: consecutive chunks of one stream —
+                // the eviction-heavy interleaving that defeats LRU.
+                let s = StreamId(rng.below(n_streams as usize) as u32);
+                let start = rng.below(universe as usize) as u64;
+                let span = 1 + rng.below(universe as usize) as u64;
+                for c in start..start + span {
+                    trace.push(ChunkKey { stream: s, chunk: c % universe });
+                }
+            } else {
+                trace.push(ChunkKey {
+                    stream: StreamId(rng.below(n_streams as usize) as u32),
+                    chunk: rng.below(universe as usize) as u64,
+                });
+            }
+        }
+        trace.truncate(len);
+        for rate in [1, 2, 8] {
+            let mut tracker = ReuseTracker::new(rate);
+            for key in &trace {
+                tracker.touch(key);
+            }
+            assert_eq!(
+                tracker.histogram(),
+                &oracle_histogram(&trace, rate),
+                "rate {rate}, len {len}, universe {universe}x{n_streams}"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Cache-depth headline (acceptance criterion)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn interior_placement_offloads_origin_at_equal_total_capacity() {
+    // The cache-depth sweep's headline, pinned as a test: on the
+    // federation topology with a capacity-starved cache, pooling the
+    // same total capacity at interior tiers serves cross-user re-reads
+    // the thrashing private edges cannot, so some interior placement
+    // beats edge-only on origin offload.
+    let trace = small_trace("ooi", 0.3, 2.0);
+    let run = |placement| {
+        let mut sc = placed(Strategy::CacheOnly, TopologyKind::federation_default(), placement);
+        sc.cache_bytes = 256 << 20;
+        Runner::new().run_trace(&trace, &sc).metrics
+    };
+    let edge = run(CachePlacementSpec::Edge);
+    assert!(edge.origin_bytes > 0.0);
+    let interior: Vec<_> = [
+        CachePlacementSpec::Regional,
+        CachePlacementSpec::Core,
+        CachePlacementSpec::All,
+    ]
+    .into_iter()
+    .map(|p| (p.name(), run(p)))
+    .collect();
+    let best = interior
+        .iter()
+        .min_by(|a, b| a.1.origin_bytes.total_cmp(&b.1.origin_bytes))
+        .unwrap();
+    assert!(
+        best.1.origin_bytes < edge.origin_bytes,
+        "no interior placement beat edge: edge {} best {} ({})",
+        edge.origin_bytes,
+        best.1.origin_bytes,
+        best.0
+    );
+    // The win comes from sharing: the winning tier serves hits first
+    // inserted by other users.
+    let cross: u64 = best.1.tier_hits.iter().map(|t| t.cross_user_hits).sum();
+    assert!(cross > 0, "interior win without cross-user hits");
+}

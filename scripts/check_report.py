@@ -26,6 +26,7 @@ def check_report(label: str, doc: dict) -> None:
         "model",
         "policy",
         "cache_bytes",
+        "cache_placement",
         "topology",
         "net",
         "traffic_factor",
@@ -43,9 +44,18 @@ def check_report(label: str, doc: dict) -> None:
         "peak_flows",
         "peak_req_states",
         "interior_util",
+        "cache_hit_chunks",
+        "cross_user_hit_fraction",
+        "tier_hits",
     ):
         assert key in m, f"{label}: metrics missing '{key}'"
     assert m["requests_total"] > 0, f"{label}: run served no requests"
+    # Per-tier accounting must conserve: tier hit counts sum to the
+    # run's total hit count (DESIGN.md §12).
+    tier_hits = sum(t["hits"] for t in m["tier_hits"])
+    assert tier_hits == m["cache_hit_chunks"], (
+        f"{label}: tier hits {tier_hits} != cache_hit_chunks {m['cache_hit_chunks']}"
+    )
 
 
 def check(path: str) -> None:
