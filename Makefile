@@ -65,12 +65,14 @@ golden:
 	cd rust && UPDATE_GOLDEN=1 cargo test -q --test golden
 	cd rust && GOLDEN_STRICT=1 cargo test -q --test golden
 
-# Scenario smoke (wired into CI): one preset and one non-preset axis
-# combination (markov + gdsf + federation + streaming) run end-to-end
-# with `--quick --json`, plus two quick experiment grids over the worker
-# pool (--jobs 4) — the federation sweep and the cache-depth placement
-# sweep (the tiered-cache path).  scripts/check_report.py validates the
-# two simulate reports and every <id>.json RunReport array the grids emit.
+# Scenario smoke (wired into CI): one preset, one non-preset axis
+# combination (markov + gdsf + federation + streaming), and one faulted
+# run (flaky-links with retry/resume) end-to-end with `--quick --json`,
+# plus two quick experiment grids over the worker pool (--jobs 4) — the
+# federation sweep and the cache-depth placement sweep (the tiered-cache
+# path).  scripts/check_report.py validates the three simulate reports
+# and every <id>.json RunReport array the grids emit, including the
+# fault conservation identity (DESIGN.md §13).
 smoke: artifacts-quick
 	cd rust && cargo build --release
 	rust/target/release/repro simulate --observatory tiny --quick --json \
@@ -78,10 +80,14 @@ smoke: artifacts-quick
 	rust/target/release/repro simulate --observatory tiny --quick --json \
 		--model markov --policy gdsf --topology federation --streaming \
 		> /tmp/obsd_smoke_combo.json
+	rust/target/release/repro simulate --observatory tiny --quick --json \
+		--faults flaky-links --topology federation \
+		> /tmp/obsd_smoke_faults.json
 	rm -rf /tmp/obsd_smoke_grid
 	rust/target/release/repro experiment --id federation --quick --jobs 4 \
 		--out /tmp/obsd_smoke_grid
 	rust/target/release/repro experiment --id cache-depth --quick --jobs 4 \
 		--out /tmp/obsd_smoke_grid
 	python3 scripts/check_report.py /tmp/obsd_smoke_preset.json \
-		/tmp/obsd_smoke_combo.json /tmp/obsd_smoke_grid/*.json
+		/tmp/obsd_smoke_combo.json /tmp/obsd_smoke_faults.json \
+		/tmp/obsd_smoke_grid/*.json

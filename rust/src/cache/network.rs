@@ -217,6 +217,21 @@ impl CacheNetwork {
         self.audit_tick();
     }
 
+    /// Drop everything a node holds (fault injection: the node died
+    /// and comes back cold).  Entries leave in ascending key order, so
+    /// registry/inserter bookkeeping — and any policy state touched by
+    /// removal — mutates deterministically regardless of hash order.
+    /// Returns the number of entries dropped.
+    pub fn drop_node_contents(&mut self, node: usize) -> usize {
+        let mut keys: Vec<ChunkKey> = self.stores[node].iter().map(|(k, _)| *k).collect();
+        keys.sort_unstable();
+        let dropped = keys.len();
+        for k in &keys {
+            self.remove(node, k);
+        }
+        dropped
+    }
+
     /// Peers (excluding `node`) currently holding `key`, sorted by id
     /// (deterministic regardless of hash order).
     pub fn peers_with(&self, node: usize, key: &ChunkKey) -> Vec<usize> {
@@ -316,6 +331,23 @@ mod tests {
         net.insert(1, key(1), 100, Origin::Demand, 0.0);
         net.remove(1, &key(1));
         assert!(net.peers_with(0, &key(1)).is_empty());
+        net.check_registry();
+    }
+
+    #[test]
+    fn drop_node_contents_empties_one_node_only() {
+        let mut net = CacheNetwork::with_capacities(vec![0, 1000, 1000], PolicyKind::Lru, true);
+        net.insert_by(1, key(1), 100, Origin::Demand, 0.0, Some(UserId(1)));
+        net.insert_by(1, key(2), 100, Origin::Prefetch, 0.0, Some(UserId(2)));
+        net.insert_by(2, key(1), 100, Origin::Demand, 0.0, Some(UserId(3)));
+        assert_eq!(net.drop_node_contents(1), 2);
+        assert!(!net.contains(1, &key(1)));
+        assert!(!net.contains(1, &key(2)));
+        assert_eq!(net.first_inserter(1, &key(1)), None);
+        // The survivor node still holds and registers its copy.
+        assert!(net.contains(2, &key(1)));
+        assert_eq!(net.peers_with(0, &key(1)), vec![2]);
+        assert_eq!(net.drop_node_contents(1), 0);
         net.check_registry();
     }
 

@@ -23,6 +23,7 @@ use crate::cache::policy::PolicyKind;
 use crate::cache::reuse::{ReuseHistogram, ReuseTracker, DEFAULT_SAMPLE_RATE};
 use crate::cache::{chunk_bytes, chunks_for, ChunkKey, Origin};
 use crate::coordinator::slab::{ReqId, ReqSlab};
+use crate::faults::{FaultEvent, FaultKind, FaultSpec};
 use crate::metrics::{RunMetrics, ServedBy, TierHits};
 use crate::simnet::topology::CacheSite;
 use crate::placement::kmeans::{ClusterBackend, RustKmeans};
@@ -76,6 +77,11 @@ pub struct RunParams {
     /// [`CacheSite`] nodes.  A placement naming a tier the topology
     /// does not have degrades to `Edge`.
     pub cache_placement: CachePlacementSpec,
+    /// Fault-injection axis (DESIGN.md §13): a named fault profile
+    /// plus the retry/resume policy severed transfers ride.  The
+    /// `none` profile keeps the engine bit-identical to a build
+    /// without the fault subsystem.
+    pub faults: FaultSpec,
     pub seed: u64,
 }
 
@@ -133,6 +139,9 @@ impl SimConfig {
             // pinned to the edge deployment, which is exactly what the
             // preset parity tests compare the scenario path against.
             cache_placement: CachePlacementSpec::Edge,
+            // Same rationale: the closed grid predates the fault axis
+            // and always runs a healthy network.
+            faults: FaultSpec::default(),
             seed: self.seed,
         }
     }
@@ -167,6 +176,43 @@ enum Event {
     ServiceDone { task: usize },
     Rebuild,
     Recluster,
+    /// A scheduled fault becomes active (index into the run's fault
+    /// timeline).  Pushed up front, so at equal timestamps it fires
+    /// before any reactive event queued during the run (FIFO seq) and
+    /// before arrivals (events outrank arrivals on spine ties): the
+    /// weather at time `t` is in force for everything happening at `t`.
+    FaultOnset(usize),
+    /// The matching repair: capacities restore, routes re-resolve.
+    FaultRepair(usize),
+    /// A severed demand transfer retries after its backoff: the
+    /// remainder re-resolves a source and resumes.
+    RetryFire(RetryXfer),
+}
+
+/// A severed demand transfer waiting out its backoff: everything
+/// needed to re-resolve a source at fire time and resume from the
+/// bytes already settled (DESIGN.md §13).
+struct RetryXfer {
+    req: ReqId,
+    dest: usize,
+    user: UserId,
+    chunks: Vec<ChunkKey>,
+    /// Bytes still to deliver (resume, not restart).
+    bytes: f64,
+    /// Retries consumed before this one was scheduled.
+    attempt: u32,
+    source: RetrySource,
+}
+
+/// Where the severed transfer had been sourcing from.  Cache sources
+/// (interior tier or peer DTN) resume from the same node when it is
+/// still routable and still holds the chunks; otherwise — and always
+/// for origin flows — the remainder ships from the observatory, which
+/// is the origin-traffic shift the degraded sweep measures.
+#[derive(Clone, Copy)]
+enum RetrySource {
+    Origin,
+    Cache { node: usize },
 }
 
 /// One step popped off the unified event spine: the three time sources
@@ -240,10 +286,13 @@ enum FlowCtx {
     /// serving part of demand request `req`.
     Serve { req: ReqId, dest: usize, user: UserId, chunks: Vec<ChunkKey> },
     /// Interior cache tier → user's DTN, serving part of demand
-    /// request `req` (settled only on the links between them).
-    TierServe { req: ReqId, dest: usize, user: UserId, chunks: Vec<ChunkKey> },
-    /// Peer DTN → user's DTN, serving part of demand request `req`.
-    Peer { req: ReqId, dest: usize, user: UserId, chunks: Vec<ChunkKey> },
+    /// request `req` (settled only on the links between them).  `src`
+    /// is the serving site, kept so a severed transfer can try to
+    /// resume from the same source.
+    TierServe { req: ReqId, dest: usize, user: UserId, chunks: Vec<ChunkKey>, src: usize },
+    /// Peer DTN `src` → user's DTN, serving part of demand request
+    /// `req`.
+    Peer { req: ReqId, dest: usize, user: UserId, chunks: Vec<ChunkKey>, src: usize },
     /// Observatory → DTN, model-predicted pre-fetch.
     Prefetch { dest: usize, user: UserId, chunks: Vec<ChunkKey> },
     /// Observatory → DTN, streaming push.
@@ -310,6 +359,27 @@ pub struct Framework<'t> {
     tier_chain: Vec<Vec<usize>>,
     /// Per-node sampled reuse-distance trackers (empty when not tiered).
     reuse: Vec<ReuseTracker>,
+    /// Fault injection is live this run (non-empty timeline): the
+    /// master gate — like `tiered`, every fault branch keys off this
+    /// one flag so a healthy run stays byte-for-byte the pre-fault
+    /// engine (no schedule, no baseline clone, no per-flow lookups).
+    faulty: bool,
+    /// The run's expanded fault timeline, sorted by onset (empty
+    /// unless `faulty`).
+    fault_schedule: Vec<FaultEvent>,
+    /// Which timeline entries are currently in force.
+    fault_active: Vec<bool>,
+    /// Healthy-capacity topology, the baseline effective bandwidths
+    /// are computed from (`None` unless `faulty`).
+    topo_baseline: Option<Topology>,
+    /// Count of active faults — nonzero means the run is inside a
+    /// degraded window.
+    active_faults: usize,
+    /// When the current degraded window opened.
+    degraded_since: f64,
+    /// Retries already consumed by an in-flight flow (retry flows
+    /// only; absent = first attempt).  Unused unless `faulty`.
+    retry_attempt: HashMap<FlowId, u32>,
     pub metrics: RunMetrics,
     now: f64,
 }
@@ -520,6 +590,16 @@ fn run_inner<'t>(
     };
     let tiered = !sites.is_empty();
     let caches = build_caches(&topology, cfg, &sites);
+    // Fault axis: expand the profile into this run's timeline.  A
+    // healthy spec (or an empty expansion) leaves `faulty` off and the
+    // engine bit-identical to the pre-fault build.
+    let fault_schedule = if cfg.faults.is_none() {
+        Vec::new()
+    } else {
+        cfg.faults.schedule(&topology, trace.duration, cfg.seed)
+    };
+    let faulty = !fault_schedule.is_empty();
+    let topo_baseline = faulty.then(|| topology.clone());
     // Tier label table: "edge" first, interior tiers in site order.
     let mut tier_labels: Vec<&'static str> = vec!["edge"];
     let mut node_tier = vec![0usize; n_nodes];
@@ -534,20 +614,10 @@ fn run_inner<'t>(
         node_tier[s.node] = ti;
     }
     // Per-client chain: funded sites on the route toward the origin,
-    // nearest the client first — the tier resolution order.
-    let mut tier_chain = vec![Vec::new(); n_nodes];
-    if tiered {
-        for (dtn, chain) in tier_chain.iter_mut().enumerate().take(crate::simnet::N_CLIENT_DTNS + 1).skip(1) {
-            let mut at = dtn;
-            for hop in topology.route(dtn, SERVER).hops {
-                let (a, b) = topology.link_ends(hop.link);
-                at = if a == at { b } else { a };
-                if sites.iter().any(|s| s.node == at) {
-                    chain.push(at);
-                }
-            }
-        }
-    }
+    // nearest the client first — the tier resolution order.  Built by
+    // `rebuild_tier_chain` below (and re-run whenever a fault mutates
+    // the routes).
+    let tier_chain = vec![Vec::new(); n_nodes];
     let tier_acc = vec![TierAccum::default(); tier_labels.len()];
     let reuse = if tiered {
         vec![ReuseTracker::new(DEFAULT_SAMPLE_RATE); n_nodes]
@@ -579,11 +649,20 @@ fn run_inner<'t>(
         tier_acc,
         tier_chain,
         reuse,
+        faulty,
+        fault_active: vec![false; fault_schedule.len()],
+        fault_schedule,
+        topo_baseline,
+        active_faults: 0,
+        degraded_since: 0.0,
+        retry_attempt: HashMap::new(),
         metrics: RunMetrics::new(),
         now: 0.0,
         cfg: cfg.clone(),
         trace,
     };
+    fw.rebuild_tier_chain();
+    fw.metrics.faults_injected = fw.fault_schedule.len() as u64;
     fw.run_loop();
     let mut metrics = fw.metrics;
     metrics.recall = fw.caches.total_recall();
@@ -648,6 +727,23 @@ fn run_inner<'t>(
             }
         }
     }
+    #[cfg(feature = "sim-audit")]
+    {
+        // Sever conservation (§13): every severed byte is either
+        // re-fetched by a retry or abandoned against the budget.
+        let moved = metrics.bytes_refetched + metrics.bytes_abandoned;
+        assert!(
+            (metrics.bytes_severed - moved).abs() <= 1e-6 * metrics.bytes_severed.max(1.0),
+            "audit: severed bytes {} != refetched {} + abandoned {}",
+            metrics.bytes_severed,
+            metrics.bytes_refetched,
+            metrics.bytes_abandoned
+        );
+        assert!(
+            metrics.requests_failed <= metrics.requests_total,
+            "audit: more failed requests than requests"
+        );
+    }
     metrics.wall_secs = wall_start.elapsed().as_secs_f64();
     metrics
 }
@@ -680,6 +776,15 @@ impl<'t> Framework<'t> {
                 t += self.cfg.recluster_every;
             }
         }
+        if self.faulty {
+            // The whole timeline enqueues before the loop starts, so
+            // fault edges take the earliest FIFO sequence numbers and
+            // outrank every reactive event queued at the same instant.
+            for (i, ev) in self.fault_schedule.iter().enumerate() {
+                self.events.push(ev.at, Event::FaultOnset(i));
+                self.events.push(ev.until, Event::FaultRepair(i));
+            }
+        }
 
         // Main DES loop: the unified event spine pops the earliest of
         // (sorted arrivals, dynamic event queue, indexed completions).
@@ -698,6 +803,11 @@ impl<'t> Framework<'t> {
             if self.now > horizon {
                 break; // safety: runaway schedules
             }
+        }
+        if self.faulty && self.active_faults > 0 {
+            // Degraded window still open when the spine drained (a
+            // repair past the horizon): close it at the loop's end.
+            self.metrics.degraded_secs += self.now - self.degraded_since;
         }
     }
 
@@ -764,7 +874,239 @@ impl<'t> Framework<'t> {
                 }
             }
             Event::Recluster => self.on_recluster(),
+            Event::FaultOnset(i) => self.on_fault_edge(i, true),
+            Event::FaultRepair(i) => self.on_fault_edge(i, false),
+            Event::RetryFire(x) => self.on_retry_fire(x),
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Fault injection (DESIGN.md §13) — all paths gated on `faulty`
+    // ------------------------------------------------------------------
+
+    /// One edge of a scheduled fault: onset activates it, repair
+    /// deactivates it; both re-derive the effective network state.
+    /// Node churn additionally drops the node's cache contents at
+    /// onset (the data is gone when the node returns).
+    fn on_fault_edge(&mut self, i: usize, onset: bool) {
+        debug_assert_ne!(self.fault_active[i], onset, "fault edge applied twice");
+        self.fault_active[i] = onset;
+        if onset {
+            if self.active_faults == 0 {
+                self.degraded_since = self.now;
+            }
+            self.active_faults += 1;
+            if let FaultKind::NodeDown { node } = self.fault_schedule[i].kind {
+                self.caches.drop_node_contents(node);
+            }
+        } else {
+            self.active_faults -= 1;
+            if self.active_faults == 0 {
+                self.metrics.degraded_secs += self.now - self.degraded_since;
+            }
+        }
+        self.apply_fault_state();
+    }
+
+    /// Re-derive every link's effective capacity from the healthy
+    /// baseline and the set of active faults, then reconcile the
+    /// world: capacity changes apply to the topology *and* to resident
+    /// flows with the same `f64` (the flow sim's capacity-coherence
+    /// audit compares bits), flows on dead links sever, routes and
+    /// tier chains re-resolve.
+    fn apply_fault_state(&mut self) {
+        let base = self.topo_baseline.as_ref().expect("faulty run keeps a baseline");
+        let n = base.n_nodes();
+        // Fold the active set into a per-link view: weather dilations
+        // compound multiplicatively; an outage (or a dead endpoint)
+        // zeroes the link outright.
+        let mut dead_nodes = vec![false; n];
+        let mut dilation: HashMap<(usize, usize), f64> = HashMap::new();
+        let mut dead_links: HashSet<(usize, usize)> = HashSet::new();
+        for (i, ev) in self.fault_schedule.iter().enumerate() {
+            if !self.fault_active[i] {
+                continue;
+            }
+            match ev.kind {
+                FaultKind::Weather { a, b, factor } => {
+                    *dilation.entry((a.min(b), a.max(b))).or_insert(1.0) *= factor;
+                }
+                FaultKind::LinkDown { a, b } => {
+                    dead_links.insert((a.min(b), a.max(b)));
+                }
+                FaultKind::NodeDown { node } => dead_nodes[node] = true,
+            }
+        }
+        let mut severed: Vec<FlowId> = Vec::new();
+        for a in 0..n {
+            for b in (a + 1)..n {
+                let healthy = base.link(a, b);
+                if healthy <= 0.0 {
+                    continue;
+                }
+                let eff = if dead_nodes[a] || dead_nodes[b] || dead_links.contains(&(a, b)) {
+                    0.0
+                } else {
+                    healthy * dilation.get(&(a, b)).copied().unwrap_or(1.0)
+                };
+                if self.topology.link(a, b).to_bits() == eff.to_bits() {
+                    continue; // this link's state is already in force
+                }
+                if eff > 0.0 {
+                    self.topology.set_link_bw(a, b, eff);
+                    // The flow sim tracks each direction separately; a
+                    // dilated link with no resident flows is a no-op
+                    // there (future flows read the topology).
+                    self.flows.set_capacity(self.topology.link_id(a, b), eff, self.now);
+                    self.flows.set_capacity(self.topology.link_id(b, a), eff, self.now);
+                } else {
+                    // Dead link: collect the residents before the
+                    // capacity goes away, then sever them below.
+                    severed.extend(self.flows.flows_on(self.topology.link_id(a, b)));
+                    severed.extend(self.flows.flows_on(self.topology.link_id(b, a)));
+                    self.topology.set_link_bw(a, b, 0.0);
+                }
+            }
+        }
+        self.topology.rebuild_routes();
+        self.rebuild_tier_chain();
+        // A flow crossing two dead links appears twice: dedup, then
+        // sever in ascending id order for determinism.
+        severed.sort_unstable();
+        severed.dedup();
+        for fid in severed {
+            self.on_flow_severed(fid);
+        }
+    }
+
+    /// (Re-)derive each client's funded-chain sites from the current
+    /// routes: sites a client cannot currently route through drop off
+    /// its chain (requests fall through to peers or the origin) and
+    /// come back on repair.  On healthy runs this is called once, at
+    /// build, and reproduces the pre-fault chain exactly.
+    fn rebuild_tier_chain(&mut self) {
+        if !self.tiered {
+            return;
+        }
+        let sites = funded_sites(&self.topology, self.cfg.cache_placement);
+        for dtn in 1..=crate::simnet::N_CLIENT_DTNS {
+            let mut at = dtn;
+            let route = self.topology.route(dtn, SERVER);
+            let chain = &mut self.tier_chain[dtn];
+            chain.clear();
+            for hop in route.hops {
+                let (a, b) = self.topology.link_ends(hop.link);
+                at = if a == at { b } else { a };
+                if sites.iter().any(|s| s.node == at) {
+                    chain.push(at);
+                }
+            }
+        }
+    }
+
+    /// A resident flow lost its link.  Demand-serving transfers
+    /// consume a retry — re-enqueueing their remainder after the
+    /// policy's backoff — until the budget runs out, at which point
+    /// the request part is abandoned and the request fails.
+    /// Speculative transfers (prefetch, push, replication) are never
+    /// retried: their remainder is simply abandoned.
+    fn on_flow_severed(&mut self, fid: FlowId) {
+        let Some(sv) = self.flows.sever(fid, self.now) else {
+            return;
+        };
+        let Some(ctx) = self.flow_ctx.remove(&fid) else {
+            return;
+        };
+        let attempt = self.retry_attempt.remove(&fid).unwrap_or(0);
+        let remaining = sv.bytes_left;
+        self.metrics.flows_severed += 1;
+        self.metrics.bytes_severed += remaining;
+        match ctx {
+            FlowCtx::Serve { req, dest, user, chunks } => self.retry_or_fail(RetryXfer {
+                req,
+                dest,
+                user,
+                chunks,
+                bytes: remaining,
+                attempt,
+                source: RetrySource::Origin,
+            }),
+            FlowCtx::TierServe { req, dest, user, chunks, src }
+            | FlowCtx::Peer { req, dest, user, chunks, src } => self.retry_or_fail(RetryXfer {
+                req,
+                dest,
+                user,
+                chunks,
+                bytes: remaining,
+                attempt,
+                source: RetrySource::Cache { node: src },
+            }),
+            FlowCtx::Prefetch { dest, chunks, .. }
+            | FlowCtx::Push { dest, chunks, .. }
+            | FlowCtx::Replicate { dest, chunks } => {
+                self.metrics.bytes_abandoned += remaining;
+                for k in &chunks {
+                    self.inflight.remove(&(dest, *k));
+                }
+            }
+        }
+    }
+
+    /// Spend one retry on the severed remainder, or fail the request
+    /// when the budget is exhausted.  Either way the severed bytes are
+    /// accounted exactly once (the §13 conservation identity).
+    fn retry_or_fail(&mut self, x: RetryXfer) {
+        if x.attempt < self.cfg.faults.retry.budget {
+            self.metrics.retries += 1;
+            self.metrics.bytes_refetched += x.bytes;
+            let delay = self.cfg.faults.retry.backoff(x.attempt);
+            self.events.push(self.now + delay, Event::RetryFire(x));
+        } else {
+            self.metrics.bytes_abandoned += x.bytes;
+            self.req_slab.set_any_failed(x.req);
+            self.part_done(x.req);
+        }
+    }
+
+    /// A retry's backoff expired: re-resolve a source *now* (the fault
+    /// set has moved on since the sever) and resume the remainder.  A
+    /// cache source resumes only if it is still routable and still
+    /// holds every chunk; otherwise the remainder ships from the
+    /// observatory — over the DMZ when routable, else the commodity
+    /// WAN (availability over throughput: delivery degrades, it does
+    /// not stall).
+    fn on_retry_fire(&mut self, x: RetryXfer) {
+        let RetryXfer { req, dest, user, chunks, bytes, attempt, source } = x;
+        let bytes = bytes.max(1.0);
+        if let RetrySource::Cache { node } = source {
+            if self.topology.path_bw(node, dest) > 0.0
+                && chunks.iter().all(|k| self.caches.contains(node, k))
+            {
+                let pipe = self.dmz_pipe(node, dest);
+                let fid = self.flows.start(self.now, bytes, pipe);
+                self.retry_attempt.insert(fid, attempt + 1);
+                self.flow_ctx
+                    .insert(fid, FlowCtx::TierServe { req, dest, user, chunks, src: node });
+                return;
+            }
+            // The cache source died or lost the data: fall through —
+            // the remainder shifts to the origin, the degraded-mode
+            // origin-traffic signal the `degraded` sweep measures.
+        }
+        self.req_slab.set_any_origin(req);
+        self.metrics.origin_bytes += bytes;
+        if self.active_faults > 0 {
+            self.metrics.origin_bytes_degraded += bytes;
+        }
+        let pipe = match self.try_dmz_pipe(SERVER, dest) {
+            Some(p) => p,
+            None => Pipe::Dedicated {
+                rate: self.topology.wan(dest).max(1.0),
+            },
+        };
+        let fid = self.flows.start(self.now, bytes, pipe);
+        self.retry_attempt.insert(fid, attempt + 1);
+        self.flow_ctx.insert(fid, FlowCtx::Serve { req, dest, user, chunks });
     }
 
     fn on_arrival(&mut self, req: Request) {
@@ -934,6 +1276,7 @@ impl<'t> Framework<'t> {
                     dest: user_dtn,
                     user: req.user,
                     chunks: keys,
+                    src: site,
                 },
             );
             parts += 1;
@@ -951,6 +1294,7 @@ impl<'t> Framework<'t> {
                     dest: user_dtn,
                     user: req.user,
                     chunks: keys,
+                    src: peer,
                 },
             );
             parts += 1;
@@ -975,6 +1319,19 @@ impl<'t> Framework<'t> {
         let route = self.topology.route(src, dst);
         debug_assert!(!route.is_empty(), "no DMZ route {src} -> {dst}");
         Pipe::Path(route)
+    }
+
+    /// [`Framework::dmz_pipe`] that tolerates fault-induced
+    /// disconnection: `None` when no route currently exists, which is
+    /// only possible while an outage partitions the fabric (a healthy
+    /// topology always routes).
+    fn try_dmz_pipe(&self, src: usize, dst: usize) -> Option<Pipe> {
+        let route = self.topology.route(src, dst);
+        if route.is_empty() {
+            debug_assert!(self.faulty, "no DMZ route {src} -> {dst} on a healthy run");
+            return None;
+        }
+        Some(Pipe::Path(route))
     }
 
     /// Account one cache hit at `node` for `user`: per-tier hit and
@@ -1102,13 +1459,24 @@ impl<'t> Framework<'t> {
             wan_dtn: wan,
         } = t;
         self.metrics.origin_bytes += bytes;
+        if self.active_faults > 0 {
+            // Origin egress while any fault is in force — the traffic
+            // the degraded sweep tracks shifting back to the origin.
+            self.metrics.origin_bytes_degraded += bytes;
+        }
         let pipe = match wan {
             // NoCache: commodity WAN, dedicated per-flow rate.
             Some(dtn) => Pipe::Dedicated {
                 rate: self.topology.wan(dtn).max(1.0),
             },
-            // Framework: routed DMZ path to the destination DTN.
-            None => self.dmz_pipe(SERVER, dest),
+            // Framework: routed DMZ path to the destination DTN — or
+            // the commodity WAN while an outage has severed it.
+            None => match self.try_dmz_pipe(SERVER, dest) {
+                Some(p) => p,
+                None => Pipe::Dedicated {
+                    rate: self.topology.wan(dest).max(1.0),
+                },
+            },
         };
         let fid = self.flows.start(self.now, bytes.max(1.0), pipe);
         self.flow_ctx.insert(fid, FlowCtx::Serve { req, dest, user, chunks });
@@ -1169,12 +1537,19 @@ impl<'t> Framework<'t> {
         if chunks.is_empty() {
             return;
         }
+        // Speculative work is dropped, not rerouted, while an outage
+        // severs the DMZ path (demand will re-fetch on its own terms).
+        let Some(pipe) = self.try_dmz_pipe(SERVER, dest) else {
+            return;
+        };
         let bytes = per_chunk * chunks.len() as f64;
         for k in &chunks {
             self.inflight.insert((dest, *k));
         }
         self.metrics.origin_bytes += bytes;
-        let pipe = self.dmz_pipe(SERVER, dest);
+        if self.active_faults > 0 {
+            self.metrics.origin_bytes_degraded += bytes;
+        }
         let fid = self.flows.start(self.now, bytes, pipe);
         self.flow_ctx
             .insert(fid, FlowCtx::Prefetch { dest, user: p.user, chunks });
@@ -1201,18 +1576,22 @@ impl<'t> Framework<'t> {
             .filter(|k| !self.caches.contains(dest, k))
             .filter(|k| !self.inflight.contains(&(dest, *k)))
             .collect();
-        if !chunks.is_empty() {
+        if chunks.is_empty() {
+            self.registry.coalesced += 1;
+        } else if let Some(pipe) = self.try_dmz_pipe(SERVER, dest) {
             let bytes = per_chunk * chunks.len() as f64;
             for k in &chunks {
                 self.inflight.insert((dest, *k));
             }
             self.metrics.origin_bytes += bytes;
-            let pipe = self.dmz_pipe(SERVER, dest);
+            if self.active_faults > 0 {
+                self.metrics.origin_bytes_degraded += bytes;
+            }
             let fid = self.flows.start(self.now, bytes, pipe);
             self.flow_ctx.insert(fid, FlowCtx::Push { dest, user, chunks });
-        } else {
-            self.registry.coalesced += 1;
         }
+        // else: the DMZ path is severed — skip this tick's push; the
+        // subscription's next tick retries on its own cadence.
         // Next tick while the subscription lives.
         self.events
             .push(self.now + period, Event::StreamPush { user, stream });
@@ -1252,11 +1631,15 @@ impl<'t> Framework<'t> {
             moves.truncate(budget);
             budget = budget.saturating_sub(moves.len());
             for (from, key, size) in moves {
+                // Hub unreachable during an outage: skip the move (the
+                // budget was already spent — replication is best-effort).
+                let Some(pipe) = self.try_dmz_pipe(from, hub) else {
+                    continue;
+                };
                 self.inflight.insert((hub, key));
                 self.placement.replicated_bytes += size as f64;
                 self.placement.replicas_placed += 1;
                 self.metrics.placement_bytes += size as f64;
-                let pipe = self.dmz_pipe(from, hub);
                 let fid = self.flows.start(self.now, size as f64, pipe);
                 self.flow_ctx.insert(
                     fid,
@@ -1280,20 +1663,24 @@ impl<'t> Framework<'t> {
         let Some(ctx) = self.flow_ctx.remove(&fid) else {
             return;
         };
+        if self.faulty {
+            // A completed retry flow retires its attempt record.
+            self.retry_attempt.remove(&fid);
+        }
         match ctx {
             FlowCtx::Serve { req, dest, user, chunks } => {
                 self.insert_chunks_as(dest, &chunks, Origin::Demand, Some(user));
                 self.pass_through(dest, &chunks, user);
                 self.part_done(req);
             }
-            FlowCtx::TierServe { req, dest, user, chunks } => {
+            FlowCtx::TierServe { req, dest, user, chunks, .. } => {
                 // Tier → edge: fills only the requester's own store
                 // (a no-op under interior-only placements, where edge
                 // stores have zero capacity).
                 self.insert_chunks_as(dest, &chunks, Origin::Demand, Some(user));
                 self.part_done(req);
             }
-            FlowCtx::Peer { req, dest, user, chunks } => {
+            FlowCtx::Peer { req, dest, user, chunks, .. } => {
                 self.metrics.peer_throughput.add(done.throughput());
                 self.insert_chunks_as(dest, &chunks, Origin::Demand, Some(user));
                 self.part_done(req);
@@ -1371,6 +1758,18 @@ impl<'t> Framework<'t> {
         self.metrics.throughput.add(st.bytes.max(1.0) / elapsed);
         self.metrics.sum_bytes += st.bytes.max(1.0);
         self.metrics.sum_elapsed += elapsed;
+        if self.faulty {
+            if st.any_failed {
+                // Some part exhausted its retry budget: the request
+                // completes *degraded* (partial data) and is counted.
+                self.metrics.requests_failed += 1;
+            }
+            if self.active_faults > 0 {
+                // Availability-adjusted latency: what requests
+                // finishing inside a degraded window experienced.
+                self.metrics.degraded_latency.add(elapsed);
+            }
+        }
         let served = if st.any_origin {
             ServedBy::Observatory
         } else if st.any_peer {
@@ -1724,6 +2123,111 @@ mod tests {
         let materialized = run(&trace, &cfg);
         let streamed = run_streaming(&preset, &cfg);
         assert_metrics_eq(&materialized, &streamed, "traffic_factor=4");
+    }
+
+    /// Run a strategy with an explicit fault spec over the
+    /// capability-params entry (the path the scenario API lowers to).
+    fn run_faulted(
+        trace: &Trace,
+        strategy: Strategy,
+        topology: TopologyKind,
+        faults: crate::faults::FaultSpec,
+    ) -> RunMetrics {
+        let cfg = SimConfig {
+            strategy,
+            cache_bytes: 4 << 30,
+            topology,
+            rebuild_every: 6.0 * 3600.0,
+            recluster_every: 12.0 * 3600.0,
+            ..Default::default()
+        };
+        let mut params = cfg.params();
+        params.faults = faults;
+        run_core(
+            trace,
+            &params,
+            build_model(cfg.strategy, Box::new(RustArima::new())),
+            Box::new(RustKmeans),
+        )
+    }
+
+    #[test]
+    fn explicit_none_fault_spec_is_bit_identical() {
+        // The zero-fault pin: a `none` spec routed through the fault
+        // axis matches the legacy entry bit for bit (no schedule, no
+        // RNG draws, no stray branches).
+        let trace = tiny_trace();
+        let base = run_strategy(&trace, Strategy::CacheOnly);
+        let none = run_faulted(
+            &trace,
+            Strategy::CacheOnly,
+            TopologyKind::VdcStar,
+            crate::faults::FaultSpec::none(),
+        );
+        assert_metrics_eq(&base, &none, "explicit none fault spec");
+        assert_eq!(none.faults_injected, 0);
+        assert_eq!(none.flows_severed, 0);
+        assert_eq!(none.degraded_secs, 0.0);
+    }
+
+    #[test]
+    fn storm_completes_every_request_and_conserves_bytes() {
+        use crate::faults::{FaultProfile, FaultSpec};
+        let trace = tiny_trace();
+        let federation = TopologyKind::Federation {
+            core_gbps: 40.0,
+            regional_gbps: 20.0,
+            edge_gbps: 10.0,
+        };
+        let m = run_faulted(&trace, Strategy::Hpm, federation, FaultSpec::preset(FaultProfile::Storm));
+        assert_eq!(
+            m.requests_total as usize,
+            trace.requests.len(),
+            "every request still finalizes under the storm"
+        );
+        assert!(m.faults_injected > 0, "storm scheduled nothing");
+        assert!(m.degraded_secs > 0.0, "no degraded window opened");
+        let moved = m.bytes_refetched + m.bytes_abandoned;
+        assert!(
+            (m.bytes_severed - moved).abs() <= 1e-6 * m.bytes_severed.max(1.0),
+            "sever conservation: severed {} vs refetched {} + abandoned {}",
+            m.bytes_severed,
+            m.bytes_refetched,
+            m.bytes_abandoned
+        );
+        assert!(m.requests_failed <= m.requests_total);
+        // Deterministic replay: the same spec and seed reproduce the
+        // identical degraded run.
+        let again =
+            run_faulted(&trace, Strategy::Hpm, federation, FaultSpec::preset(FaultProfile::Storm));
+        assert_metrics_eq(&m, &again, "storm replay");
+    }
+
+    #[test]
+    fn retry_budget_never_fails_more_than_no_retry() {
+        use crate::faults::{FaultProfile, FaultSpec};
+        let trace = tiny_trace();
+        let federation = TopologyKind::Federation {
+            core_gbps: 40.0,
+            regional_gbps: 20.0,
+            edge_gbps: 10.0,
+        };
+        let spec = FaultSpec::preset(FaultProfile::Storm);
+        let with_retry = run_faulted(&trace, Strategy::CacheOnly, federation, spec);
+        let no_retry =
+            run_faulted(&trace, Strategy::CacheOnly, federation, spec.with_retry_budget(0));
+        assert_eq!(no_retry.retries, 0, "budget 0 must never retry");
+        assert!(
+            with_retry.failure_fraction() <= no_retry.failure_fraction(),
+            "retry {} vs no-retry {}",
+            with_retry.failure_fraction(),
+            no_retry.failure_fraction()
+        );
+        // Whatever no-retry severed, it abandoned in full.
+        assert!(
+            (no_retry.bytes_abandoned - no_retry.bytes_severed).abs()
+                <= 1e-6 * no_retry.bytes_severed.max(1.0)
+        );
     }
 
     #[test]

@@ -41,12 +41,16 @@ pub struct ReqFinal {
     pub bytes: f64,
     pub any_origin: bool,
     pub any_peer: bool,
+    /// Some portion of the request exhausted its retry budget and was
+    /// abandoned (fault injection; always false on healthy runs).
+    pub any_failed: bool,
     pub local_cache_bytes: f64,
     pub local_prefetch_bytes: f64,
 }
 
 const ANY_ORIGIN: u8 = 1;
 const ANY_PEER: u8 = 2;
+const ANY_FAILED: u8 = 4;
 
 /// Struct-of-arrays request-state slab with generation-checked slots.
 #[derive(Debug, Default)]
@@ -152,6 +156,15 @@ impl ReqSlab {
         self.flags[s] |= ANY_PEER;
     }
 
+    /// Mark a delivery failure (retry budget exhausted).  Tolerates a
+    /// stale handle: the abandoning flow may race its own request's
+    /// finalize, same as [`ReqSlab::dec_pending`].
+    pub fn set_any_failed(&mut self, id: ReqId) {
+        if let Some(s) = self.live_idx(id) {
+            self.flags[s] |= ANY_FAILED;
+        }
+    }
+
     pub fn set_pending_parts(&mut self, id: ReqId, n: u32) {
         let s = self.idx(id);
         self.pending_parts[s] = n;
@@ -180,6 +193,7 @@ impl ReqSlab {
             bytes: self.bytes[s],
             any_origin: self.flags[s] & ANY_ORIGIN != 0,
             any_peer: self.flags[s] & ANY_PEER != 0,
+            any_failed: self.flags[s] & ANY_FAILED != 0,
             local_cache_bytes: self.local_cache_bytes[s],
             local_prefetch_bytes: self.local_prefetch_bytes[s],
         })
@@ -205,7 +219,7 @@ mod tests {
         let fin = slab.free(a).expect("live");
         assert_eq!(fin.submitted, 1.5);
         assert_eq!(fin.bytes, 100.0);
-        assert!(fin.any_peer && !fin.any_origin);
+        assert!(fin.any_peer && !fin.any_origin && !fin.any_failed);
         assert_eq!(fin.local_cache_bytes, 40.0);
         assert_eq!(fin.local_prefetch_bytes, 60.0);
         assert_eq!(slab.live(), 0);
@@ -227,6 +241,19 @@ mod tests {
         }
         assert_eq!(slab.slots(), 8);
         assert_eq!(slab.live(), 0);
+    }
+
+    #[test]
+    fn failure_flag_roundtrips_and_tolerates_stale() {
+        let mut slab = ReqSlab::new();
+        let a = slab.alloc(0.0);
+        slab.set_any_failed(a);
+        let fin = slab.free(a).unwrap();
+        assert!(fin.any_failed);
+        // Stale handle: silently ignored, like dec_pending.
+        slab.set_any_failed(a);
+        let b = slab.alloc(1.0);
+        assert!(!slab.free(b).unwrap().any_failed);
     }
 
     #[test]

@@ -30,7 +30,8 @@ use anyhow::{bail, Result};
 use crate::cache::policy::PolicyKind;
 use crate::prefetch::Strategy;
 use crate::scenario::{
-    CachePlacementSpec, ModelSpec, RunReport, Runner, Scenario, ScenarioGrid, WorkloadSpec,
+    CachePlacementSpec, FaultProfile, FaultSpec, ModelSpec, RunReport, Runner, Scenario,
+    ScenarioGrid, WorkloadSpec,
 };
 use crate::simnet::{NetCondition, TopologyKind};
 use crate::trace::{generator, presets, Trace};
@@ -90,9 +91,9 @@ impl ExpOptions {
 /// experiments bench iterate it, and either sweep's cost would
 /// dominate a paper-figures run — invoke them explicitly with
 /// `--id traffic` / `--id scale`.
-pub const ALL_IDS: [&str; 17] = [
+pub const ALL_IDS: [&str; 18] = [
     "fig2", "table1", "table2", "fig3", "fig4", "fig9", "fig10", "fig11", "fig12", "table3",
-    "fig13", "table4", "table5", "headline", "policies", "federation", "cache-depth",
+    "fig13", "table4", "table5", "headline", "policies", "federation", "cache-depth", "degraded",
 ];
 
 /// Ids accepted by [`run_experiment`] but excluded from `all` (see
@@ -214,6 +215,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Result<String> {
         "policies" => policies(opts),
         "federation" => federation(opts),
         "cache-depth" => cache_depth(opts),
+        "degraded" => degraded(opts),
         "all" => {
             let mut out = String::new();
             for id in ALL_IDS {
@@ -999,6 +1001,93 @@ fn cache_depth(opts: &ExpOptions) -> Result<String> {
     Ok(t.render())
 }
 
+/// Extension: delivery under degraded infrastructure (DESIGN.md §13).
+/// Sweeps cache placement against the fault presets, pairing each
+/// profile with a no-retry twin (`retry_budget = 0`) so the value of
+/// the Globus-style retry/resume semantics is visible as the gap in
+/// failed-request fraction at identical fault schedules.
+fn degraded(opts: &ExpOptions) -> Result<String> {
+    let trace = build_trace("federation", opts)?;
+    let fault_axis: [(&str, FaultSpec); 7] = [
+        ("none", FaultSpec::none()),
+        ("flaky-links", FaultSpec::preset(FaultProfile::FlakyLinks)),
+        (
+            "flaky-links/no-retry",
+            FaultSpec::preset(FaultProfile::FlakyLinks).with_retry_budget(0),
+        ),
+        ("cache-churn", FaultSpec::preset(FaultProfile::CacheChurn)),
+        (
+            "cache-churn/no-retry",
+            FaultSpec::preset(FaultProfile::CacheChurn).with_retry_budget(0),
+        ),
+        ("storm", FaultSpec::preset(FaultProfile::Storm)),
+        (
+            "storm/no-retry",
+            FaultSpec::preset(FaultProfile::Storm).with_retry_budget(0),
+        ),
+    ];
+    let mut base = Scenario::preset(Strategy::Hpm);
+    base.topology = TopologyKind::federation_default();
+    base.workload = workload_for("federation", opts);
+    let sweep = ScenarioGrid::new(base)
+        .placements(&CachePlacementSpec::ALL)
+        .faults(&fault_axis);
+    let reports = sweep.run_all(&Runner::new(), &trace, opts.jobs);
+    let mut t = Table::new(
+        "Degraded-mode sweep — fault presets × cache placement (HPM on the federation)",
+    )
+    .header(&[
+        "Placement",
+        "Faults",
+        "Latency (s)",
+        "Degr. lat (s)",
+        "Failed frac",
+        "Retries",
+        "Origin vol",
+        "Origin degr.",
+        "Degr. (s)",
+    ]);
+    let mut csv = String::from(
+        "placement,faults,retry_budget,requests,failure_frac,retries,flows_severed,\
+         latency_secs,degraded_latency_secs,origin_bytes,origin_bytes_degraded,degraded_secs\n",
+    );
+    let n_f = fault_axis.len();
+    for (pi, placement) in CachePlacementSpec::ALL.into_iter().enumerate() {
+        for (fi, (label, spec)) in fault_axis.iter().enumerate() {
+            let m = &reports[pi * n_f + fi].metrics;
+            t.row(vec![
+                placement.name().to_string(),
+                label.to_string(),
+                format!("{:.2}", m.latency_secs()),
+                format!("{:.2}", m.degraded_latency_secs()),
+                format!("{:.4}", m.failure_fraction()),
+                m.retries.to_string(),
+                crate::util::fmt_bytes(m.origin_bytes),
+                crate::util::fmt_bytes(m.origin_bytes_degraded),
+                format!("{:.0}", m.degraded_secs),
+            ]);
+            let _ = writeln!(
+                csv,
+                "{},{label},{},{},{:.5},{},{},{:.3},{:.3},{:.0},{:.0},{:.1}",
+                placement.name(),
+                spec.retry.budget,
+                m.requests_total,
+                m.failure_fraction(),
+                m.retries,
+                m.flows_severed,
+                m.latency_secs(),
+                m.degraded_latency_secs(),
+                m.origin_bytes,
+                m.origin_bytes_degraded,
+                m.degraded_secs
+            );
+        }
+    }
+    write_csv(opts, "degraded.csv", &csv)?;
+    write_reports(opts, "degraded", &reports)?;
+    Ok(t.render())
+}
+
 /// Extension: all five eviction policies at the smallest cache size
 /// (the paper compares only LRU/LFU and defers the rest, §V-B1).
 fn policies(opts: &ExpOptions) -> Result<String> {
@@ -1165,6 +1254,61 @@ mod tests {
         assert_eq!(origin(0), origin(1));
         assert_eq!(origin(0), origin(2));
         assert_eq!(origin(0), origin(3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn degraded_runs_small() {
+        let dir = std::env::temp_dir().join("obsd_exp_degraded_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = ExpOptions {
+            scale: 0.05,
+            days_factor: 0.3,
+            out_dir: Some(dir.clone()),
+            seed: None,
+            jobs: 2,
+        };
+        let out = run_experiment("degraded", &opts).unwrap();
+        assert!(out.contains("Degraded-mode sweep"));
+        assert!(out.contains("storm"));
+        let csv = std::fs::read_to_string(dir.join("degraded.csv")).unwrap();
+        assert!(csv.starts_with("placement,faults,retry_budget"));
+        let json = std::fs::read_to_string(dir.join("degraded.json")).unwrap();
+        let v = Json::parse(&json).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 28, "4 placements × 7 fault variants");
+        // The scenario echo carries the fault axis.
+        let faults = |i: usize| arr[i].get("scenario").unwrap().get("faults").unwrap();
+        assert_eq!(faults(0).get("profile").unwrap().as_str(), Some("none"));
+        assert_eq!(faults(5).get("profile").unwrap().as_str(), Some("storm"));
+        assert_eq!(faults(6).get("retry_budget").unwrap().as_f64(), Some(0.0));
+        // The none cell injects nothing; the storm cell severs flows
+        // and opens a degraded window.
+        let metric = |i: usize, key: &str| {
+            arr[i].get("metrics").unwrap().get(key).unwrap().as_f64().unwrap()
+        };
+        assert_eq!(metric(0, "faults_injected"), 0.0);
+        assert_eq!(metric(0, "degraded_secs"), 0.0);
+        assert!(metric(5, "faults_injected") > 0.0);
+        assert!(metric(5, "degraded_secs") > 0.0);
+        // The acceptance gap: with the fault schedule held fixed, the
+        // retrying run must not fail more requests than its no-retry
+        // twin, and the twin must abandon every severed byte.
+        for pi in 0..4 {
+            for fi in [1, 3, 5] {
+                let retry = pi * 7 + fi;
+                let bare = retry + 1;
+                let frac = |i: usize| metric(i, "requests_failed") / metric(i, "requests_total");
+                assert!(
+                    frac(retry) <= frac(bare),
+                    "placement {pi} faults {fi}: retry failed more than no-retry"
+                );
+                assert_eq!(metric(bare, "retries"), 0.0);
+                if metric(bare, "bytes_severed") > 0.0 {
+                    assert!(metric(bare, "bytes_abandoned") > 0.0);
+                }
+            }
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,434 @@
+//! Fault injection: link weather, outages, node churn, and the retry
+//! policy that delivery rides on (DESIGN.md §13).
+//!
+//! Production data federations live with misbehaving links and caches
+//! (the OSDF operation-and-monitoring experience, PAPERS.md); the
+//! closed-world simulator could not express a failure of any kind.
+//! This module supplies the *scenario side* of degraded-mode
+//! operation:
+//!
+//! * [`FaultSpec`] — the scenario axis: a named fault profile
+//!   (`none | flaky-links | cache-churn | storm`) plus the
+//!   [`RetryPolicy`] the coordinator applies to severed transfers.
+//! * [`FaultSpec::schedule`] — expands the profile into a
+//!   deterministic, pre-sorted list of [`FaultEvent`]s for one run,
+//!   derived from the run seed through a dedicated
+//!   [`Rng::stream`](crate::util::rng::Rng::stream) tag so the fault
+//!   timeline never perturbs any other stochastic component (trace
+//!   generation, service jitter, placement init all keep their draws).
+//!
+//! The *mechanism side* — applying capacity changes, severing flows,
+//! re-resolving routes, retry/resume bookkeeping — lives in the
+//! coordinator framework; this module is pure data and generation, so
+//! a schedule can be inspected (or unit-tested) without running a
+//! simulation.
+//!
+//! # Determinism contract
+//!
+//! One run seed → one fault timeline, independent of everything else:
+//! the generator forks one substream per fault category in a fixed
+//! order, each category walks time monotonically with a minimum gap,
+//! and the merged schedule is sorted by onset with a stable sort (ties
+//! keep the fixed category order).  Two runs with the same seed and
+//! spec replay the same weather, bit for bit.
+
+use crate::simnet::topology::{Topology, N_CLIENT_DTNS, SERVER};
+use crate::util::json::Json;
+use crate::util::parse::{lookup, ParseError};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Stream tag reserved for fault-schedule generation (see
+/// [`Rng::stream`]); no other subsystem may use it.
+pub const FAULT_STREAM_TAG: u64 = 0xFA17;
+
+/// Named fault profile — the preset intensity of a run's weather.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultProfile {
+    /// Healthy network: no fault events, bit-identical to a build
+    /// without the fault subsystem.
+    #[default]
+    None,
+    /// Link weather (bandwidth dilation windows) plus occasional short
+    /// link outages on the interior fabric.
+    FlakyLinks,
+    /// Cache-node churn: interior cache nodes die for a while, their
+    /// contents drop, and routes re-resolve around them.
+    CacheChurn,
+    /// Both at once, at roughly 3× the event rate and with harsher
+    /// dilation — the stress preset.
+    Storm,
+}
+
+impl FaultProfile {
+    pub const ALL: [FaultProfile; 4] = [
+        FaultProfile::None,
+        FaultProfile::FlakyLinks,
+        FaultProfile::CacheChurn,
+        FaultProfile::Storm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultProfile::None => "none",
+            FaultProfile::FlakyLinks => "flaky-links",
+            FaultProfile::CacheChurn => "cache-churn",
+            FaultProfile::Storm => "storm",
+        }
+    }
+}
+
+/// Retry/resume policy for severed transfers (Globus-style): a cut
+/// flow re-enqueues after a deterministic exponential backoff and
+/// resumes from the bytes already settled; after `budget` retries the
+/// request is failed and counted.
+///
+/// The backoff carries **no jitter** on purpose: retries are already
+/// decorrelated by the flows' distinct sever times, and a jitter draw
+/// per retry would couple the RNG stream to scheduling order —
+/// breaking the replay guarantee §13 argues for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Retries allowed per transfer before the request fails.
+    pub budget: u32,
+    /// First backoff delay (seconds).
+    pub base_secs: f64,
+    /// Backoff ceiling (seconds).
+    pub cap_secs: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { budget: 3, base_secs: 15.0, cap_secs: 240.0 }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries: a severed transfer immediately abandons its
+    /// remainder (the baseline the degraded sweep compares against).
+    pub fn none() -> Self {
+        Self { budget: 0, ..Self::default() }
+    }
+
+    /// Deterministic exponential backoff before retry `attempt`
+    /// (0-based): `min(base · 2^attempt, cap)`.
+    pub fn backoff(&self, attempt: u32) -> f64 {
+        let exp = 2.0f64.powi(attempt.min(30) as i32);
+        (self.base_secs * exp).min(self.cap_secs)
+    }
+}
+
+/// The fault axis of a scenario: profile + retry policy.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultSpec {
+    pub profile: FaultProfile,
+    pub retry: RetryPolicy,
+}
+
+impl FaultSpec {
+    /// The healthy default (no faults, default retry policy — which
+    /// never fires because nothing is ever severed).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// A profile with the default retry policy (what the CLI presets
+    /// parse to).
+    pub fn preset(profile: FaultProfile) -> Self {
+        Self { profile, retry: RetryPolicy::default() }
+    }
+
+    /// Same profile, different retry budget (the degraded sweep pairs
+    /// each preset with a no-retry twin).
+    pub fn with_retry_budget(mut self, budget: u32) -> Self {
+        self.retry.budget = budget;
+        self
+    }
+
+    /// True for the healthy profile — the gate for every fault branch
+    /// in the engine (a `none` run must be bit-identical to a build
+    /// without the subsystem).
+    pub fn is_none(&self) -> bool {
+        self.profile == FaultProfile::None
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.profile.name()
+    }
+
+    /// Scenario-echo form: profile plus the retry knobs.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("profile".to_string(), Json::Str(self.name().to_string()));
+        m.insert("retry_budget".to_string(), Json::Num(self.retry.budget as f64));
+        m.insert("retry_base_secs".to_string(), Json::Num(self.retry.base_secs));
+        m.insert("retry_cap_secs".to_string(), Json::Num(self.retry.cap_secs));
+        Json::Obj(m)
+    }
+
+    /// Expand the profile into this run's fault timeline: every onset
+    /// strictly inside `[0, duration)`, sorted by onset time (stable —
+    /// equal onsets keep the fixed category order: weather, link
+    /// outages, node churn).  `seed` is the run seed; generation uses
+    /// its own [`Rng::stream`] tag, so the timeline is independent of
+    /// every other stochastic component.
+    pub fn schedule(&self, topology: &Topology, duration: f64, seed: u64) -> Vec<FaultEvent> {
+        if self.is_none() || duration <= 0.0 {
+            return Vec::new();
+        }
+        let mut root = Rng::stream(seed, FAULT_STREAM_TAG);
+        // Forked in fixed order so every category's draws are
+        // independent of the others' event counts.
+        let mut weather_rng = root.fork(1);
+        let mut outage_rng = root.fork(2);
+        let mut churn_rng = root.fork(3);
+
+        let links = fault_links(topology);
+        let nodes = fault_nodes(topology);
+        let storm = self.profile == FaultProfile::Storm;
+        // Mean gaps between events (seconds); the storm preset packs
+        // events ~3× as densely and dilates harder.
+        let intensity = if storm { 3.0 } else { 1.0 };
+        let mut events = Vec::new();
+
+        if matches!(self.profile, FaultProfile::FlakyLinks | FaultProfile::Storm) {
+            // Weather windows: capacity dilation on one interior link.
+            let (f_lo, f_hi) = if storm { (0.05, 0.3) } else { (0.1, 0.5) };
+            walk(&mut weather_rng, duration, 4.0 * 3600.0 / intensity, &mut events, |rng, at| {
+                let (a, b) = links[rng.below(links.len())];
+                let hold = rng.range(600.0, 1800.0);
+                FaultEvent {
+                    at,
+                    until: at + hold,
+                    kind: FaultKind::Weather { a, b, factor: rng.range(f_lo, f_hi) },
+                }
+            });
+            // Short hard outages on one interior link.
+            walk(&mut outage_rng, duration, 12.0 * 3600.0 / intensity, &mut events, |rng, at| {
+                let (a, b) = links[rng.below(links.len())];
+                let hold = rng.range(120.0, 600.0);
+                FaultEvent { at, until: at + hold, kind: FaultKind::LinkDown { a, b } }
+            });
+        }
+        if matches!(self.profile, FaultProfile::CacheChurn | FaultProfile::Storm) {
+            // Cache-node churn: a cache site (or, on site-less
+            // topologies, a client DTN) goes dark for a while.
+            walk(&mut churn_rng, duration, 8.0 * 3600.0 / intensity, &mut events, |rng, at| {
+                let node = nodes[rng.below(nodes.len())];
+                let hold = rng.range(900.0, 2700.0);
+                FaultEvent { at, until: at + hold, kind: FaultKind::NodeDown { node } }
+            });
+        }
+        // Stable sort: equal onsets keep category order.
+        events.sort_by(|x, y| x.at.total_cmp(&y.at));
+        events
+    }
+}
+
+/// `FromStr` through the shared alias table (satellite: every selector
+/// round-trips with alias-listing errors).  Custom retry policies are
+/// programmatic-only — presets parse with [`RetryPolicy::default`].
+impl std::str::FromStr for FaultSpec {
+    type Err = ParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        lookup(
+            "fault profile",
+            s,
+            &[
+                (&["none", "off", "healthy"], FaultProfile::None),
+                (&["flaky-links", "flaky", "weather"], FaultProfile::FlakyLinks),
+                (&["cache-churn", "churn"], FaultProfile::CacheChurn),
+                (&["storm"], FaultProfile::Storm),
+            ],
+        )
+        .map(FaultSpec::preset)
+    }
+}
+
+/// One scheduled fault: active over `[at, until)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Onset time (seconds into the run), `< duration`.
+    pub at: f64,
+    /// Repair time, `> at` (may extend past the trace duration; the
+    /// run horizon covers it).
+    pub until: f64,
+    pub kind: FaultKind,
+}
+
+/// What a fault does while active.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Bandwidth dilation: the undirected link `a ↔ b` runs at
+    /// `factor` × its healthy capacity (0 < factor < 1).  Overlapping
+    /// windows on one link compound multiplicatively.
+    Weather { a: usize, b: usize, factor: f64 },
+    /// Hard outage of the undirected link `a ↔ b`: resident flows are
+    /// severed and routes re-resolve around it.
+    LinkDown { a: usize, b: usize },
+    /// A node goes dark: every incident link drops, its cache contents
+    /// (if it hosts one) are gone on repair, flows through it sever.
+    NodeDown { node: usize },
+}
+
+/// Undirected interior links faults may target: the labeled tier links
+/// where the topology has an interior, else the star's server↔client
+/// spokes (each pair listed once, `a < b`).
+fn fault_links(topology: &Topology) -> Vec<(usize, usize)> {
+    let mut pairs: Vec<(usize, usize)> = topology
+        .tier_links()
+        .iter()
+        .map(|l| (l.from.min(l.to), l.from.max(l.to)))
+        .collect();
+    pairs.sort_unstable();
+    pairs.dedup();
+    if pairs.is_empty() {
+        pairs = (1..=N_CLIENT_DTNS).map(|c| (SERVER, c)).collect();
+    }
+    pairs
+}
+
+/// Nodes churn may take down: the cache sites where the topology has
+/// any, else the client DTNs (whose edge caches then drop).
+fn fault_nodes(topology: &Topology) -> Vec<usize> {
+    let sites: Vec<usize> = topology.cache_sites().iter().map(|s| s.node).collect();
+    if sites.is_empty() {
+        (1..=N_CLIENT_DTNS).collect()
+    } else {
+        sites
+    }
+}
+
+/// Walk time from 0 with exponential gaps (minimum 60 s so the walk
+/// always advances), emitting one event per step while inside the
+/// trace window.  Event count is bounded as a backstop against
+/// pathological parameters; real profiles produce tens of events per
+/// simulated week.
+fn walk<F>(rng: &mut Rng, duration: f64, mean_gap: f64, out: &mut Vec<FaultEvent>, mut make: F)
+where
+    F: FnMut(&mut Rng, f64) -> FaultEvent,
+{
+    const MAX_EVENTS: usize = 4096;
+    let mut t = 0.0;
+    for _ in 0..MAX_EVENTS {
+        t += rng.exp(1.0 / mean_gap).max(60.0);
+        if t >= duration {
+            break;
+        }
+        out.push(make(rng, t));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::topology::NetCondition;
+
+    const WAN: [f64; 6] = [25.0, 18.0, 0.568, 2.3, 1.2, 22.0];
+    const WEEK: f64 = 7.0 * 86_400.0;
+
+    fn fed() -> Topology {
+        Topology::federation(NetCondition::Best, &WAN, 80.0, 40.0, 20.0)
+    }
+
+    fn star() -> Topology {
+        Topology::vdc(NetCondition::Best, &WAN)
+    }
+
+    #[test]
+    fn none_schedules_nothing() {
+        let spec = FaultSpec::none();
+        assert!(spec.is_none());
+        assert!(spec.schedule(&fed(), WEEK, 42).is_empty());
+        // Non-none profiles with a zero-length window also schedule
+        // nothing (no division-by-zero paths, no stray draws needed).
+        assert!(FaultSpec::preset(FaultProfile::Storm).schedule(&fed(), 0.0, 42).is_empty());
+    }
+
+    #[test]
+    fn schedules_are_deterministic_per_seed() {
+        let spec = FaultSpec::preset(FaultProfile::Storm);
+        let a = spec.schedule(&fed(), WEEK, 7);
+        let b = spec.schedule(&fed(), WEEK, 7);
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+        let c = spec.schedule(&fed(), WEEK, 8);
+        assert_ne!(a, c, "different seeds must produce different weather");
+    }
+
+    #[test]
+    fn events_sorted_and_inside_window() {
+        for profile in [FaultProfile::FlakyLinks, FaultProfile::CacheChurn, FaultProfile::Storm] {
+            let ev = FaultSpec::preset(profile).schedule(&fed(), WEEK, 11);
+            assert!(!ev.is_empty(), "{profile:?} scheduled nothing over a week");
+            for w in ev.windows(2) {
+                assert!(w[0].at <= w[1].at, "{profile:?} schedule out of order");
+            }
+            for e in &ev {
+                assert!(e.at >= 0.0 && e.at < WEEK);
+                assert!(e.until > e.at);
+            }
+        }
+    }
+
+    #[test]
+    fn flaky_targets_interior_links_churn_targets_sites() {
+        let topo = fed();
+        let links = fault_links(&topo);
+        let ev = FaultSpec::preset(FaultProfile::FlakyLinks).schedule(&topo, WEEK, 3);
+        assert!(ev.iter().all(|e| match e.kind {
+            FaultKind::Weather { a, b, factor } => {
+                links.contains(&(a, b)) && (0.0..1.0).contains(&factor)
+            }
+            FaultKind::LinkDown { a, b } => links.contains(&(a, b)),
+            FaultKind::NodeDown { .. } => false,
+        }));
+        let sites: Vec<usize> = topo.cache_sites().iter().map(|s| s.node).collect();
+        let churn = FaultSpec::preset(FaultProfile::CacheChurn).schedule(&topo, WEEK, 3);
+        assert!(churn.iter().all(|e| match e.kind {
+            FaultKind::NodeDown { node } => sites.contains(&node),
+            _ => false,
+        }));
+    }
+
+    #[test]
+    fn star_falls_back_to_spokes_and_edges() {
+        let topo = star();
+        assert_eq!(fault_links(&topo), (1..=6).map(|c| (0, c)).collect::<Vec<_>>());
+        assert_eq!(fault_nodes(&topo), (1..=6).collect::<Vec<_>>());
+        let ev = FaultSpec::preset(FaultProfile::Storm).schedule(&topo, WEEK, 5);
+        assert!(!ev.is_empty());
+    }
+
+    #[test]
+    fn storm_is_denser_than_flaky() {
+        let flaky = FaultSpec::preset(FaultProfile::FlakyLinks).schedule(&fed(), WEEK, 21);
+        let storm = FaultSpec::preset(FaultProfile::Storm).schedule(&fed(), WEEK, 21);
+        assert!(
+            storm.len() > flaky.len(),
+            "storm {} vs flaky {}",
+            storm.len(),
+            flaky.len()
+        );
+    }
+
+    #[test]
+    fn backoff_doubles_then_caps() {
+        let r = RetryPolicy::default();
+        assert_eq!(r.backoff(0), 15.0);
+        assert_eq!(r.backoff(1), 30.0);
+        assert_eq!(r.backoff(2), 60.0);
+        assert_eq!(r.backoff(10), 240.0);
+        assert_eq!(RetryPolicy::none().budget, 0);
+    }
+
+    #[test]
+    fn spec_json_echo_carries_retry_knobs() {
+        let v = FaultSpec::preset(FaultProfile::FlakyLinks).to_json();
+        assert_eq!(v.get("profile").unwrap().as_str(), Some("flaky-links"));
+        assert_eq!(v.get("retry_budget").unwrap().as_f64(), Some(3.0));
+        assert!(v.get("retry_base_secs").is_some());
+        assert!(v.get("retry_cap_secs").is_some());
+    }
+}

@@ -28,6 +28,8 @@
 //! * [`placement`] — virtual groups and local data hubs (§IV-C2).
 //! * [`coordinator`] — the push-based delivery framework itself:
 //!   request routing, observatory service model, push engine (§IV-D).
+//! * [`faults`] — fault injection: link weather, outages, cache-node
+//!   churn, and the retry/resume policy (DESIGN.md §13).
 //! * [`scenario`] — the composable scenario API: orthogonal
 //!   delivery/model/cache/topology/arrival axes, the unified
 //!   [`scenario::Runner`], declarative [`scenario::ScenarioGrid`]
@@ -39,6 +41,7 @@ pub mod analysis;
 pub mod cache;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod metrics;
 pub mod placement;
 pub mod prefetch;

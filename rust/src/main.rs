@@ -27,7 +27,7 @@ const USAGE: &str = "\
 repro — push-based data delivery framework (Qin et al. 2020 reproduction)
 
 USAGE:
-  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|scale|policies|federation|cache-depth|all>
+  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|scale|policies|federation|cache-depth|degraded|all>
                    [--scale F] [--days F] [--out DIR] [--quick] [--seed N]
                    [--jobs N]
   repro analyze [--scale F]
@@ -38,6 +38,7 @@ USAGE:
                  [--cache-gb F] [--cache-placement edge|regional|core|all]
                  [--net best|medium|worst] [--traffic F]
                  [--topology vdc|hierarchical|federation]
+                 [--faults none|flaky-links|cache-churn|storm] [--retry-budget N]
                  [--users N] [--streaming] [--no-placement]
                  [--scale F] [--days F] [--seed N] [--quick] [--json]
   repro generate-trace --observatory <ooi|gage> [--scale F] [--out FILE]
@@ -52,6 +53,11 @@ the eviction policy, `--topology` the deployment.  `--cache-placement`
 moves the same total cache capacity onto the topology's interior tier
 nodes (regional hubs / federation core) instead of the client edges;
 placements naming a tier the topology lacks degrade to edge.
+`--faults` injects a deterministic fault schedule — link weather,
+transient outages, cache-node churn (DESIGN.md §13) — with Globus-style
+retry/resume; `--retry-budget N` caps per-transfer retries (0 disables
+resume, so severed remainders are abandoned and the request counts as
+failed).
 `--users N`
 overrides the preset's user population; `--streaming` runs over the
 lazy arrival source (O(active-users) memory — required for
@@ -208,6 +214,16 @@ fn scenario_from_flags(flags: &HashMap<String, String>) -> Result<Scenario> {
     if let Some(p) = flags.get("cache-placement") {
         b = b.cache_placement(p.parse::<obsd::scenario::CachePlacementSpec>()?);
     }
+    if let Some(f) = flags.get("faults") {
+        let mut spec = f.parse::<obsd::scenario::FaultSpec>()?;
+        if let Some(budget) = flags.get("retry-budget") {
+            spec = spec
+                .with_retry_budget(budget.parse().context("--retry-budget must be an integer")?);
+        }
+        b = b.faults(spec);
+    } else if flags.contains_key("retry-budget") {
+        bail!("--retry-budget requires a fault profile (--faults flaky-links|cache-churn|storm)");
+    }
     let quick = flags.contains_key("quick");
     // Smoke mode (`--quick`): shrink the workload unless overridden —
     // what CI's scenario smoke job runs.
@@ -308,6 +324,28 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     }
     if !m.tier_hits.is_empty() {
         println!("cross-user frac     {:.4}", m.cross_user_hit_fraction());
+    }
+    if m.faults_injected > 0 {
+        println!("faults injected     {}", m.faults_injected);
+        println!("flows severed       {}", m.flows_severed);
+        println!("retries             {}", m.retries);
+        println!(
+            "requests failed     {} ({:.4})",
+            m.requests_failed,
+            m.failure_fraction()
+        );
+        println!(
+            "bytes severed       {} (refetched {}, abandoned {})",
+            obsd::util::fmt_bytes(m.bytes_severed),
+            obsd::util::fmt_bytes(m.bytes_refetched),
+            obsd::util::fmt_bytes(m.bytes_abandoned)
+        );
+        println!("degraded window     {:.1} s", m.degraded_secs);
+        println!("degraded latency    {:.4} s", m.degraded_latency_secs());
+        println!(
+            "origin degraded     {}",
+            obsd::util::fmt_bytes(m.origin_bytes_degraded)
+        );
     }
     println!("wall clock          {:.2} s", m.wall_secs);
     Ok(())

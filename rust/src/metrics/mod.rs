@@ -117,6 +117,34 @@ pub struct RunMetrics {
     /// Per-tier hit/byte-hit/cross-user accounting, "edge" first, then
     /// interior tiers in the topology's cache-site order.
     pub tier_hits: Vec<TierHits>,
+    /// Fault events injected over the run (onsets; 0 when healthy).
+    pub faults_injected: u64,
+    /// Transfers severed mid-flight by link/node faults.
+    pub flows_severed: u64,
+    /// Severed transfers re-enqueued under the retry policy.
+    pub retries: u64,
+    /// Requests with any portion abandoned after the retry budget.
+    pub requests_failed: u64,
+    /// Bytes still undelivered at the moment flows were severed.  Each
+    /// severed remainder lands in exactly one of `bytes_refetched`
+    /// (a retry re-delivers it) or `bytes_abandoned` (budget
+    /// exhausted), so `bytes_severed == bytes_refetched +
+    /// bytes_abandoned` always — the fault conservation identity
+    /// (asserted under `sim-audit` and by `scripts/check_report.py`).
+    pub bytes_severed: f64,
+    /// Severed bytes re-delivered by retries (resume-from-settled:
+    /// only the remainder, never the whole transfer).
+    pub bytes_refetched: f64,
+    /// Severed bytes abandoned after the retry budget.
+    pub bytes_abandoned: f64,
+    /// Simulated seconds with ≥ 1 fault active (degradation windows).
+    pub degraded_secs: f64,
+    /// Origin bytes sent while ≥ 1 fault was active — the traffic
+    /// shifted to the observatory during degradation.
+    pub origin_bytes_degraded: f64,
+    /// Elapsed time of requests finalized while ≥ 1 fault was active —
+    /// the availability-adjusted delivery latency.
+    pub degraded_latency: Accum,
     /// Wall-clock spent in the run (for the §Perf log).
     pub wall_secs: f64,
 }
@@ -127,6 +155,7 @@ impl RunMetrics {
             throughput: Accum::new(),
             latency: Accum::new(),
             peer_throughput: Accum::new(),
+            degraded_latency: Accum::new(),
             ..Default::default()
         }
     }
@@ -171,6 +200,22 @@ impl RunMetrics {
         } else {
             self.requests_to_observatory as f64 / self.requests_total as f64
         }
+    }
+
+    /// Fraction of requests with an abandoned (failed) portion.
+    pub fn failure_fraction(&self) -> f64 {
+        if self.requests_total == 0 {
+            0.0
+        } else {
+            self.requests_failed as f64 / self.requests_total as f64
+        }
+    }
+
+    /// Mean elapsed time of requests finalized during degradation
+    /// windows (seconds) — the availability-adjusted delivery latency.
+    /// 0 when no request finished under active faults.
+    pub fn degraded_latency_secs(&self) -> f64 {
+        self.degraded_latency.mean()
     }
 
     /// Fraction of requests served entirely from the local DTN,
@@ -268,9 +313,36 @@ impl RunMetrics {
             Json::Num(self.peak_slab_slots as f64),
         );
         m.insert("wall_secs".to_string(), Json::Num(self.wall_secs));
+        m.insert(
+            "faults_injected".to_string(),
+            Json::Num(self.faults_injected as f64),
+        );
+        m.insert("flows_severed".to_string(), Json::Num(self.flows_severed as f64));
+        m.insert("retries".to_string(), Json::Num(self.retries as f64));
+        m.insert(
+            "requests_failed".to_string(),
+            Json::Num(self.requests_failed as f64),
+        );
+        m.insert("bytes_severed".to_string(), Json::Num(self.bytes_severed));
+        m.insert("bytes_refetched".to_string(), Json::Num(self.bytes_refetched));
+        m.insert("bytes_abandoned".to_string(), Json::Num(self.bytes_abandoned));
+        m.insert("degraded_secs".to_string(), Json::Num(self.degraded_secs));
+        m.insert(
+            "origin_bytes_degraded".to_string(),
+            Json::Num(self.origin_bytes_degraded),
+        );
+        m.insert(
+            "failure_fraction".to_string(),
+            Json::Num(self.failure_fraction()),
+        );
+        m.insert(
+            "degraded_latency_secs".to_string(),
+            Json::Num(self.degraded_latency_secs()),
+        );
         m.insert("throughput".to_string(), accum(&self.throughput));
         m.insert("latency".to_string(), accum(&self.latency));
         m.insert("peer_throughput".to_string(), accum(&self.peer_throughput));
+        m.insert("degraded_latency".to_string(), accum(&self.degraded_latency));
         m.insert("throughput_mbps".to_string(), Json::Num(self.throughput_mbps()));
         m.insert(
             "agg_throughput_mbps".to_string(),
@@ -396,6 +468,7 @@ impl RunMetrics {
             throughput: accum("throughput")?,
             latency: accum("latency")?,
             peer_throughput: accum("peer_throughput")?,
+            degraded_latency: accum("degraded_latency")?,
             requests_total: count("requests_total")?,
             requests_to_observatory: count("requests_to_observatory")?,
             served_local_cache: count("served_local_cache")?,
@@ -413,6 +486,15 @@ impl RunMetrics {
             interior_util,
             cache_hit_chunks: count("cache_hit_chunks")?,
             tier_hits,
+            faults_injected: count("faults_injected")?,
+            flows_severed: count("flows_severed")?,
+            retries: count("retries")?,
+            requests_failed: count("requests_failed")?,
+            bytes_severed: num("bytes_severed")?,
+            bytes_refetched: num("bytes_refetched")?,
+            bytes_abandoned: num("bytes_abandoned")?,
+            degraded_secs: num("degraded_secs")?,
+            origin_bytes_degraded: num("origin_bytes_degraded")?,
             wall_secs: num("wall_secs")?,
         })
     }
@@ -449,6 +531,15 @@ impl RunMetrics {
                 other.peer_throughput.count,
             ),
             ("cache_hit_chunks", self.cache_hit_chunks, other.cache_hit_chunks),
+            ("faults_injected", self.faults_injected, other.faults_injected),
+            ("flows_severed", self.flows_severed, other.flows_severed),
+            ("retries", self.retries, other.retries),
+            ("requests_failed", self.requests_failed, other.requests_failed),
+            (
+                "degraded_latency.count",
+                self.degraded_latency.count,
+                other.degraded_latency.count,
+            ),
         ];
         for (name, x, y) in counters {
             if x != y {
@@ -468,6 +559,20 @@ impl RunMetrics {
                 "peer_throughput.sum",
                 self.peer_throughput.sum,
                 other.peer_throughput.sum,
+            ),
+            ("bytes_severed", self.bytes_severed, other.bytes_severed),
+            ("bytes_refetched", self.bytes_refetched, other.bytes_refetched),
+            ("bytes_abandoned", self.bytes_abandoned, other.bytes_abandoned),
+            ("degraded_secs", self.degraded_secs, other.degraded_secs),
+            (
+                "origin_bytes_degraded",
+                self.origin_bytes_degraded,
+                other.origin_bytes_degraded,
+            ),
+            (
+                "degraded_latency.sum",
+                self.degraded_latency.sum,
+                other.degraded_latency.sum,
             ),
         ];
         for (name, x, y) in floats {
@@ -631,6 +736,16 @@ mod tests {
             cross_user_hits: 3,
             reuse: ReuseHistogram { cold: 2, samples: 6, buckets: vec![1, 0, 5] },
         });
+        m.faults_injected = 4;
+        m.flows_severed = 3;
+        m.retries = 2;
+        m.requests_failed = 1;
+        m.bytes_severed = 5.0e6 + 0.25;
+        m.bytes_refetched = 4.0e6 + 0.25;
+        m.bytes_abandoned = 1.0e6;
+        m.degraded_secs = 1234.5;
+        m.origin_bytes_degraded = 2.5e6;
+        m.degraded_latency.add(17.5);
         m.wall_secs = 1.25;
         let text = m.to_json().to_string_pretty();
         let back = RunMetrics::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -656,6 +771,25 @@ mod tests {
         let mut r_drift = back;
         r_drift.tier_hits[1].reuse.buckets[2] = 4;
         assert_eq!(m.diff_bits(&r_drift).len(), 1);
+    }
+
+    #[test]
+    fn fault_metrics_derive_and_diff() {
+        let mut m = RunMetrics::new();
+        assert_eq!(m.failure_fraction(), 0.0);
+        assert_eq!(m.degraded_latency_secs(), 0.0);
+        m.requests_total = 8;
+        m.requests_failed = 2;
+        m.degraded_latency.add(10.0);
+        m.degraded_latency.add(30.0);
+        assert!((m.failure_fraction() - 0.25).abs() < 1e-12);
+        assert!((m.degraded_latency_secs() - 20.0).abs() < 1e-12);
+        // Fault drift is visible to the bit differ.
+        let mut other = m.clone();
+        other.bytes_refetched += 1.0;
+        let diffs = m.diff_bits(&other);
+        assert_eq!(diffs.len(), 1, "{diffs:?}");
+        assert!(diffs[0].starts_with("bytes_refetched"), "{diffs:?}");
     }
 
     #[test]

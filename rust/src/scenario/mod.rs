@@ -16,6 +16,9 @@
 //!   federation, under best/medium/worst conditions;
 //! * **arrival** ([`ArrivalMode`]) — materialized trace vs the lazy
 //!   streaming source (million-user sweeps);
+//! * **faults** ([`FaultSpec`]) — `none | flaky-links | cache-churn |
+//!   storm` weather/outage/churn profiles plus the retry policy
+//!   (DESIGN.md §13);
 //! * **workload** ([`WorkloadSpec`]) — observatory preset, population
 //!   scale and duration.
 //!
@@ -40,6 +43,7 @@ use crate::cache::policy::PolicyKind;
 use crate::coordinator::framework::{run_core, run_streaming_core, RunParams};
 
 pub use crate::cache::network::CachePlacementSpec;
+pub use crate::faults::{FaultProfile, FaultSpec, RetryPolicy};
 use crate::metrics::RunMetrics;
 use crate::placement::kmeans::{ClusterBackend, RustKmeans};
 use crate::prefetch::arima::{GapPredictor, RustArima};
@@ -393,6 +397,9 @@ pub enum ScenarioError {
     BadModelOffset(f64),
     /// The workload names no known observatory preset.
     UnknownObservatory(String),
+    /// Fault profiles sever the framework's DMZ fabric; direct-WAN
+    /// delivery rides dedicated per-user pipes faults cannot touch.
+    FaultsWithoutFramework { profile: &'static str },
 }
 
 impl fmt::Display for ScenarioError {
@@ -423,6 +430,12 @@ impl fmt::Display for ScenarioError {
                 f,
                 "unknown observatory preset '{name}' \
                  (ooi|gage|heavy|federation|scale|tiny)"
+            ),
+            ScenarioError::FaultsWithoutFramework { profile } => write!(
+                f,
+                "fault profile '{profile}' requires framework delivery \
+                 (direct-WAN rides dedicated per-user pipes that faults \
+                 cannot sever)"
             ),
         }
     }
@@ -464,6 +477,10 @@ pub struct Scenario {
     pub obs_overhead: f64,
     /// Observatory service: storage read rate per process (bytes/s).
     pub obs_io_bps: f64,
+    /// Fault-injection axis (DESIGN.md §13): weather / outage / churn
+    /// profile plus the retry policy.  `FaultSpec::none()` (the
+    /// default) keeps the run bit-identical to the pre-fault engine.
+    pub faults: FaultSpec,
     /// Simulation seed (placement clustering; the trace seed lives in
     /// the workload).
     pub seed: u64,
@@ -490,6 +507,7 @@ impl Default for Scenario {
             replicate_budget: 256,
             obs_overhead: crate::coordinator::server::SERVICE_OVERHEAD,
             obs_io_bps: crate::coordinator::server::SERVICE_IO_BPS,
+            faults: FaultSpec::none(),
             seed: 0xD17A,
         }
     }
@@ -584,6 +602,11 @@ impl Scenario {
                 self.workload.observatory.clone(),
             ));
         }
+        if self.delivery == Delivery::DirectWan && !self.faults.is_none() {
+            return Err(ScenarioError::FaultsWithoutFramework {
+                profile: self.faults.name(),
+            });
+        }
         Ok(())
     }
 
@@ -625,6 +648,7 @@ impl Scenario {
             obs_overhead: self.obs_overhead,
             obs_io_bps: self.obs_io_bps,
             cache_placement: self.cache_placement,
+            faults: self.faults,
             seed: self.seed,
         }
     }
@@ -666,6 +690,7 @@ impl Scenario {
         m.insert("traffic_factor".to_string(), Json::Num(self.traffic_factor));
         m.insert("arrival".to_string(), Json::Str(self.arrival.name().to_string()));
         m.insert("workload".to_string(), self.workload.to_json());
+        m.insert("faults".to_string(), self.faults.to_json());
         m.insert("seed".to_string(), Json::Num(self.seed as f64));
         Json::Obj(m)
     }
@@ -818,6 +843,12 @@ impl ScenarioBuilder {
 
     pub fn seed(mut self, seed: u64) -> Self {
         self.sc.seed = seed;
+        self
+    }
+
+    /// Fault-injection profile + retry policy (DESIGN.md §13).
+    pub fn faults(mut self, f: FaultSpec) -> Self {
+        self.sc.faults = f;
         self
     }
 
@@ -1078,6 +1109,21 @@ impl ScenarioGrid {
         )
     }
 
+    /// Fault-injection axis with display labels (DESIGN.md §13).
+    /// Labeled because one profile appears at several retry budgets in
+    /// the degraded sweep (`storm` vs `storm/no-retry`).
+    pub fn faults(self, fs: &[(&str, FaultSpec)]) -> Self {
+        self.expand(
+            fs.iter()
+                .map(|&(label, f)| {
+                    (label.to_string(), move |sc: &mut Scenario| {
+                        sc.faults = f
+                    })
+                })
+                .collect(),
+        )
+    }
+
     /// Topology axis with display labels.
     pub fn topologies(self, ts: &[(&str, TopologyKind)]) -> Self {
         self.expand(
@@ -1211,6 +1257,53 @@ mod tests {
             echo.get("cache_placement").unwrap().as_str(),
             Some("core")
         );
+    }
+
+    #[test]
+    fn builder_rejects_faults_on_direct_wan() {
+        let err = Scenario::builder()
+            .delivery(Delivery::DirectWan)
+            .model(ModelSpec::none())
+            .faults(FaultSpec::preset(FaultProfile::Storm))
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ScenarioError::FaultsWithoutFramework { profile: "storm" }
+        );
+        // The explicit none-spec stays direct-WAN-compatible (the
+        // five-preset parity grid includes No Cache).
+        assert!(Scenario::builder()
+            .delivery(Delivery::DirectWan)
+            .model(ModelSpec::none())
+            .faults(FaultSpec::none())
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn fault_axis_expands_and_echoes() {
+        let grid = ScenarioGrid::new(Scenario::preset(Strategy::Hpm)).faults(&[
+            ("none", FaultSpec::none()),
+            ("storm", FaultSpec::preset(FaultProfile::Storm)),
+            (
+                "storm/no-retry",
+                FaultSpec::preset(FaultProfile::Storm).with_retry_budget(0),
+            ),
+        ]);
+        assert_eq!(grid.len(), 3);
+        let labels: Vec<String> = grid.cells().iter().map(|(l, _)| l.join("/")).collect();
+        assert_eq!(labels, ["none", "storm", "storm/no-retry"]);
+        let sc = &grid.cells()[1].1;
+        assert_eq!(sc.faults, FaultSpec::preset(FaultProfile::Storm));
+        let echo = sc.to_json();
+        let faults = echo.get("faults").expect("faults echoed");
+        assert_eq!(faults.get("profile").unwrap().as_str(), Some("storm"));
+        assert_eq!(faults.get("retry_budget").unwrap().as_f64(), Some(3.0));
+        // The no-retry twin differs only in budget.
+        let twin = &grid.cells()[2].1;
+        assert_eq!(twin.faults.profile, FaultProfile::Storm);
+        assert_eq!(twin.faults.retry.budget, 0);
     }
 
     #[test]

@@ -228,6 +228,25 @@ impl Completed {
     }
 }
 
+/// Result of severing a flow mid-transfer (fault injection): how far
+/// it got.  Progress is settled up to the sever instant, so
+/// `bytes_left` is exactly the remainder a retry must re-deliver.
+#[derive(Debug, Clone, Copy)]
+pub struct Severed {
+    pub id: FlowId,
+    pub bytes_total: f64,
+    /// Bytes not yet delivered when the flow was cut.
+    pub bytes_left: f64,
+    pub started: f64,
+}
+
+impl Severed {
+    /// Bytes already delivered before the cut (the resume offset).
+    pub fn bytes_done(&self) -> f64 {
+        self.bytes_total - self.bytes_left
+    }
+}
+
 impl FlowSim {
     pub fn new() -> Self {
         Self::default()
@@ -359,6 +378,67 @@ impl FlowSim {
             started: flow.started,
             finished: now,
         })
+    }
+
+    /// Sever a flow mid-transfer at `now` (fault injection): settle its
+    /// progress, free its share on every link of its route, and return
+    /// how far it got so the caller can resume from the settled bytes.
+    /// Identical link bookkeeping to [`FlowSim::complete`] — the only
+    /// difference is that the flow did not finish its bytes.
+    pub fn sever(&mut self, id: FlowId, now: f64) -> Option<Severed> {
+        self.touch(now);
+        let mut flow = self.flows.remove(&id)?;
+        let _moved = settle_flow(&mut flow, now, &mut self.carried);
+        #[cfg(feature = "sim-audit")]
+        {
+            self.audit_hop_settled += _moved * flow.route.hops.len() as f64;
+        }
+        for hop in &flow.route.hops {
+            let emptied = match self.links.get_mut(&hop.link) {
+                Some(st) => {
+                    st.flows.retain(|&f| f != id);
+                    st.flows.is_empty()
+                }
+                None => false,
+            };
+            if emptied {
+                self.links.remove(&hop.link);
+            } else {
+                self.mark_dirty(hop.link, now);
+            }
+        }
+        Some(Severed {
+            id,
+            bytes_total: flow.bytes_total,
+            bytes_left: flow.bytes_left,
+            started: flow.started,
+        })
+    }
+
+    /// Change a shared link's capacity at `now` (link weather).  Flows
+    /// already on the link settle at their old rates up to `now`, the
+    /// link is marked dirty, and the next query water-fills its
+    /// component at the new capacity.  A link with no resident flows
+    /// has no state here — future flows pick the new capacity up from
+    /// the mutated topology's routes — and capacity must stay positive:
+    /// a dead link is expressed by severing its flows, never by a zero
+    /// capacity (the planner and audits assume `capacity > 0`).
+    pub fn set_capacity(&mut self, link: LinkId, capacity: f64, now: f64) {
+        debug_assert!(capacity.is_finite() && capacity > 0.0);
+        self.touch(now);
+        if let Some(st) = self.links.get_mut(&link) {
+            if st.capacity.to_bits() != capacity.to_bits() {
+                st.capacity = capacity;
+                self.mark_dirty(link, now);
+            }
+        }
+    }
+
+    /// Flows currently riding a shared link, in ascending id order
+    /// (the membership-vector invariant); empty when the link carries
+    /// none.  The fault layer collects these before cutting a link.
+    pub fn flows_on(&self, link: LinkId) -> Vec<FlowId> {
+        self.links.get(&link).map(|st| st.flows.clone()).unwrap_or_default()
     }
 
     /// Cumulative bytes carried per directed link (settled progress of
@@ -931,6 +1011,47 @@ mod tests {
         // Completions still advance (no starvation): 100 bytes at 0.4 B/s.
         let (t, _) = sim.next_completion().unwrap();
         assert!((t - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sever_settles_progress_and_frees_share() {
+        let mut sim = FlowSim::new();
+        let a = sim.start(0.0, 1000.0, LINK);
+        let b = sim.start(0.0, 1000.0, LINK);
+        assert_eq!(sim.rate(a), 500.0);
+        // Cut a at t=1: it delivered 500 bytes, 500 remain.
+        let cut = sim.sever(a, 1.0).unwrap();
+        assert!((cut.bytes_left - 500.0).abs() < 1e-9);
+        assert!((cut.bytes_done() - 500.0).abs() < 1e-9);
+        assert_eq!(cut.started, 0.0);
+        // b gets the whole link back: 500 left at 1000 B/s → done at 1.5.
+        assert_eq!(sim.active(), 1);
+        let (t, id) = sim.next_completion().unwrap();
+        assert_eq!(id, b);
+        assert!((t - 1.5).abs() < 1e-9);
+        // Severing an unknown flow is a no-op.
+        assert!(sim.sever(a, 2.0).is_none());
+        // Carried bytes count the severed flow's settled progress.
+        sim.complete(b, t).unwrap();
+        assert!((sim.link_bytes()[&1] - 1500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn set_capacity_replans_resident_flows() {
+        let mut sim = FlowSim::new();
+        let a = sim.start(0.0, 1000.0, LINK);
+        assert_eq!(sim.rate(a), 1000.0);
+        // Weather halves the link at t=0.5: 500 bytes settled, the
+        // remaining 500 drain at 500 B/s → completion at 1.5.
+        sim.set_capacity(1, 500.0, 0.5);
+        assert_eq!(sim.rate(a), 500.0);
+        let (t, _) = sim.next_completion().unwrap();
+        assert!((t - 1.5).abs() < 1e-9);
+        // A link with no flows has no state to mutate (no-op), and the
+        // membership query answers for both cases.
+        sim.set_capacity(2, 10.0, 0.5);
+        assert_eq!(sim.flows_on(1), vec![a]);
+        assert!(sim.flows_on(2).is_empty());
     }
 
     // ------------------------------------------------------------------

@@ -16,7 +16,7 @@ pub mod flow;
 pub mod topology;
 
 pub use engine::{CalendarQueue, EventQueue, HeapEventQueue};
-pub use flow::{Completed, FlowId, FlowSim, Hop, LinkId, Pipe, Route};
+pub use flow::{Completed, FlowId, FlowSim, Hop, LinkId, Pipe, Route, Severed};
 pub use topology::{
     CacheSite, NetCondition, TierLink, Topology, TopologyKind, N_CLIENT_DTNS, N_DTNS, SERVER,
     TIER_LABELS,

@@ -350,28 +350,7 @@ impl Topology {
             wan[i + 1] = mbps * cond.factor() * 1e6 / 8.0;
         }
         let next_hop = build_next_hop(n, &bw);
-        // Path-bottleneck matrix: same min-fold the route's
-        // `Route::bottleneck` performs, walking the next-hop chain.
-        let mut pbw = vec![0.0; n * n];
-        for src in 0..n {
-            for dst in 0..n {
-                if src == dst {
-                    continue;
-                }
-                let mut min_bw = f64::INFINITY;
-                let mut at = src;
-                while at != dst {
-                    let nh = next_hop[at * n + dst];
-                    if nh == usize::MAX {
-                        min_bw = 0.0;
-                        break;
-                    }
-                    min_bw = min_bw.min(bw[at * n + nh]);
-                    at = nh;
-                }
-                pbw[src * n + dst] = min_bw;
-            }
-        }
+        let pbw = build_pbw(n, &bw, &next_hop);
         Self {
             n,
             bw,
@@ -462,6 +441,27 @@ impl Topology {
     pub fn cache_sites(&self) -> &[CacheSite] {
         &self.sites
     }
+
+    /// Set the capacity of the undirected link `a ↔ b` (both directed
+    /// entries), in bytes/second.  `0.0` severs the link.  The fault
+    /// layer uses this for link weather and outages; callers must
+    /// follow a batch of changes with [`Topology::rebuild_routes`] so
+    /// the next-hop and bottleneck tables match the mutated matrix.
+    pub fn set_link_bw(&mut self, a: usize, b: usize, bytes_per_sec: f64) {
+        debug_assert!(a != b && a < self.n && b < self.n);
+        self.bw[a * self.n + b] = bytes_per_sec;
+        self.bw[b * self.n + a] = bytes_per_sec;
+    }
+
+    /// Recompute the BFS next-hop table and the path-bottleneck matrix
+    /// from the current link matrix — the route re-resolution step
+    /// after fault-driven topology mutation.  Deterministic: the same
+    /// ascending-node BFS tie-breaks as construction, so a repaired
+    /// topology routes bit-identically to a freshly built one.
+    pub fn rebuild_routes(&mut self) {
+        self.next_hop = build_next_hop(self.n, &self.bw);
+        self.pbw = build_pbw(self.n, &self.bw, &self.next_hop);
+    }
 }
 
 /// Both directions of each labeled undirected interior link.
@@ -475,6 +475,32 @@ fn directed_tiers(links: &[(&'static str, usize, usize)]) -> Vec<TierLink> {
             ]
         })
         .collect()
+}
+
+/// Path-bottleneck matrix: same min-fold the route's
+/// `Route::bottleneck` performs, walking the next-hop chain.
+fn build_pbw(n: usize, bw: &[f64], next_hop: &[usize]) -> Vec<f64> {
+    let mut pbw = vec![0.0; n * n];
+    for src in 0..n {
+        for dst in 0..n {
+            if src == dst {
+                continue;
+            }
+            let mut min_bw = f64::INFINITY;
+            let mut at = src;
+            while at != dst {
+                let nh = next_hop[at * n + dst];
+                if nh == usize::MAX {
+                    min_bw = 0.0;
+                    break;
+                }
+                min_bw = min_bw.min(bw[at * n + nh]);
+                at = nh;
+            }
+            pbw[src * n + dst] = min_bw;
+        }
+    }
+    pbw
 }
 
 /// Hop-count-shortest next-hop table via BFS from every source,
@@ -707,6 +733,45 @@ mod tests {
                     }
                     assert_eq!(at, dst);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn link_mutation_reroutes_and_repairs_bit_identically() {
+        let pristine = Topology::federation(NetCondition::Best, &WAN, 80.0, 40.0, 20.0);
+        let mut t = pristine.clone();
+        let (cache_a, edge) = (8, 1);
+        let before = t.link(edge, cache_a);
+        assert!(before > 0.0);
+        // Weather: halved capacity, same routes.
+        t.set_link_bw(edge, cache_a, before * 0.5);
+        t.rebuild_routes();
+        assert_eq!(t.route(SERVER, edge).hops.len(), 3);
+        assert_eq!(t.path_bw(SERVER, edge).to_bits(), (before * 0.5).to_bits());
+        // Outage: edge 1 loses its only attachment — unreachable, and
+        // route() returns the empty path rather than panicking.
+        t.set_link_bw(edge, cache_a, 0.0);
+        t.rebuild_routes();
+        assert!(t.route(SERVER, edge).is_empty());
+        assert_eq!(t.path_bw(SERVER, edge), 0.0);
+        assert_eq!(t.path_bw(edge, SERVER), 0.0);
+        // Other clients keep routing.
+        assert_eq!(t.route(SERVER, 4).hops.len(), 3);
+        // Repair restores bit-identical routing state.
+        t.set_link_bw(edge, cache_a, before);
+        t.rebuild_routes();
+        for src in 0..t.n_nodes() {
+            for dst in 0..t.n_nodes() {
+                assert_eq!(
+                    t.path_bw(src, dst).to_bits(),
+                    pristine.path_bw(src, dst).to_bits(),
+                    "{src}->{dst}"
+                );
+                assert_eq!(
+                    t.next_hop[src * t.n + dst],
+                    pristine.next_hop[src * t.n + dst]
+                );
             }
         }
     }

@@ -29,6 +29,18 @@ impl Rng {
         }
     }
 
+    /// Named-root generator: a fresh stream derived from `seed` and a
+    /// component `tag`, decorrelated from every other tag's stream.
+    ///
+    /// This is the sanctioned way for a subsystem to obtain its own
+    /// generator from the run seed (simlint D001/D006 keep ambient
+    /// constructors out of simulation code; a tagged stream makes the
+    /// derivation explicit and collision-free).  Equivalent to
+    /// `Rng::new(seed).fork(tag)`.
+    pub fn stream(seed: u64, tag: u64) -> Rng {
+        Rng::new(seed).fork(tag)
+    }
+
     /// Derive an independent child generator (for per-user streams).
     ///
     /// Forking advances the parent by exactly one draw, so a *sequence*
@@ -293,6 +305,20 @@ mod tests {
             (0..16).map(|tag| parent.fork(tag).next_u64()).collect()
         };
         assert_eq!(forks(1234), forks(1234));
+    }
+
+    #[test]
+    fn stream_matches_new_plus_fork() {
+        let mut root = Rng::new(77);
+        let mut a = root.fork(5);
+        let mut b = Rng::stream(77, 5);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::stream(77, 5);
+        let mut d = Rng::stream(77, 6);
+        let same = (0..64).filter(|_| c.next_u64() == d.next_u64()).count();
+        assert!(same < 2);
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Fault-injection subsystem properties (DESIGN.md §13), end to end
+//! through the public scenario API:
+//!
+//! * **none-parity** — a scenario carrying the explicit
+//!   `FaultSpec::none()` axis is bit-identical to the legacy entry
+//!   points across the five paper presets, both topologies and both
+//!   arrival modes (the fault axis must be invisible when unused);
+//! * **conservation** — every severed byte is either re-fetched by a
+//!   retry or abandoned on budget exhaustion, at every seed;
+//! * **retry value** — with the fault schedule held fixed, the
+//!   retrying run never fails more requests than its no-retry twin;
+//! * **replay** — a faulted run is bit-identical when repeated.
+
+use obsd::coordinator::{run, run_streaming, SimConfig};
+use obsd::prefetch::Strategy;
+use obsd::scenario::{
+    ArrivalMode, CachePlacementSpec, FaultProfile, FaultSpec, Runner, Scenario, WorkloadSpec,
+};
+use obsd::simnet::TopologyKind;
+use obsd::trace::{generator, presets, Trace};
+
+fn tiny_trace() -> (presets::PresetConfig, Trace) {
+    let mut cfg = presets::tiny();
+    cfg.duration_days = 2.0;
+    let trace = generator::generate(&cfg);
+    (cfg, trace)
+}
+
+fn faulted(strategy: Strategy, topology: TopologyKind, faults: FaultSpec) -> Scenario {
+    let mut sc = Scenario::preset(strategy);
+    sc.cache_bytes = 4 << 30;
+    sc.topology = topology;
+    sc.faults = faults;
+    sc
+}
+
+#[test]
+fn none_spec_is_bit_identical_to_legacy_across_the_grid() {
+    // 5 strategies × {star, federation} × {materialized, streaming}:
+    // the explicit none-spec must leave every metric bit-identical to
+    // the pre-fault entry points.
+    let (preset, trace) = tiny_trace();
+    let runner = Runner::new();
+    for strategy in Strategy::ALL {
+        for topology in [TopologyKind::VdcStar, TopologyKind::federation_default()] {
+            let legacy_cfg = SimConfig {
+                strategy,
+                cache_bytes: 4 << 30,
+                topology,
+                ..Default::default()
+            };
+            let mut sc = faulted(strategy, topology, FaultSpec::none());
+
+            let legacy = run(&trace, &legacy_cfg);
+            let new = runner.run_trace(&trace, &sc);
+            let diffs = legacy.diff_bits(&new.metrics);
+            assert!(
+                diffs.is_empty(),
+                "{} on {} (materialized): {diffs:?}",
+                strategy.name(),
+                topology.name()
+            );
+            assert_eq!(new.metrics.faults_injected, 0);
+            assert_eq!(new.metrics.flows_severed, 0);
+            assert_eq!(new.metrics.degraded_secs, 0.0);
+
+            let legacy_stream = run_streaming(&preset, &legacy_cfg);
+            sc.arrival = ArrivalMode::Streaming;
+            sc.workload = WorkloadSpec {
+                observatory: "tiny".to_string(),
+                days_factor: 2.0,
+                ..WorkloadSpec::default()
+            };
+            let new_stream = runner.run(&sc).unwrap();
+            let diffs = legacy_stream.diff_bits(&new_stream.metrics);
+            assert!(
+                diffs.is_empty(),
+                "{} on {} (streaming): {diffs:?}",
+                strategy.name(),
+                topology.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn storm_conserves_severed_bytes_at_every_seed() {
+    // Retry/resume byte conservation: severed = re-fetched + abandoned
+    // (within float tolerance), whatever the storm looks like.
+    let (_, trace) = tiny_trace();
+    let runner = Runner::new();
+    for seed in [1u64, 0xBEEF, 0xD17A] {
+        let mut sc = faulted(
+            Strategy::Hpm,
+            TopologyKind::federation_default(),
+            FaultSpec::preset(FaultProfile::Storm),
+        );
+        sc.seed = seed;
+        let m = runner.run_trace(&trace, &sc).metrics;
+        assert!(m.faults_injected > 0, "seed {seed:#x}: empty storm schedule");
+        assert!(m.degraded_secs > 0.0, "seed {seed:#x}");
+        let drift = (m.bytes_severed - (m.bytes_refetched + m.bytes_abandoned)).abs();
+        assert!(
+            drift <= 1e-6 * m.bytes_severed.max(1.0),
+            "seed {seed:#x}: severed {} != refetched {} + abandoned {}",
+            m.bytes_severed,
+            m.bytes_refetched,
+            m.bytes_abandoned
+        );
+        assert!(m.requests_failed <= m.requests_total, "seed {seed:#x}");
+
+        // Replay: the same faulted scenario is bit-identical.
+        let again = runner.run_trace(&trace, &sc).metrics;
+        let diffs = m.diff_bits(&again);
+        assert!(diffs.is_empty(), "seed {seed:#x} replay: {diffs:?}");
+    }
+}
+
+#[test]
+fn retry_never_fails_more_requests_than_no_retry() {
+    // The fault schedule depends only on (profile, seed), so the retry
+    // and no-retry runs face identical weather; the retry budget can
+    // only rescue requests, never doom extra ones.
+    let (_, trace) = tiny_trace();
+    let runner = Runner::new();
+    for placement in [CachePlacementSpec::Edge, CachePlacementSpec::Core] {
+        let mut with_retry = faulted(
+            Strategy::Hpm,
+            TopologyKind::federation_default(),
+            FaultSpec::preset(FaultProfile::Storm),
+        );
+        with_retry.cache_placement = placement;
+        let mut no_retry = with_retry.clone();
+        no_retry.faults = no_retry.faults.with_retry_budget(0);
+
+        let r = runner.run_trace(&trace, &with_retry).metrics;
+        let b = runner.run_trace(&trace, &no_retry).metrics;
+        assert_eq!(r.faults_injected, b.faults_injected, "{}", placement.name());
+        assert_eq!(b.retries, 0, "{}", placement.name());
+        // Budget 0 abandons every severed serve remainder on the spot.
+        assert_eq!(b.bytes_refetched, 0.0, "{}", placement.name());
+        assert!(
+            r.failure_fraction() <= b.failure_fraction(),
+            "{}: retry failed {:.5} > no-retry {:.5}",
+            placement.name(),
+            r.failure_fraction(),
+            b.failure_fraction()
+        );
+    }
+}
+
+#[test]
+fn cache_churn_drops_contents_and_reroutes() {
+    // Churn kills interior cache nodes: the run must still finalize
+    // every request (re-resolution falls back to the origin), and the
+    // degraded window must be visible in the availability metrics.
+    let (_, trace) = tiny_trace();
+    let mut sc = faulted(
+        Strategy::CacheOnly,
+        TopologyKind::federation_default(),
+        FaultSpec::preset(FaultProfile::CacheChurn),
+    );
+    sc.cache_placement = CachePlacementSpec::Core;
+    let runner = Runner::new();
+    let m = runner.run_trace(&trace, &sc).metrics;
+    assert!(m.faults_injected > 0);
+    // Every request still finalizes: same request count as the healthy
+    // run of the identical scenario.
+    let mut healthy = sc.clone();
+    healthy.faults = FaultSpec::none();
+    let h = runner.run_trace(&trace, &healthy).metrics;
+    assert_eq!(m.requests_total, h.requests_total);
+    assert!(m.degraded_secs > 0.0);
+    // Availability-adjusted latency only accumulates inside degraded
+    // windows, so it can never exceed the request count's worth.
+    assert!(m.degraded_latency_secs() >= 0.0);
+    let drift = (m.bytes_severed - (m.bytes_refetched + m.bytes_abandoned)).abs();
+    assert!(drift <= 1e-6 * m.bytes_severed.max(1.0));
+}

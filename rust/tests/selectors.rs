@@ -1,7 +1,7 @@
 //! Round-trip tests for every CLI-facing selector that parses through
 //! the shared normalize-and-match helper (`util::parse::lookup`):
 //! Strategy, PolicyKind, NetCondition, TopologyKind, Delivery,
-//! ArrivalMode, ModelSpec and ExpId.
+//! ArrivalMode, ModelSpec, FaultSpec and ExpId.
 //!
 //! Two properties per selector:
 //!
@@ -15,7 +15,7 @@
 use obsd::cache::policy::PolicyKind;
 use obsd::experiments::{ExpId, ALL_IDS, EXTRA_IDS};
 use obsd::prefetch::Strategy;
-use obsd::scenario::{ArrivalMode, CachePlacementSpec, Delivery, ModelSpec};
+use obsd::scenario::{ArrivalMode, CachePlacementSpec, Delivery, FaultProfile, FaultSpec, ModelSpec};
 use obsd::simnet::{NetCondition, TopologyKind};
 use obsd::util::parse::normalize;
 
@@ -115,6 +115,35 @@ fn cache_placement_round_trips() {
     assert_eq!("split".parse::<CachePlacementSpec>(), Ok(CachePlacementSpec::All));
     let msg = "everywhere-else".parse::<CachePlacementSpec>().unwrap_err().to_string();
     for alias in ["edge", "dtn", "regional", "region", "core", "dmz", "all", "split"] {
+        assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
+    }
+}
+
+#[test]
+fn fault_spec_round_trips() {
+    // Presets parse with the default retry policy; custom policies are
+    // programmatic-only (`with_retry_budget`).
+    for p in FaultProfile::ALL {
+        for sp in spellings(p.name()) {
+            assert_eq!(sp.parse::<FaultSpec>(), Ok(FaultSpec::preset(p)), "{sp}");
+        }
+    }
+    // Operational synonyms.
+    assert_eq!("off".parse::<FaultSpec>(), Ok(FaultSpec::none()));
+    assert_eq!("healthy".parse::<FaultSpec>(), Ok(FaultSpec::none()));
+    assert_eq!(
+        "weather".parse::<FaultSpec>(),
+        Ok(FaultSpec::preset(FaultProfile::FlakyLinks))
+    );
+    assert_eq!(
+        "churn".parse::<FaultSpec>(),
+        Ok(FaultSpec::preset(FaultProfile::CacheChurn))
+    );
+    let msg = "earthquake".parse::<FaultSpec>().unwrap_err().to_string();
+    for alias in [
+        "none", "off", "healthy", "flaky-links", "flaky", "weather", "cache-churn", "churn",
+        "storm",
+    ] {
         assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
     }
 }

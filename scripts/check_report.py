@@ -32,8 +32,11 @@ def check_report(label: str, doc: dict) -> None:
         "traffic_factor",
         "arrival",
         "workload",
+        "faults",
     ):
         assert key in sc, f"{label}: scenario echo missing '{key}'"
+    for key in ("profile", "retry_budget", "retry_base_secs", "retry_cap_secs"):
+        assert key in sc["faults"], f"{label}: faults echo missing '{key}'"
     for key in (
         "requests_total",
         "requests_to_observatory",
@@ -47,6 +50,18 @@ def check_report(label: str, doc: dict) -> None:
         "cache_hit_chunks",
         "cross_user_hit_fraction",
         "tier_hits",
+        "faults_injected",
+        "flows_severed",
+        "retries",
+        "requests_failed",
+        "bytes_severed",
+        "bytes_refetched",
+        "bytes_abandoned",
+        "degraded_secs",
+        "origin_bytes_degraded",
+        "degraded_latency",
+        "failure_fraction",
+        "degraded_latency_secs",
     ):
         assert key in m, f"{label}: metrics missing '{key}'"
     assert m["requests_total"] > 0, f"{label}: run served no requests"
@@ -56,6 +71,21 @@ def check_report(label: str, doc: dict) -> None:
     assert tier_hits == m["cache_hit_chunks"], (
         f"{label}: tier hits {tier_hits} != cache_hit_chunks {m['cache_hit_chunks']}"
     )
+    # Fault conservation (DESIGN.md §13): every severed byte is either
+    # re-fetched by a retry or abandoned on budget exhaustion, and a
+    # request can only fail once.
+    drift = abs(m["bytes_severed"] - (m["bytes_refetched"] + m["bytes_abandoned"]))
+    assert drift <= 1e-6 * max(m["bytes_severed"], 1.0), (
+        f"{label}: severed {m['bytes_severed']} != refetched"
+        f" {m['bytes_refetched']} + abandoned {m['bytes_abandoned']}"
+    )
+    assert m["requests_failed"] <= m["requests_total"], (
+        f"{label}: requests_failed {m['requests_failed']}"
+        f" > requests_total {m['requests_total']}"
+    )
+    if sc["faults"]["profile"] == "none":
+        assert m["faults_injected"] == 0, f"{label}: healthy run injected faults"
+        assert m["degraded_secs"] == 0, f"{label}: healthy run reports degradation"
 
 
 def check(path: str) -> None:
