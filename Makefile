@@ -66,13 +66,16 @@ golden:
 	cd rust && GOLDEN_STRICT=1 cargo test -q --test golden
 
 # Scenario smoke (wired into CI): one preset, one non-preset axis
-# combination (markov + gdsf + federation + streaming), and one faulted
-# run (flaky-links with retry/resume) end-to-end with `--quick --json`,
-# plus two quick experiment grids over the worker pool (--jobs 4) — the
-# federation sweep and the cache-depth placement sweep (the tiered-cache
-# path).  scripts/check_report.py validates the three simulate reports
-# and every <id>.json RunReport array the grids emit, including the
-# fault conservation identity (DESIGN.md §13).
+# combination (markov + gdsf + federation + streaming), one faulted
+# run (flaky-links with retry/resume), and one all-realism run
+# (weekly rhythm + mixed cohorts + spike flash crowd) end-to-end with
+# `--quick --json`, plus three quick experiment grids over the worker
+# pool (--jobs 4) — the federation sweep, the cache-depth placement
+# sweep (the tiered-cache path), and the workload-realism sweep (the
+# flash-crowd grid).  scripts/check_report.py validates the four
+# simulate reports and every <id>.json RunReport array the grids emit,
+# including the fault conservation identity (DESIGN.md §13) and the
+# per-cohort request conservation identity (DESIGN.md §14).
 smoke: artifacts-quick
 	cd rust && cargo build --release
 	rust/target/release/repro simulate --observatory tiny --quick --json \
@@ -83,11 +86,16 @@ smoke: artifacts-quick
 	rust/target/release/repro simulate --observatory tiny --quick --json \
 		--faults flaky-links --topology federation \
 		> /tmp/obsd_smoke_faults.json
+	rust/target/release/repro simulate --observatory tiny --quick --json \
+		--rhythm weekly --cohorts mixed --flash-crowd spike \
+		> /tmp/obsd_smoke_realism.json
 	rm -rf /tmp/obsd_smoke_grid
 	rust/target/release/repro experiment --id federation --quick --jobs 4 \
 		--out /tmp/obsd_smoke_grid
 	rust/target/release/repro experiment --id cache-depth --quick --jobs 4 \
 		--out /tmp/obsd_smoke_grid
+	rust/target/release/repro experiment --id realism --quick --jobs 4 \
+		--out /tmp/obsd_smoke_grid
 	python3 scripts/check_report.py /tmp/obsd_smoke_preset.json \
 		/tmp/obsd_smoke_combo.json /tmp/obsd_smoke_faults.json \
-		/tmp/obsd_smoke_grid/*.json
+		/tmp/obsd_smoke_realism.json /tmp/obsd_smoke_grid/*.json

@@ -24,7 +24,7 @@ use crate::cache::reuse::{ReuseHistogram, ReuseTracker, DEFAULT_SAMPLE_RATE};
 use crate::cache::{chunk_bytes, chunks_for, ChunkKey, Origin};
 use crate::coordinator::slab::{ReqId, ReqSlab};
 use crate::faults::{FaultEvent, FaultKind, FaultSpec};
-use crate::metrics::{RunMetrics, ServedBy, TierHits};
+use crate::metrics::{CohortStat, RunMetrics, ServedBy, TierHits};
 use crate::simnet::topology::CacheSite;
 use crate::placement::kmeans::{ClusterBackend, RustKmeans};
 use crate::placement::Placement;
@@ -37,6 +37,7 @@ use crate::prefetch::{Action, Prediction, PrefetchModel, Strategy};
 use crate::simnet::topology::NetCondition;
 use crate::simnet::{EventQueue, FlowId, FlowSim, Pipe, Topology, TopologyKind, SERVER};
 use crate::trace::presets::PresetConfig;
+use crate::trace::realism::{Cohort, CohortSpec, FlashCrowdSpec, RhythmSpec};
 use crate::trace::source::{ArrivalSource, StreamingTrace};
 use crate::trace::{Request, StreamId, Trace, UserId};
 
@@ -82,6 +83,14 @@ pub struct RunParams {
     /// `none` profile keeps the engine bit-identical to a build
     /// without the fault subsystem.
     pub faults: FaultSpec,
+    /// Workload realism axes (DESIGN.md §14).  Rhythm and flash shape
+    /// demand inside the trace generators, so the engine only echoes
+    /// them; cohorts additionally tag each arriving request for the
+    /// per-cohort metrics split.  All three default off, leaving the
+    /// engine bit-identical to the pre-realism build.
+    pub rhythm: RhythmSpec,
+    pub cohorts: CohortSpec,
+    pub flash: FlashCrowdSpec,
     pub seed: u64,
 }
 
@@ -142,6 +151,11 @@ impl SimConfig {
             // Same rationale: the closed grid predates the fault axis
             // and always runs a healthy network.
             faults: FaultSpec::default(),
+            // And the realism axes: the closed grid always runs the
+            // flat/uniform/none workload.
+            rhythm: RhythmSpec::flat(),
+            cohorts: CohortSpec::uniform(),
+            flash: FlashCrowdSpec::none(),
             seed: self.seed,
         }
     }
@@ -380,6 +394,17 @@ pub struct Framework<'t> {
     /// Retries already consumed by an in-flight flow (retry flows
     /// only; absent = first attempt).  Unused unless `faulty`.
     retry_attempt: HashMap<FlowId, u32>,
+    /// Cohort axis live this run: arrivals are tagged with their
+    /// user's cohort and `metrics.cohort_stats` carries one zeroed
+    /// entry per cohort (empty — and every branch skipped — when the
+    /// workload is uniform, keeping the default run bit-identical).
+    cohort_on: bool,
+    /// Peak-minute arrival tracking: the current minute bucket and its
+    /// running arrival count, folded into
+    /// `RunMetrics::peak_minute_arrivals` on bucket change and at the
+    /// end of the run.
+    minute_bucket: u64,
+    minute_count: u64,
     pub metrics: RunMetrics,
     now: f64,
 }
@@ -624,6 +649,22 @@ fn run_inner<'t>(
     } else {
         Vec::new()
     };
+    // Cohort axis: a mixed workload reports one stat row per cohort
+    // (report order = `Cohort::ALL`); uniform leaves the vector empty
+    // and every cohort branch dead.
+    let cohort_on = !cfg.cohorts.is_uniform();
+    let mut metrics = RunMetrics::new();
+    if cohort_on {
+        metrics.cohort_stats = Cohort::ALL
+            .iter()
+            .map(|c| CohortStat {
+                cohort: c.name(),
+                requests: 0,
+                origin_requests: 0,
+                bytes: 0.0,
+            })
+            .collect();
+    }
     let mut fw = Framework {
         topology,
         caches,
@@ -656,7 +697,10 @@ fn run_inner<'t>(
         active_faults: 0,
         degraded_since: 0.0,
         retry_attempt: HashMap::new(),
-        metrics: RunMetrics::new(),
+        cohort_on,
+        minute_bucket: 0,
+        minute_count: 0,
+        metrics,
         now: 0.0,
         cfg: cfg.clone(),
         trace,
@@ -743,6 +787,15 @@ fn run_inner<'t>(
             metrics.requests_failed <= metrics.requests_total,
             "audit: more failed requests than requests"
         );
+        if !metrics.cohort_stats.is_empty() {
+            // Cohort conservation (§14): every finalized request lands
+            // in exactly one cohort row.
+            let sum: u64 = metrics.cohort_stats.iter().map(|c| c.requests).sum();
+            assert_eq!(
+                sum, metrics.requests_total,
+                "audit: per-cohort requests must sum to the request total"
+            );
+        }
     }
     metrics.wall_secs = wall_start.elapsed().as_secs_f64();
     metrics
@@ -809,6 +862,10 @@ impl<'t> Framework<'t> {
             // repair past the horizon): close it at the loop's end.
             self.metrics.degraded_secs += self.now - self.degraded_since;
         }
+        // The last minute bucket never sees a successor arrival: fold
+        // its count into the peak here.
+        self.metrics.peak_minute_arrivals =
+            self.metrics.peak_minute_arrivals.max(self.minute_count);
     }
 
     /// Pop the earliest pending step off the unified spine, merging the
@@ -1098,6 +1155,9 @@ impl<'t> Framework<'t> {
         if self.active_faults > 0 {
             self.metrics.origin_bytes_degraded += bytes;
         }
+        if self.in_flash() {
+            self.metrics.flash_origin_bytes += bytes;
+        }
         let pipe = match self.try_dmz_pipe(SERVER, dest) {
             Some(p) => p,
             None => Pipe::Dedicated {
@@ -1114,6 +1174,23 @@ impl<'t> Framework<'t> {
         let rid = self.req_slab.alloc(req.ts);
         let live = self.req_slab.live() as u64;
         self.metrics.peak_req_states = self.metrics.peak_req_states.max(live);
+        // Peak-minute arrival rate: arrivals pop in time order, so a
+        // bucket is complete the moment a later bucket's first request
+        // shows up (the trailing bucket folds at the end of the run).
+        let minute = (req.ts / 60.0).floor() as u64;
+        if minute != self.minute_bucket {
+            self.metrics.peak_minute_arrivals =
+                self.metrics.peak_minute_arrivals.max(self.minute_count);
+            self.minute_bucket = minute;
+            self.minute_count = 0;
+        }
+        self.minute_count += 1;
+        if self.cohort_on {
+            // Tag the request with its user's cohort; the assignment is
+            // the same per-user hash the generators shaped demand with.
+            self.req_slab
+                .set_cohort(rid, CohortSpec::cohort_of(req.user.0).index() as u8);
+        }
 
         // Feed the engines (every prefetching scenario).
         if self.model.is_some() {
@@ -1334,6 +1411,20 @@ impl<'t> Framework<'t> {
         Some(Pipe::Path(route))
     }
 
+    /// Is the current instant inside a flash-crowd window?  Origin
+    /// egress while this holds is attributed to
+    /// `RunMetrics::flash_origin_bytes` — the surge the realism sweep
+    /// watches the cache absorb.  Traces without flash events keep the
+    /// window list empty and this check free.
+    fn in_flash(&self) -> bool {
+        !self.trace.flash_windows.is_empty()
+            && self
+                .trace
+                .flash_windows
+                .iter()
+                .any(|&(at, until)| self.now >= at && self.now < until)
+    }
+
     /// Account one cache hit at `node` for `user`: per-tier hit and
     /// byte-hit counters, the cross-user split (the chunk's *first*
     /// inserter was a different user — the shared-tier payoff §12
@@ -1464,6 +1555,9 @@ impl<'t> Framework<'t> {
             // the degraded sweep tracks shifting back to the origin.
             self.metrics.origin_bytes_degraded += bytes;
         }
+        if self.in_flash() {
+            self.metrics.flash_origin_bytes += bytes;
+        }
         let pipe = match wan {
             // NoCache: commodity WAN, dedicated per-flow rate.
             Some(dtn) => Pipe::Dedicated {
@@ -1550,6 +1644,9 @@ impl<'t> Framework<'t> {
         if self.active_faults > 0 {
             self.metrics.origin_bytes_degraded += bytes;
         }
+        if self.in_flash() {
+            self.metrics.flash_origin_bytes += bytes;
+        }
         let fid = self.flows.start(self.now, bytes, pipe);
         self.flow_ctx
             .insert(fid, FlowCtx::Prefetch { dest, user: p.user, chunks });
@@ -1586,6 +1683,9 @@ impl<'t> Framework<'t> {
             self.metrics.origin_bytes += bytes;
             if self.active_faults > 0 {
                 self.metrics.origin_bytes_degraded += bytes;
+            }
+            if self.in_flash() {
+                self.metrics.flash_origin_bytes += bytes;
             }
             let fid = self.flows.start(self.now, bytes, pipe);
             self.flow_ctx.insert(fid, FlowCtx::Push { dest, user, chunks });
@@ -1768,6 +1868,15 @@ impl<'t> Framework<'t> {
                 // Availability-adjusted latency: what requests
                 // finishing inside a degraded window experienced.
                 self.metrics.degraded_latency.add(elapsed);
+            }
+        }
+        if self.cohort_on {
+            // One row per cohort, indexed by the tag set at arrival.
+            let cs = &mut self.metrics.cohort_stats[st.cohort as usize];
+            cs.requests += 1;
+            cs.bytes += st.bytes;
+            if st.any_origin {
+                cs.origin_requests += 1;
             }
         }
         let served = if st.any_origin {
@@ -2123,6 +2232,62 @@ mod tests {
         let materialized = run(&trace, &cfg);
         let streamed = run_streaming(&preset, &cfg);
         assert_metrics_eq(&materialized, &streamed, "traffic_factor=4");
+    }
+
+    #[test]
+    fn realism_axes_tag_cohorts_and_attribute_flash_bytes() {
+        use crate::trace::realism::{CohortProfile, FlashProfile};
+        let mut preset = presets::tiny();
+        preset.duration_days = 2.0;
+        preset.cohorts = CohortSpec::preset(CohortProfile::Mixed);
+        preset.flash = FlashCrowdSpec::preset(FlashProfile::Surge);
+        let trace = generator::generate(&preset);
+        let cfg = SimConfig {
+            strategy: Strategy::CacheOnly,
+            cache_bytes: 4 << 30,
+            ..Default::default()
+        };
+        let mut params = cfg.params();
+        params.cohorts = preset.cohorts;
+        params.flash = preset.flash;
+        let materialized = run_core(
+            &trace,
+            &params,
+            build_model(cfg.strategy, Box::new(RustArima::new())),
+            Box::new(RustKmeans),
+        );
+        // Same preset over the streaming leg: bit-identical, realism on.
+        let streamed = run_streaming_core(
+            &preset,
+            &params,
+            build_model(cfg.strategy, Box::new(RustArima::new())),
+            Box::new(RustKmeans),
+        );
+        assert_metrics_eq(&materialized, &streamed, "realism axes on");
+        let m = materialized;
+        // One stat row per cohort, conserving the request total.
+        assert_eq!(m.cohort_stats.len(), Cohort::ALL.len());
+        let sum: u64 = m.cohort_stats.iter().map(|c| c.requests).sum();
+        assert_eq!(sum, m.requests_total, "per-cohort requests conserve");
+        assert!(
+            m.cohort_stats.iter().filter(|c| c.requests > 0).count() >= 2,
+            "a mixed workload populates more than one cohort"
+        );
+        assert!(m.peak_minute_arrivals >= 1);
+        assert!(
+            m.flash_origin_bytes <= m.origin_bytes,
+            "flash attribution is a subset of origin traffic"
+        );
+        if !trace.flash_windows.is_empty() {
+            assert!(
+                m.flash_origin_bytes > 0.0,
+                "a surge window moved no origin bytes"
+            );
+        }
+        // Defaults off: no cohort rows, peak minute still tracked.
+        let base = run_strategy(&trace, Strategy::CacheOnly);
+        assert!(base.cohort_stats.is_empty());
+        assert!(base.peak_minute_arrivals >= 1);
     }
 
     /// Run a strategy with an explicit fault spec over the

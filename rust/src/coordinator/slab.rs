@@ -46,6 +46,9 @@ pub struct ReqFinal {
     pub any_failed: bool,
     pub local_cache_bytes: f64,
     pub local_prefetch_bytes: f64,
+    /// Cohort index of the requesting user (0 unless the workload's
+    /// cohort axis tagged the request at arrival).
+    pub cohort: u8,
 }
 
 const ANY_ORIGIN: u8 = 1;
@@ -61,6 +64,7 @@ pub struct ReqSlab {
     bytes: Vec<f64>,
     pending_parts: Vec<u32>,
     flags: Vec<u8>,
+    cohort: Vec<u8>,
     local_cache_bytes: Vec<f64>,
     local_prefetch_bytes: Vec<f64>,
     /// Recycled slots, LIFO.
@@ -95,6 +99,7 @@ impl ReqSlab {
             self.bytes[s] = 0.0;
             self.pending_parts[s] = 0;
             self.flags[s] = 0;
+            self.cohort[s] = 0;
             self.local_cache_bytes[s] = 0.0;
             self.local_prefetch_bytes[s] = 0.0;
             ReqId {
@@ -108,6 +113,7 @@ impl ReqSlab {
             self.bytes.push(0.0);
             self.pending_parts.push(0);
             self.flags.push(0);
+            self.cohort.push(0);
             self.local_cache_bytes.push(0.0);
             self.local_prefetch_bytes.push(0.0);
             ReqId {
@@ -134,6 +140,13 @@ impl ReqSlab {
     pub fn set_bytes(&mut self, id: ReqId, v: f64) {
         let s = self.idx(id);
         self.bytes[s] = v;
+    }
+
+    /// Tag the request with its user's cohort index (set once at
+    /// arrival when the cohort axis is on).
+    pub fn set_cohort(&mut self, id: ReqId, c: u8) {
+        let s = self.idx(id);
+        self.cohort[s] = c;
     }
 
     pub fn add_local_cache(&mut self, id: ReqId, v: f64) {
@@ -196,6 +209,7 @@ impl ReqSlab {
             any_failed: self.flags[s] & ANY_FAILED != 0,
             local_cache_bytes: self.local_cache_bytes[s],
             local_prefetch_bytes: self.local_prefetch_bytes[s],
+            cohort: self.cohort[s],
         })
     }
 }
@@ -209,6 +223,7 @@ mod tests {
         let mut slab = ReqSlab::new();
         let a = slab.alloc(1.5);
         slab.set_bytes(a, 100.0);
+        slab.set_cohort(a, 2);
         slab.add_local_cache(a, 40.0);
         slab.add_local_prefetch(a, 60.0);
         slab.set_any_peer(a);
@@ -222,6 +237,10 @@ mod tests {
         assert!(fin.any_peer && !fin.any_origin && !fin.any_failed);
         assert_eq!(fin.local_cache_bytes, 40.0);
         assert_eq!(fin.local_prefetch_bytes, 60.0);
+        assert_eq!(fin.cohort, 2);
+        // Recycled slots re-zero the cohort tag.
+        let b = slab.alloc(0.0);
+        assert_eq!(slab.free(b).unwrap().cohort, 0);
         assert_eq!(slab.live(), 0);
     }
 

@@ -30,8 +30,9 @@ use anyhow::{bail, Result};
 use crate::cache::policy::PolicyKind;
 use crate::prefetch::Strategy;
 use crate::scenario::{
-    CachePlacementSpec, FaultProfile, FaultSpec, ModelSpec, RunReport, Runner, Scenario,
-    ScenarioGrid, WorkloadSpec,
+    CachePlacementSpec, CohortProfile, CohortSpec, FaultProfile, FaultSpec, FlashCrowdSpec,
+    FlashProfile, ModelSpec, RhythmProfile, RhythmSpec, RunReport, Runner, Scenario, ScenarioGrid,
+    WorkloadSpec,
 };
 use crate::simnet::{NetCondition, TopologyKind};
 use crate::trace::{generator, presets, Trace};
@@ -91,9 +92,10 @@ impl ExpOptions {
 /// experiments bench iterate it, and either sweep's cost would
 /// dominate a paper-figures run — invoke them explicitly with
 /// `--id traffic` / `--id scale`.
-pub const ALL_IDS: [&str; 18] = [
+pub const ALL_IDS: [&str; 19] = [
     "fig2", "table1", "table2", "fig3", "fig4", "fig9", "fig10", "fig11", "fig12", "table3",
     "fig13", "table4", "table5", "headline", "policies", "federation", "cache-depth", "degraded",
+    "realism",
 ];
 
 /// Ids accepted by [`run_experiment`] but excluded from `all` (see
@@ -149,9 +151,7 @@ pub fn cache_grid(observatory: &str) -> Vec<(&'static str, u64)> {
 }
 
 fn build_trace(observatory: &str, opts: &ExpOptions) -> Result<Trace> {
-    let Some(mut cfg) = presets::by_name(observatory) else {
-        bail!("unknown observatory preset '{observatory}'");
-    };
+    let mut cfg = presets::require(observatory)?;
     cfg.scale *= opts.scale;
     cfg.duration_days *= opts.days_factor;
     if let Some(seed) = opts.seed {
@@ -170,6 +170,7 @@ fn workload_for(observatory: &str, opts: &ExpOptions) -> WorkloadSpec {
         days_factor: opts.days_factor,
         n_users: None,
         trace_seed: opts.seed,
+        ..WorkloadSpec::default()
     }
 }
 
@@ -216,6 +217,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Result<String> {
         "federation" => federation(opts),
         "cache-depth" => cache_depth(opts),
         "degraded" => degraded(opts),
+        "realism" => realism(opts),
         "all" => {
             let mut out = String::new();
             for id in ALL_IDS {
@@ -1088,6 +1090,119 @@ fn degraded(opts: &ExpOptions) -> Result<String> {
     Ok(t.render())
 }
 
+/// Extension: workload-realism sweep (DESIGN.md §14).  The rhythm ×
+/// cohort × flash-crowd cube changes the *demand itself*, so unlike
+/// the other sweeps its cells cannot share one materialized trace:
+/// each triple regenerates the federation trace with those axes
+/// applied, then a cache-placement × prefetch-model grid runs over
+/// it.  Reports the observables the axes introduce — peak-minute
+/// arrival rate, origin bytes moved inside flash windows, and
+/// per-cohort origin fractions (empty cohort columns on the uniform
+/// cells, where per-cohort accounting is off).
+fn realism(opts: &ExpOptions) -> Result<String> {
+    let runner = Runner::new();
+    let rhythm_axis = [RhythmSpec::flat(), RhythmSpec::preset(RhythmProfile::Weekly)];
+    let cohort_axis = [CohortSpec::uniform(), CohortSpec::preset(CohortProfile::Mixed)];
+    let flash_axis = [FlashCrowdSpec::none(), FlashCrowdSpec::preset(FlashProfile::Spike)];
+    let model_axis = [ModelSpec::none(), ModelSpec::markov(), ModelSpec::hybrid()];
+    let mut t = Table::new(
+        "Realism sweep — rhythm × cohorts × flash crowd × placement × prefetch model (federation)",
+    )
+    .header(&[
+        "Rhythm",
+        "Cohorts",
+        "Flash",
+        "Placement",
+        "Model",
+        "Requests",
+        "Peak/min",
+        "Origin frac",
+        "Flash origin",
+        "Inter. orig",
+        "Bulk orig",
+        "Camp. orig",
+    ]);
+    let mut csv = String::from(
+        "rhythm,cohorts,flash_crowd,placement,model,requests,peak_minute_arrivals,\
+         origin_frac,flash_origin_bytes,interactive_requests,interactive_origin_frac,\
+         bulk_requests,bulk_origin_frac,campaign_requests,campaign_origin_frac\n",
+    );
+    let mut reports = Vec::new();
+    for rhythm in rhythm_axis {
+        for cohorts in cohort_axis {
+            for flash in flash_axis {
+                let mut cfg = presets::require("federation")?;
+                cfg.scale *= opts.scale;
+                cfg.duration_days *= opts.days_factor;
+                if let Some(seed) = opts.seed {
+                    cfg.seed = seed;
+                }
+                cfg.rhythm = rhythm;
+                cfg.cohorts = cohorts;
+                cfg.flash = flash;
+                let trace = generator::generate(&cfg);
+                let mut base = Scenario::preset(Strategy::Hpm);
+                base.topology = TopologyKind::federation_default();
+                base.workload = workload_for("federation", opts);
+                base.workload.rhythm = rhythm;
+                base.workload.cohorts = cohorts;
+                base.workload.flash = flash;
+                let sweep = ScenarioGrid::new(base)
+                    .placements(&CachePlacementSpec::ALL)
+                    .models(&model_axis);
+                let cell_reports = sweep.run_all(&runner, &trace, opts.jobs);
+                for (pi, placement) in CachePlacementSpec::ALL.into_iter().enumerate() {
+                    for (mi, model) in model_axis.iter().enumerate() {
+                        let m = &cell_reports[pi * model_axis.len() + mi].metrics;
+                        // Per-cohort columns follow Cohort::ALL order;
+                        // empty stats (uniform cells) render as zeros.
+                        let cohort_col = |i: usize| {
+                            m.cohort_stats
+                                .get(i)
+                                .map_or((0, 0.0), |cs| (cs.requests, cs.origin_fraction()))
+                        };
+                        let (int_req, int_of) = cohort_col(0);
+                        let (bulk_req, bulk_of) = cohort_col(1);
+                        let (camp_req, camp_of) = cohort_col(2);
+                        t.row(vec![
+                            rhythm.name().to_string(),
+                            cohorts.name().to_string(),
+                            flash.name().to_string(),
+                            placement.name().to_string(),
+                            model.kind().to_string(),
+                            format!("{}", m.requests_total),
+                            format!("{}", m.peak_minute_arrivals),
+                            format!("{:.4}", m.origin_fraction()),
+                            crate::util::fmt_bytes(m.flash_origin_bytes),
+                            format!("{int_of:.4}"),
+                            format!("{bulk_of:.4}"),
+                            format!("{camp_of:.4}"),
+                        ]);
+                        let _ = writeln!(
+                            csv,
+                            "{},{},{},{},{},{},{},{:.4},{:.0},{int_req},{int_of:.5},\
+                             {bulk_req},{bulk_of:.5},{camp_req},{camp_of:.5}",
+                            rhythm.name(),
+                            cohorts.name(),
+                            flash.name(),
+                            placement.name(),
+                            model.kind(),
+                            m.requests_total,
+                            m.peak_minute_arrivals,
+                            m.origin_fraction(),
+                            m.flash_origin_bytes,
+                        );
+                    }
+                }
+                reports.extend(cell_reports);
+            }
+        }
+    }
+    write_csv(opts, "realism.csv", &csv)?;
+    write_reports(opts, "realism", &reports)?;
+    Ok(t.render())
+}
+
 /// Extension: all five eviction policies at the smallest cache size
 /// (the paper compares only LRU/LFU and defers the rest, §V-B1).
 fn policies(opts: &ExpOptions) -> Result<String> {
@@ -1309,6 +1424,72 @@ mod tests {
                 }
             }
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn realism_runs_small() {
+        let dir = std::env::temp_dir().join("obsd_exp_realism_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = ExpOptions {
+            scale: 0.03,
+            days_factor: 0.3,
+            out_dir: Some(dir.clone()),
+            seed: None,
+            jobs: 2,
+        };
+        let out = run_experiment("realism", &opts).unwrap();
+        assert!(out.contains("Realism sweep"));
+        assert!(out.contains("weekly") && out.contains("mixed") && out.contains("spike"));
+        let csv = std::fs::read_to_string(dir.join("realism.csv")).unwrap();
+        assert!(csv.starts_with("rhythm,cohorts,flash_crowd,placement,model"));
+        let json = std::fs::read_to_string(dir.join("realism.json")).unwrap();
+        let v = Json::parse(&json).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 96, "8 realism triples × 4 placements × 3 models");
+        // The scenario echo carries all three realism axes.  Cells run
+        // triple-major (rhythm, cohorts, flash), then placement × model.
+        let wl = |i: usize, key: &str| {
+            arr[i]
+                .get("scenario")
+                .unwrap()
+                .get("workload")
+                .unwrap()
+                .get(key)
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .to_string()
+        };
+        assert_eq!(wl(0, "rhythm"), "flat");
+        assert_eq!(wl(0, "cohorts"), "uniform");
+        assert_eq!(wl(0, "flash_crowd"), "none");
+        assert_eq!(wl(12, "flash_crowd"), "spike");
+        assert_eq!(wl(24, "cohorts"), "mixed");
+        assert_eq!(wl(95, "rhythm"), "weekly");
+        assert_eq!(wl(95, "cohorts"), "mixed");
+        assert_eq!(wl(95, "flash_crowd"), "spike");
+        let metrics = |i: usize| arr[i].get("metrics").unwrap();
+        // Uniform cells keep per-cohort accounting off; mixed cells
+        // report all three cohorts and conserve the request count.
+        assert_eq!(metrics(0).get("cohort_stats").unwrap().as_arr().unwrap().len(), 0);
+        let stats = metrics(24).get("cohort_stats").unwrap().as_arr().unwrap();
+        assert_eq!(stats.len(), 3);
+        let total: f64 = stats
+            .iter()
+            .map(|s| s.get("requests").unwrap().as_f64().unwrap())
+            .sum();
+        assert_eq!(
+            total,
+            metrics(24).get("requests_total").unwrap().as_f64().unwrap(),
+            "per-cohort requests must conserve the total"
+        );
+        // The arrival-rate observable is live on every cell; flash
+        // attribution never exceeds total origin traffic.
+        assert!(metrics(0).get("peak_minute_arrivals").unwrap().as_f64().unwrap() >= 1.0);
+        let flash_bytes = metrics(12).get("flash_origin_bytes").unwrap().as_f64().unwrap();
+        assert!(flash_bytes >= 0.0);
+        assert!(flash_bytes <= metrics(12).get("origin_bytes").unwrap().as_f64().unwrap());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -27,7 +27,7 @@ const USAGE: &str = "\
 repro — push-based data delivery framework (Qin et al. 2020 reproduction)
 
 USAGE:
-  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|scale|policies|federation|cache-depth|degraded|all>
+  repro experiment --id <fig2|table1|table2|fig3|fig4|fig9|fig10|fig11|fig12|table3|fig13|table4|table5|headline|traffic|scale|policies|federation|cache-depth|degraded|realism|all>
                    [--scale F] [--days F] [--out DIR] [--quick] [--seed N]
                    [--jobs N]
   repro analyze [--scale F]
@@ -39,6 +39,8 @@ USAGE:
                  [--net best|medium|worst] [--traffic F]
                  [--topology vdc|hierarchical|federation]
                  [--faults none|flaky-links|cache-churn|storm] [--retry-budget N]
+                 [--rhythm flat|diurnal|weekly] [--cohorts uniform|mixed]
+                 [--flash-crowd none|spike|surge]
                  [--users N] [--streaming] [--no-placement]
                  [--scale F] [--days F] [--seed N] [--quick] [--json]
   repro generate-trace --observatory <ooi|gage> [--scale F] [--out FILE]
@@ -58,6 +60,12 @@ transient outages, cache-node churn (DESIGN.md §13) — with Globus-style
 retry/resume; `--retry-budget N` caps per-transfer retries (0 disables
 resume, so severed remainders are abandoned and the request counts as
 failed).
+The workload-realism axes (DESIGN.md §14) reshape the demand itself:
+`--rhythm` modulates arrivals by time-of-day/day-of-week, `--cohorts`
+splits users into interactive/bulk/campaign populations (per-cohort
+hit rates land in the metrics), and `--flash-crowd` schedules events
+that send a population slice to the same few streams at once; all
+three default off and are bit-identical to the unflagged run when off.
 `--users N`
 overrides the preset's user population; `--streaming` runs over the
 lazy arrival source (O(active-users) memory — required for
@@ -224,6 +232,15 @@ fn scenario_from_flags(flags: &HashMap<String, String>) -> Result<Scenario> {
     } else if flags.contains_key("retry-budget") {
         bail!("--retry-budget requires a fault profile (--faults flaky-links|cache-churn|storm)");
     }
+    if let Some(r) = flags.get("rhythm") {
+        b = b.rhythm(r.parse::<obsd::scenario::RhythmSpec>()?);
+    }
+    if let Some(c) = flags.get("cohorts") {
+        b = b.cohorts(c.parse::<obsd::scenario::CohortSpec>()?);
+    }
+    if let Some(f) = flags.get("flash-crowd") {
+        b = b.flash_crowd(f.parse::<obsd::scenario::FlashCrowdSpec>()?);
+    }
     let quick = flags.contains_key("quick");
     // Smoke mode (`--quick`): shrink the workload unless overridden —
     // what CI's scenario smoke job runs.
@@ -303,6 +320,22 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     println!("recall              {:.4}", m.recall);
     println!("peak req-state      {}", m.peak_req_states);
     println!("peak flows          {}", m.peak_flows);
+    println!("peak arrivals/min   {}", m.peak_minute_arrivals);
+    if m.flash_origin_bytes > 0.0 {
+        println!(
+            "flash origin bytes  {}",
+            obsd::util::fmt_bytes(m.flash_origin_bytes)
+        );
+    }
+    for cs in &m.cohort_stats {
+        println!(
+            "cohort {:<13}{} reqs  origin frac {:.4}  vol {}",
+            cs.cohort,
+            cs.requests,
+            cs.origin_fraction(),
+            obsd::util::fmt_bytes(cs.bytes)
+        );
+    }
     for u in &m.interior_util {
         println!(
             "interior {:<9} {}->{}  util {:.4}  carried {}",
@@ -355,8 +388,7 @@ fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
     let obs = flags
         .get("observatory")
         .context("--observatory is required")?;
-    let mut preset = presets::by_name(obs)
-        .with_context(|| format!("unknown observatory '{obs}'"))?;
+    let mut preset = presets::require(obs)?;
     preset.scale *= get_f64(flags, "scale", 1.0)?;
     let trace = generator::generate(&preset);
     let mut csv = String::from("ts,user,continent,stream,site,range_start,range_end,bytes\n");

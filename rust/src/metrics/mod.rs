@@ -62,6 +62,33 @@ pub struct TierHits {
     pub reuse: ReuseHistogram,
 }
 
+/// Per-cohort request accounting (DESIGN.md §14; populated only when
+/// the workload's cohort axis is on, so default runs keep an empty
+/// vector and diff clean against pre-realism reports).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CohortStat {
+    /// Cohort label ("interactive", "bulk", "campaign").
+    pub cohort: &'static str,
+    /// Demand requests finalized for users of this cohort.
+    pub requests: u64,
+    /// Those with any observatory-served portion.
+    pub origin_requests: u64,
+    /// Bytes served to this cohort.
+    pub bytes: f64,
+}
+
+impl CohortStat {
+    /// Fraction of the cohort's requests with an origin component —
+    /// the per-cohort miss rate the realism sweep compares.
+    pub fn origin_fraction(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.origin_requests as f64 / self.requests as f64
+        }
+    }
+}
+
 /// Aggregated metrics for one simulation run.
 #[derive(Debug, Default, Clone)]
 pub struct RunMetrics {
@@ -145,6 +172,15 @@ pub struct RunMetrics {
     /// Elapsed time of requests finalized while ≥ 1 fault was active —
     /// the availability-adjusted delivery latency.
     pub degraded_latency: Accum,
+    /// Peak arrivals in any one simulated minute — the burstiness
+    /// signal the rhythm/flash axes move (DESIGN.md §14).
+    pub peak_minute_arrivals: u64,
+    /// Origin bytes sent while a flash-crowd window was active (0 when
+    /// the flash axis is off).
+    pub flash_origin_bytes: f64,
+    /// Per-cohort accounting ("interactive"/"bulk"/"campaign" order;
+    /// empty unless the cohort axis is on).
+    pub cohort_stats: Vec<CohortStat>,
     /// Wall-clock spent in the run (for the §Perf log).
     pub wall_secs: f64,
 }
@@ -339,6 +375,37 @@ impl RunMetrics {
             "degraded_latency_secs".to_string(),
             Json::Num(self.degraded_latency_secs()),
         );
+        m.insert(
+            "peak_minute_arrivals".to_string(),
+            Json::Num(self.peak_minute_arrivals as f64),
+        );
+        m.insert(
+            "flash_origin_bytes".to_string(),
+            Json::Num(self.flash_origin_bytes),
+        );
+        m.insert(
+            "cohort_stats".to_string(),
+            Json::Arr(
+                self.cohort_stats
+                    .iter()
+                    .map(|c| {
+                        let mut s = BTreeMap::new();
+                        s.insert("cohort".to_string(), Json::Str(c.cohort.to_string()));
+                        s.insert("requests".to_string(), Json::Num(c.requests as f64));
+                        s.insert(
+                            "origin_requests".to_string(),
+                            Json::Num(c.origin_requests as f64),
+                        );
+                        s.insert("bytes".to_string(), Json::Num(c.bytes));
+                        s.insert(
+                            "origin_fraction".to_string(),
+                            Json::Num(c.origin_fraction()),
+                        );
+                        Json::Obj(s)
+                    })
+                    .collect(),
+            ),
+        );
         m.insert("throughput".to_string(), accum(&self.throughput));
         m.insert("latency".to_string(), accum(&self.latency));
         m.insert("peer_throughput".to_string(), accum(&self.peer_throughput));
@@ -464,6 +531,29 @@ impl RunMetrics {
                 },
             });
         }
+        // Realism keys are *lenient*: fixtures written before the
+        // workload-realism axes lack them, and a default-off run holds
+        // zeros/empties anyway — so absence decodes to the defaults
+        // instead of invalidating the fixture (forward compatibility,
+        // tests/golden.rs).
+        let lenient = |key: &str| v.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+        let intern_cohort = |s: &str| -> Option<&'static str> {
+            crate::trace::realism::Cohort::ALL
+                .into_iter()
+                .map(|c| c.name())
+                .find(|n| *n == s)
+        };
+        let mut cohort_stats = Vec::new();
+        if let Some(arr) = v.get("cohort_stats").and_then(Json::as_arr) {
+            for c in arr {
+                cohort_stats.push(CohortStat {
+                    cohort: intern_cohort(c.get("cohort")?.as_str()?)?,
+                    requests: c.get("requests")?.as_f64()? as u64,
+                    origin_requests: c.get("origin_requests")?.as_f64()? as u64,
+                    bytes: c.get("bytes")?.as_f64()?,
+                });
+            }
+        }
         Some(RunMetrics {
             throughput: accum("throughput")?,
             latency: accum("latency")?,
@@ -495,6 +585,9 @@ impl RunMetrics {
             bytes_abandoned: num("bytes_abandoned")?,
             degraded_secs: num("degraded_secs")?,
             origin_bytes_degraded: num("origin_bytes_degraded")?,
+            peak_minute_arrivals: lenient("peak_minute_arrivals") as u64,
+            flash_origin_bytes: lenient("flash_origin_bytes"),
+            cohort_stats,
             wall_secs: num("wall_secs")?,
         })
     }
@@ -540,6 +633,11 @@ impl RunMetrics {
                 self.degraded_latency.count,
                 other.degraded_latency.count,
             ),
+            (
+                "peak_minute_arrivals",
+                self.peak_minute_arrivals,
+                other.peak_minute_arrivals,
+            ),
         ];
         for (name, x, y) in counters {
             if x != y {
@@ -573,6 +671,11 @@ impl RunMetrics {
                 "degraded_latency.sum",
                 self.degraded_latency.sum,
                 other.degraded_latency.sum,
+            ),
+            (
+                "flash_origin_bytes",
+                self.flash_origin_bytes,
+                other.flash_origin_bytes,
             ),
         ];
         for (name, x, y) in floats {
@@ -635,6 +738,31 @@ impl RunMetrics {
                         "{} reuse histogram: {:?} vs {:?}",
                         x.tier, x.reuse, y.reuse
                     ));
+                }
+            }
+        }
+        if self.cohort_stats.len() != other.cohort_stats.len() {
+            diffs.push(format!(
+                "cohort_stats.len: {} vs {}",
+                self.cohort_stats.len(),
+                other.cohort_stats.len()
+            ));
+        } else {
+            for (x, y) in self.cohort_stats.iter().zip(&other.cohort_stats) {
+                if x.cohort != y.cohort {
+                    diffs.push(format!("cohort label: {} vs {}", x.cohort, y.cohort));
+                } else if x.requests != y.requests {
+                    diffs.push(format!(
+                        "{} requests: {} vs {}",
+                        x.cohort, x.requests, y.requests
+                    ));
+                } else if x.origin_requests != y.origin_requests {
+                    diffs.push(format!(
+                        "{} origin_requests: {} vs {}",
+                        x.cohort, x.origin_requests, y.origin_requests
+                    ));
+                } else if x.bytes.to_bits() != y.bytes.to_bits() {
+                    diffs.push(format!("{} bytes: {} vs {}", x.cohort, x.bytes, y.bytes));
                 }
             }
         }
@@ -746,6 +874,20 @@ mod tests {
         m.degraded_secs = 1234.5;
         m.origin_bytes_degraded = 2.5e6;
         m.degraded_latency.add(17.5);
+        m.peak_minute_arrivals = 321;
+        m.flash_origin_bytes = 7.5e5 + 0.125;
+        m.cohort_stats.push(CohortStat {
+            cohort: "interactive",
+            requests: 11,
+            origin_requests: 4,
+            bytes: 2.0e6 + 0.25,
+        });
+        m.cohort_stats.push(CohortStat {
+            cohort: "campaign",
+            requests: 2,
+            origin_requests: 2,
+            bytes: 9.0e6,
+        });
         m.wall_secs = 1.25;
         let text = m.to_json().to_string_pretty();
         let back = RunMetrics::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -768,9 +910,48 @@ mod tests {
         let mut h_drift = back.clone();
         h_drift.tier_hits[1].cross_user_hits = 2;
         assert_eq!(m.diff_bits(&h_drift).len(), 1);
-        let mut r_drift = back;
+        let mut r_drift = back.clone();
         r_drift.tier_hits[1].reuse.buckets[2] = 4;
         assert_eq!(m.diff_bits(&r_drift).len(), 1);
+        // Cohort drift is visible too.
+        let mut c_drift = back;
+        c_drift.cohort_stats[0].origin_requests = 5;
+        assert_eq!(m.diff_bits(&c_drift).len(), 1);
+    }
+
+    #[test]
+    fn from_json_is_lenient_about_realism_keys() {
+        // Fixtures written before the realism axes lack the new keys;
+        // they must decode to the (zero/empty) defaults, not fail —
+        // the schema-forward-compatibility half of the golden harness.
+        let mut m = RunMetrics::new();
+        m.record_served(ServedBy::Observatory);
+        m.peak_minute_arrivals = 9;
+        let mut v = m.to_json();
+        if let Json::Obj(map) = &mut v {
+            map.remove("peak_minute_arrivals");
+            map.remove("flash_origin_bytes");
+            map.remove("cohort_stats");
+        }
+        let back = RunMetrics::from_json(&v).expect("old-schema report must still decode");
+        assert_eq!(back.peak_minute_arrivals, 0);
+        assert_eq!(back.flash_origin_bytes, 0.0);
+        assert!(back.cohort_stats.is_empty());
+        // A default-off run carries exactly those defaults, so the
+        // decoded old fixture still diffs clean against it.
+        let mut fresh = RunMetrics::new();
+        fresh.record_served(ServedBy::Observatory);
+        assert!(fresh.diff_bits(&back).is_empty());
+        // Unknown cohort labels are rejected, mirroring tier interning.
+        let mut m2 = m.clone();
+        m2.cohort_stats.push(CohortStat {
+            cohort: "interactive",
+            requests: 1,
+            origin_requests: 0,
+            bytes: 1.0,
+        });
+        let bad = m2.to_json().to_string_pretty().replace("\"interactive\"", "\"wizard\"");
+        assert!(RunMetrics::from_json(&Json::parse(&bad).unwrap()).is_none());
     }
 
     #[test]

@@ -44,6 +44,9 @@ use crate::coordinator::framework::{run_core, run_streaming_core, RunParams};
 
 pub use crate::cache::network::CachePlacementSpec;
 pub use crate::faults::{FaultProfile, FaultSpec, RetryPolicy};
+pub use crate::trace::realism::{
+    CohortProfile, CohortSpec, FlashCrowdSpec, FlashProfile, RhythmProfile, RhythmSpec,
+};
 use crate::metrics::RunMetrics;
 use crate::placement::kmeans::{ClusterBackend, RustKmeans};
 use crate::prefetch::arima::{GapPredictor, RustArima};
@@ -321,6 +324,14 @@ pub struct WorkloadSpec {
     pub n_users: Option<usize>,
     /// Override the preset's trace seed.
     pub trace_seed: Option<u64>,
+    /// Time-of-day / day-of-week demand modulation (DESIGN.md §14).
+    /// The flat default leaves the generators bit-identical.
+    pub rhythm: RhythmSpec,
+    /// User-cohort mix (interactive / bulk / campaign session
+    /// geometry); uniform is the historical single-population default.
+    pub cohorts: CohortSpec,
+    /// Flash-crowd event schedule; `none` schedules nothing.
+    pub flash: FlashCrowdSpec,
 }
 
 impl Default for WorkloadSpec {
@@ -331,6 +342,9 @@ impl Default for WorkloadSpec {
             days_factor: 1.0,
             n_users: None,
             trace_seed: None,
+            rhythm: RhythmSpec::flat(),
+            cohorts: CohortSpec::uniform(),
+            flash: FlashCrowdSpec::none(),
         }
     }
 }
@@ -349,6 +363,9 @@ impl WorkloadSpec {
         if let Some(seed) = self.trace_seed {
             p.seed = seed;
         }
+        p.rhythm = self.rhythm;
+        p.cohorts = self.cohorts;
+        p.flash = self.flash;
         Ok(p)
     }
 
@@ -370,6 +387,12 @@ impl WorkloadSpec {
                 Some(s) => Json::Num(s as f64),
                 None => Json::Null,
             },
+        );
+        m.insert("rhythm".to_string(), Json::Str(self.rhythm.name().to_string()));
+        m.insert("cohorts".to_string(), Json::Str(self.cohorts.name().to_string()));
+        m.insert(
+            "flash_crowd".to_string(),
+            Json::Str(self.flash.name().to_string()),
         );
         Json::Obj(m)
     }
@@ -397,6 +420,15 @@ pub enum ScenarioError {
     BadModelOffset(f64),
     /// The workload names no known observatory preset.
     UnknownObservatory(String),
+    /// `workload.scale` must be a finite positive number (it multiplies
+    /// the preset's user population).
+    BadWorkloadScale(f64),
+    /// `workload.days_factor` must be a finite positive number (it
+    /// multiplies the preset's trace duration).
+    BadWorkloadDays(f64),
+    /// `workload.n_users == Some(0)`: a zero-user population generates
+    /// no demand and every derived rate divides by zero downstream.
+    ZeroUsers,
     /// Fault profiles sever the framework's DMZ fabric; direct-WAN
     /// delivery rides dedicated per-user pipes faults cannot touch.
     FaultsWithoutFramework { profile: &'static str },
@@ -431,6 +463,15 @@ impl fmt::Display for ScenarioError {
                 "unknown observatory preset '{name}' \
                  (ooi|gage|heavy|federation|scale|tiny)"
             ),
+            ScenarioError::BadWorkloadScale(v) => {
+                write!(f, "workload scale must be finite and positive, got {v}")
+            }
+            ScenarioError::BadWorkloadDays(v) => {
+                write!(f, "workload days_factor must be finite and positive, got {v}")
+            }
+            ScenarioError::ZeroUsers => {
+                write!(f, "workload n_users must be at least 1, got 0")
+            }
             ScenarioError::FaultsWithoutFramework { profile } => write!(
                 f,
                 "fault profile '{profile}' requires framework delivery \
@@ -602,6 +643,18 @@ impl Scenario {
                 self.workload.observatory.clone(),
             ));
         }
+        // Workload scaling knobs mirror the traffic-factor check: a
+        // NaN/zero/negative multiplier would silently produce an empty
+        // or divergent trace instead of a typed error.
+        if !self.workload.scale.is_finite() || self.workload.scale <= 0.0 {
+            return Err(ScenarioError::BadWorkloadScale(self.workload.scale));
+        }
+        if !self.workload.days_factor.is_finite() || self.workload.days_factor <= 0.0 {
+            return Err(ScenarioError::BadWorkloadDays(self.workload.days_factor));
+        }
+        if self.workload.n_users == Some(0) {
+            return Err(ScenarioError::ZeroUsers);
+        }
         if self.delivery == Delivery::DirectWan && !self.faults.is_none() {
             return Err(ScenarioError::FaultsWithoutFramework {
                 profile: self.faults.name(),
@@ -649,6 +702,9 @@ impl Scenario {
             obs_io_bps: self.obs_io_bps,
             cache_placement: self.cache_placement,
             faults: self.faults,
+            rhythm: self.workload.rhythm,
+            cohorts: self.workload.cohorts,
+            flash: self.workload.flash,
             seed: self.seed,
         }
     }
@@ -813,6 +869,24 @@ impl ScenarioBuilder {
 
     pub fn trace_seed(mut self, seed: u64) -> Self {
         self.sc.workload.trace_seed = Some(seed);
+        self
+    }
+
+    /// Time-of-day / day-of-week demand rhythm (DESIGN.md §14).
+    pub fn rhythm(mut self, r: RhythmSpec) -> Self {
+        self.sc.workload.rhythm = r;
+        self
+    }
+
+    /// User-cohort mix (interactive / bulk / campaign).
+    pub fn cohorts(mut self, c: CohortSpec) -> Self {
+        self.sc.workload.cohorts = c;
+        self
+    }
+
+    /// Flash-crowd event schedule.
+    pub fn flash_crowd(mut self, f: FlashCrowdSpec) -> Self {
+        self.sc.workload.flash = f;
         self
     }
 
@@ -1045,6 +1119,22 @@ impl ScenarioGrid {
         )
     }
 
+    /// Prefetch-model axis (labels from [`ModelSpec::kind`]), leaving
+    /// the delivery mode alone — unlike [`ScenarioGrid::strategies`],
+    /// which swaps delivery and model together.
+    pub fn models(self, ms: &[ModelSpec]) -> Self {
+        self.expand(
+            ms.iter()
+                .map(|m| {
+                    let m = m.clone();
+                    (m.kind().to_string(), move |sc: &mut Scenario| {
+                        sc.model = m.clone()
+                    })
+                })
+                .collect(),
+        )
+    }
+
     /// Eviction-policy axis.
     pub fn policies(self, ps: &[PolicyKind]) -> Self {
         self.expand(
@@ -1118,6 +1208,45 @@ impl ScenarioGrid {
                 .map(|&(label, f)| {
                     (label.to_string(), move |sc: &mut Scenario| {
                         sc.faults = f
+                    })
+                })
+                .collect(),
+        )
+    }
+
+    /// Demand-rhythm axis (labels from the profile names).
+    pub fn rhythms(self, rs: &[RhythmSpec]) -> Self {
+        self.expand(
+            rs.iter()
+                .map(|&r| {
+                    (r.name().to_string(), move |sc: &mut Scenario| {
+                        sc.workload.rhythm = r
+                    })
+                })
+                .collect(),
+        )
+    }
+
+    /// Cohort-mix axis (labels from the profile names).
+    pub fn cohort_mixes(self, cs: &[CohortSpec]) -> Self {
+        self.expand(
+            cs.iter()
+                .map(|&c| {
+                    (c.name().to_string(), move |sc: &mut Scenario| {
+                        sc.workload.cohorts = c
+                    })
+                })
+                .collect(),
+        )
+    }
+
+    /// Flash-crowd axis (labels from the profile names).
+    pub fn flash_crowds(self, fs: &[FlashCrowdSpec]) -> Self {
+        self.expand(
+            fs.iter()
+                .map(|&f| {
+                    (f.name().to_string(), move |sc: &mut Scenario| {
+                        sc.workload.flash = f
                     })
                 })
                 .collect(),
@@ -1315,6 +1444,84 @@ mod tests {
                 "{bad}: {err}"
             );
         }
+    }
+
+    #[test]
+    fn builder_rejects_bad_workload_scaling() {
+        // The WorkloadSpec validation gap: a NaN/zero/negative scale or
+        // days_factor used to sail through to the generators.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -2.0] {
+            let err = Scenario::builder().workload_scale(bad).build().unwrap_err();
+            assert!(
+                matches!(err, ScenarioError::BadWorkloadScale(_)),
+                "{bad}: {err}"
+            );
+            assert!(
+                err.to_string().contains("workload scale"),
+                "{bad}: message names the knob: {err}"
+            );
+            let err = Scenario::builder().days_factor(bad).build().unwrap_err();
+            assert!(
+                matches!(err, ScenarioError::BadWorkloadDays(_)),
+                "{bad}: {err}"
+            );
+            assert!(
+                err.to_string().contains("days_factor"),
+                "{bad}: message names the knob: {err}"
+            );
+        }
+        let err = Scenario::builder().users(0).build().unwrap_err();
+        assert_eq!(err, ScenarioError::ZeroUsers);
+        assert_eq!(err.to_string(), "workload n_users must be at least 1, got 0");
+        // The valid edges pass: tiny positive scale, one user.
+        assert!(Scenario::builder().workload_scale(0.01).build().is_ok());
+        assert!(Scenario::builder().users(1).build().is_ok());
+        // Re-validation after direct mutation (the sweep path).
+        let mut sc = Scenario::default();
+        sc.workload.days_factor = -1.0;
+        assert!(matches!(
+            sc.validate().unwrap_err(),
+            ScenarioError::BadWorkloadDays(_)
+        ));
+    }
+
+    #[test]
+    fn workload_realism_axes_echo_and_expand() {
+        let sc = Scenario::builder()
+            .rhythm(RhythmSpec::preset(RhythmProfile::Weekly))
+            .cohorts(CohortSpec::preset(CohortProfile::Mixed))
+            .flash_crowd(FlashCrowdSpec::preset(FlashProfile::Spike))
+            .build()
+            .unwrap();
+        let echo = sc.to_json();
+        let w = echo.get("workload").expect("workload echoed");
+        assert_eq!(w.get("rhythm").unwrap().as_str(), Some("weekly"));
+        assert_eq!(w.get("cohorts").unwrap().as_str(), Some("mixed"));
+        assert_eq!(w.get("flash_crowd").unwrap().as_str(), Some("spike"));
+        // The lowered params carry the same axes.
+        let params = sc.run_params();
+        assert_eq!(params.rhythm, sc.workload.rhythm);
+        assert_eq!(params.cohorts, sc.workload.cohorts);
+        assert_eq!(params.flash, sc.workload.flash);
+        // Defaults echo as the inert spellings.
+        let w = Scenario::default().to_json();
+        let w = w.get("workload").unwrap().clone();
+        assert_eq!(w.get("rhythm").unwrap().as_str(), Some("flat"));
+        assert_eq!(w.get("cohorts").unwrap().as_str(), Some("uniform"));
+        assert_eq!(w.get("flash_crowd").unwrap().as_str(), Some("none"));
+        // Grid axes expand with profile-name labels, last-fastest.
+        let grid = ScenarioGrid::new(Scenario::preset(Strategy::CacheOnly))
+            .rhythms(&[RhythmSpec::flat(), RhythmSpec::preset(RhythmProfile::Diurnal)])
+            .cohort_mixes(&[CohortSpec::uniform(), CohortSpec::preset(CohortProfile::Mixed)])
+            .flash_crowds(&[FlashCrowdSpec::none(), FlashCrowdSpec::preset(FlashProfile::Surge)]);
+        assert_eq!(grid.len(), 8);
+        let labels: Vec<String> = grid.cells().iter().map(|(l, _)| l.join("/")).collect();
+        assert_eq!(labels[0], "flat/uniform/none");
+        assert_eq!(labels[7], "diurnal/mixed/surge");
+        let sc = &grid.cells()[7].1;
+        assert_eq!(sc.workload.rhythm, RhythmSpec::preset(RhythmProfile::Diurnal));
+        assert_eq!(sc.workload.cohorts, CohortSpec::preset(CohortProfile::Mixed));
+        assert_eq!(sc.workload.flash, FlashCrowdSpec::preset(FlashProfile::Surge));
     }
 
     #[test]

@@ -15,6 +15,7 @@
 pub mod classifier;
 pub mod generator;
 pub mod presets;
+pub mod realism;
 pub mod source;
 
 use crate::util::rng::Rng;
@@ -167,7 +168,7 @@ impl User {
 
 /// One access request: "user `user` at wall time `ts` asked for stream
 /// `stream` over observation range `range`" (paper eq. 1 tuple).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub user: UserId,
     /// Wall-clock submission time, seconds since trace epoch.
@@ -205,6 +206,10 @@ pub struct Trace {
     pub users: Vec<User>,
     /// Requests sorted by submission time.
     pub requests: Vec<Request>,
+    /// Flash-crowd windows `[at, until)` active in this trace (empty
+    /// unless the workload's `FlashCrowdSpec` scheduled events); the
+    /// coordinator attributes origin bytes inside them.
+    pub flash_windows: Vec<(f64, f64)>,
 }
 
 impl Trace {
@@ -264,6 +269,10 @@ impl Trace {
         }
         t.chunk_secs = self.chunk_secs / factor;
         t.duration = self.duration / factor;
+        for w in &mut t.flash_windows {
+            w.0 /= factor;
+            w.1 /= factor;
+        }
         t
     }
 
@@ -338,9 +347,11 @@ mod tests {
                 stream: StreamId(0),
                 range: TimeRange::new(0.0, 1.0),
             }],
+            flash_windows: vec![(40.0, 80.0)],
         };
         let heavy = t.with_traffic_factor(4.0);
         assert_eq!(heavy.duration, 25.0);
         assert_eq!(heavy.requests[0].ts, 12.5);
+        assert_eq!(heavy.flash_windows, vec![(10.0, 20.0)]);
     }
 }

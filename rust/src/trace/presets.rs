@@ -8,6 +8,7 @@
 //! volume mix, request-type mix, overlap ratio, continent distribution
 //! — match the published numbers by construction.
 
+use crate::trace::realism::{CohortSpec, FlashCrowdSpec, RhythmSpec};
 use crate::trace::Continent;
 
 /// Per-continent profile: share of users, and the WAN throughput the
@@ -79,6 +80,15 @@ pub struct PresetConfig {
     pub scale: f64,
     /// RNG seed.
     pub seed: u64,
+    /// Time-of-day × day-of-week arrival modulation (DESIGN.md §14);
+    /// `flat` is bit-identical to the pre-realism generators.
+    pub rhythm: RhythmSpec,
+    /// Heterogeneous-cohort mix; `uniform` is bit-identical to the
+    /// pre-realism generators.
+    pub cohorts: CohortSpec,
+    /// Event-driven flash-crowd schedule; `none` is bit-identical to
+    /// the pre-realism generators.
+    pub flash: FlashCrowdSpec,
 }
 
 impl PresetConfig {
@@ -171,6 +181,9 @@ pub fn ooi() -> PresetConfig {
         ],
         scale: 1.0,
         seed: 0x001_0011,
+        rhythm: RhythmSpec::flat(),
+        cohorts: CohortSpec::uniform(),
+        flash: FlashCrowdSpec::none(),
     }
 }
 
@@ -237,6 +250,9 @@ pub fn gage() -> PresetConfig {
         ],
         scale: 1.0,
         seed: 0x6A6_E001,
+        rhythm: RhythmSpec::flat(),
+        cohorts: CohortSpec::uniform(),
+        flash: FlashCrowdSpec::none(),
     }
 }
 
@@ -349,6 +365,9 @@ pub fn tiny() -> PresetConfig {
     p
 }
 
+/// Every name [`by_name`] accepts, for error listings.
+pub const NAMES: [&str; 6] = ["ooi", "gage", "heavy", "federation", "scale", "tiny"];
+
 /// Look up a preset by (case-insensitive) name.
 pub fn by_name(name: &str) -> Option<PresetConfig> {
     match name.to_ascii_lowercase().as_str() {
@@ -360,6 +379,18 @@ pub fn by_name(name: &str) -> Option<PresetConfig> {
         "tiny" => Some(tiny()),
         _ => None,
     }
+}
+
+/// Preset lookup for library/CLI paths that must *fail*, not panic or
+/// silently fall back: an unknown name becomes the standard
+/// alias-listing [`ParseError`] (every accepted preset in the
+/// message), the same shape every other axis flag reports.
+pub fn require(name: &str) -> Result<PresetConfig, crate::util::parse::ParseError> {
+    by_name(name).ok_or_else(|| crate::util::parse::ParseError {
+        what: "observatory preset",
+        got: name.to_string(),
+        accepted: NAMES.to_vec(),
+    })
 }
 
 #[cfg(test)]
@@ -439,6 +470,18 @@ mod tests {
         assert!(by_name("heavy").is_some());
         assert!(by_name("scale").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn require_lists_every_preset_on_miss() {
+        assert_eq!(require("OOI").unwrap().name, "OOI");
+        let err = require("nope").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("observatory preset"), "{msg}");
+        assert!(msg.contains("'nope'"), "{msg}");
+        for name in NAMES {
+            assert!(msg.contains(name), "{msg} missing {name}");
+        }
     }
 
     #[test]

@@ -1,0 +1,607 @@
+//! Workload realism axes: diurnal rhythms, user cohorts, and flash
+//! crowds (DESIGN.md §14).
+//!
+//! The paper's credibility rests on its access-trace analysis (§III):
+//! real OOI/GAGE demand has strong time-of-day and day-of-week
+//! structure, heterogeneous user populations, and event-driven spikes —
+//! none of which the stationary per-user generators express.  This
+//! module supplies the *specification side* of three composable
+//! workload axes:
+//!
+//! * [`RhythmSpec`] — time-of-day × day-of-week arrival-rate
+//!   modulation, applied by deterministic thinning of each user's
+//!   inter-arrival draws (one extra uniform per candidate arrival,
+//!   drawn from the user's own substream, so the construction is
+//!   identical on the materialized and streaming fronts).
+//! * [`CohortSpec`] — heterogeneous cohorts (interactive / bulk /
+//!   campaign) with per-cohort session geometry, assigned by a
+//!   *seedless* per-user hash so the cohort mix is stable across run
+//!   seeds and population scales.
+//! * [`FlashCrowdSpec`] — an event schedule (seed-forked off its own
+//!   RNG stream, like `FaultSpec`) that sends a fraction of the
+//!   population to the same few streams within a short window (the
+//!   "geophysical event hits GAGE" scenario).
+//!
+//! The *mechanism side* — thinning inside the per-user generators,
+//! merging flash requests into the arrival stream — lives in
+//! `trace::source`; this module is pure data and generation so a
+//! schedule or cohort assignment can be inspected without building a
+//! world.
+//!
+//! # Determinism contract
+//!
+//! Every default (`flat` / `uniform` / `none`) takes **zero** extra RNG
+//! draws, so defaults-off runs are bit-identical to the pre-realism
+//! engine.  Rhythm thinning draws come from the owning user's
+//! substream, preserving per-user replay.  Cohort assignment and
+//! flash-crowd participation hash the stable user id through a seedless
+//! SplitMix64 finalizer — independent of the run seed, the trace seed,
+//! and the population size, so "user 17 is a bulk program" holds across
+//! every cell of a sweep.  The flash schedule forks off its own stream
+//! tag ([`FLASH_STREAM_TAG`]) exactly like the fault schedule, so it
+//! never perturbs trace generation.
+
+use crate::trace::{Request, StreamId, TimeRange, UserId};
+use crate::util::parse::{lookup, ParseError};
+use crate::util::rng::Rng;
+
+/// Stream tag reserved for flash-crowd schedule generation (see
+/// [`Rng::stream`]); no other subsystem may use it.
+pub const FLASH_STREAM_TAG: u64 = 0xF1A5;
+
+/// SplitMix64 finalizer over a raw key — the seedless hash behind
+/// cohort assignment and flash participation.  Same constants as the
+/// crate RNG's stream derivation; no state, no draws.
+fn mix(z: u64) -> u64 {
+    let mut z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Map a hash to `[0, 1)` with the same 53-bit construction as
+/// `Rng::f64`.
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+// ---------------------------------------------------------------------
+// Rhythm: time-of-day × day-of-week arrival modulation
+// ---------------------------------------------------------------------
+
+/// Named arrival-rate rhythm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RhythmProfile {
+    /// Stationary arrivals — bit-identical to the pre-realism engine.
+    #[default]
+    Flat,
+    /// Time-of-day modulation only: a smooth cosine peaking
+    /// mid-afternoon (15:00 trace time), bottoming out ~03:00.
+    Diurnal,
+    /// Diurnal modulation plus weekend damping (days 5–6 of each
+    /// 7-day week run at 45% of weekday intensity).
+    Weekly,
+}
+
+impl RhythmProfile {
+    pub const ALL: [RhythmProfile; 3] =
+        [RhythmProfile::Flat, RhythmProfile::Diurnal, RhythmProfile::Weekly];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RhythmProfile::Flat => "flat",
+            RhythmProfile::Diurnal => "diurnal",
+            RhythmProfile::Weekly => "weekly",
+        }
+    }
+}
+
+/// The rhythm axis of a workload: arrival-rate modulation applied by
+/// thinning (each candidate arrival survives with probability
+/// [`RhythmSpec::intensity`] at its timestamp).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RhythmSpec {
+    pub profile: RhythmProfile,
+}
+
+impl RhythmSpec {
+    pub fn flat() -> Self {
+        Self::default()
+    }
+
+    pub fn preset(profile: RhythmProfile) -> Self {
+        Self { profile }
+    }
+
+    /// True for the stationary default — the gate for every thinning
+    /// branch in the generators (a flat run takes zero extra draws).
+    pub fn is_flat(&self) -> bool {
+        self.profile == RhythmProfile::Flat
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.profile.name()
+    }
+
+    /// Keep-probability for a candidate arrival at trace time `t`
+    /// (seconds since epoch).  Always in `(0, 1]`, with max 1.0 so it
+    /// is a valid thinning probability; `Flat` is identically 1.0.
+    pub fn intensity(&self, t: f64) -> f64 {
+        match self.profile {
+            RhythmProfile::Flat => 1.0,
+            RhythmProfile::Diurnal => diurnal(t),
+            RhythmProfile::Weekly => {
+                let day = (t / 86_400.0).floor().rem_euclid(7.0);
+                let damp = if day >= 5.0 { 0.45 } else { 1.0 };
+                diurnal(t) * damp
+            }
+        }
+    }
+}
+
+/// Smooth time-of-day curve: peak 1.0 at 15:00, floor 0.15 at 03:00.
+fn diurnal(t: f64) -> f64 {
+    let h = (t / 3600.0).rem_euclid(24.0);
+    0.575 + 0.425 * ((h - 15.0) / 24.0 * std::f64::consts::TAU).cos()
+}
+
+impl std::str::FromStr for RhythmSpec {
+    type Err = ParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        lookup(
+            "rhythm",
+            s,
+            &[
+                (&["flat", "off", "none"], RhythmProfile::Flat),
+                (&["diurnal", "daily", "day"], RhythmProfile::Diurnal),
+                (&["weekly", "week"], RhythmProfile::Weekly),
+            ],
+        )
+        .map(RhythmSpec::preset)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cohorts: heterogeneous user populations
+// ---------------------------------------------------------------------
+
+/// Named cohort mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CohortProfile {
+    /// One homogeneous population — bit-identical to the pre-realism
+    /// engine.
+    #[default]
+    Uniform,
+    /// Three cohorts (interactive / bulk / campaign) at a fixed
+    /// 60/30/10 mix, assigned by seedless per-user hash.
+    Mixed,
+}
+
+impl CohortProfile {
+    pub const ALL: [CohortProfile; 2] = [CohortProfile::Uniform, CohortProfile::Mixed];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CohortProfile::Uniform => "uniform",
+            CohortProfile::Mixed => "mixed",
+        }
+    }
+}
+
+/// One behavioural cohort in the mixed population.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cohort {
+    /// Interactive humans: frequent short sessions over small ranges.
+    Interactive,
+    /// Bulk programs: slower cadence, wide observation windows.
+    Bulk,
+    /// Campaign users: rare but very large coordinated pulls.
+    Campaign,
+}
+
+impl Cohort {
+    pub const ALL: [Cohort; 3] = [Cohort::Interactive, Cohort::Bulk, Cohort::Campaign];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Cohort::Interactive => "interactive",
+            Cohort::Bulk => "bulk",
+            Cohort::Campaign => "campaign",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        match self {
+            Cohort::Interactive => 0,
+            Cohort::Bulk => 1,
+            Cohort::Campaign => 2,
+        }
+    }
+
+    /// Session-rate multiplier for human users (applied to the mean
+    /// sessions-per-user-per-day rate).
+    pub fn session_rate_mul(&self) -> f64 {
+        match self {
+            Cohort::Interactive => 1.6,
+            Cohort::Bulk => 0.6,
+            Cohort::Campaign => 0.25,
+        }
+    }
+
+    /// Observation-range multiplier for human requests.
+    pub fn range_mul(&self) -> f64 {
+        match self {
+            Cohort::Interactive => 0.5,
+            Cohort::Bulk => 2.5,
+            Cohort::Campaign => 6.0,
+        }
+    }
+
+    /// Lookback-window multiplier for program users.
+    pub fn window_mul(&self) -> f64 {
+        match self {
+            Cohort::Interactive => 0.75,
+            Cohort::Bulk => 2.0,
+            Cohort::Campaign => 4.0,
+        }
+    }
+
+    /// Polling-period multiplier for program users (campaigns poll
+    /// rarely but pull wide windows).
+    pub fn period_mul(&self) -> f64 {
+        match self {
+            Cohort::Interactive => 0.75,
+            Cohort::Bulk => 1.5,
+            Cohort::Campaign => 3.0,
+        }
+    }
+}
+
+/// The cohort axis of a workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CohortSpec {
+    pub profile: CohortProfile,
+}
+
+impl CohortSpec {
+    pub fn uniform() -> Self {
+        Self::default()
+    }
+
+    pub fn preset(profile: CohortProfile) -> Self {
+        Self { profile }
+    }
+
+    /// True for the homogeneous default — the gate for every cohort
+    /// branch in the generators.
+    pub fn is_uniform(&self) -> bool {
+        self.profile == CohortProfile::Uniform
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.profile.name()
+    }
+
+    /// Cohort of a user id under the mixed profile: a seedless hash,
+    /// so the assignment is identical across run seeds, trace seeds,
+    /// and population sizes (user 17 is `Bulk` in every cell of a
+    /// sweep).  Buckets: 60% interactive, 30% bulk, 10% campaign.
+    pub fn cohort_of(user: u32) -> Cohort {
+        let u = unit(mix(0xC0_0817 ^ ((user as u64) << 1)));
+        if u < 0.6 {
+            Cohort::Interactive
+        } else if u < 0.9 {
+            Cohort::Bulk
+        } else {
+            Cohort::Campaign
+        }
+    }
+}
+
+impl std::str::FromStr for CohortSpec {
+    type Err = ParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        lookup(
+            "cohort mix",
+            s,
+            &[
+                (&["uniform", "off", "none"], CohortProfile::Uniform),
+                (&["mixed", "cohorts", "heterogeneous"], CohortProfile::Mixed),
+            ],
+        )
+        .map(CohortSpec::preset)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Flash crowds: event-driven demand spikes
+// ---------------------------------------------------------------------
+
+/// Named flash-crowd intensity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FlashProfile {
+    /// No events — bit-identical to the pre-realism engine.
+    #[default]
+    None,
+    /// Occasional events (mean gap 12 h) pulling 25% of the population
+    /// to 3 hot streams for 30–90 minutes.
+    Spike,
+    /// Frequent events (mean gap 6 h) pulling 50% of the population to
+    /// 5 hot streams for 1–3 hours — the stress preset.
+    Surge,
+}
+
+impl FlashProfile {
+    pub const ALL: [FlashProfile; 3] =
+        [FlashProfile::None, FlashProfile::Spike, FlashProfile::Surge];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FlashProfile::None => "none",
+            FlashProfile::Spike => "spike",
+            FlashProfile::Surge => "surge",
+        }
+    }
+}
+
+/// The flash-crowd axis of a workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FlashCrowdSpec {
+    pub profile: FlashProfile,
+}
+
+impl FlashCrowdSpec {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn preset(profile: FlashProfile) -> Self {
+        Self { profile }
+    }
+
+    /// True for the eventless default — the gate for every flash
+    /// branch in the arrival source and the coordinator.
+    pub fn is_none(&self) -> bool {
+        self.profile == FlashProfile::None
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.profile.name()
+    }
+
+    /// Expand the profile into this run's event schedule: every onset
+    /// strictly inside `[0, duration)`, sorted by onset (stable).
+    /// `seed` is the trace seed; generation uses its own
+    /// [`Rng::stream`] tag so the schedule never perturbs trace
+    /// generation — exactly the `FaultSpec::schedule` construction.
+    pub fn schedule(&self, n_streams: usize, duration: f64, seed: u64) -> Vec<FlashEvent> {
+        if self.is_none() || duration <= 0.0 || n_streams == 0 {
+            return Vec::new();
+        }
+        let (mean_gap, hold_lo, hold_hi, frac, k) = match self.profile {
+            FlashProfile::None => unreachable!(),
+            FlashProfile::Spike => (43_200.0, 1_800.0, 5_400.0, 0.25, 3),
+            FlashProfile::Surge => (21_600.0, 3_600.0, 10_800.0, 0.5, 5),
+        };
+        let mut root = Rng::stream(seed, FLASH_STREAM_TAG);
+        let mut rng = root.fork(1);
+        const MAX_EVENTS: usize = 1024;
+        let mut events = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..MAX_EVENTS {
+            t += rng.exp(1.0 / mean_gap).max(600.0);
+            if t >= duration {
+                break;
+            }
+            let hold = rng.range(hold_lo, hold_hi);
+            // Distinct hot streams, drawn until k unique (k is tiny
+            // relative to any real catalog; bounded loop as backstop).
+            let want = k.min(n_streams);
+            let mut streams: Vec<u32> = Vec::with_capacity(want);
+            for _ in 0..64 {
+                if streams.len() == want {
+                    break;
+                }
+                let s = rng.below(n_streams) as u32;
+                if !streams.contains(&s) {
+                    streams.push(s);
+                }
+            }
+            events.push(FlashEvent { at: t, until: t + hold, streams, frac });
+        }
+        // Stable sort by onset (the walk is already monotone; the sort
+        // pins the contract against future multi-category walks).
+        events.sort_by(|x, y| x.at.total_cmp(&y.at));
+        events
+    }
+}
+
+impl std::str::FromStr for FlashCrowdSpec {
+    type Err = ParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        lookup(
+            "flash-crowd profile",
+            s,
+            &[
+                (&["none", "off"], FlashProfile::None),
+                (&["spike", "event"], FlashProfile::Spike),
+                (&["surge", "crowd"], FlashProfile::Surge),
+            ],
+        )
+        .map(FlashCrowdSpec::preset)
+    }
+}
+
+/// One scheduled flash crowd: active over `[at, until)`, pulling
+/// `frac` of the population onto `streams`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlashEvent {
+    /// Onset time (seconds into the trace), `< duration`.
+    pub at: f64,
+    /// End of the window, `> at`.
+    pub until: f64,
+    /// The hot streams (distinct, non-empty).
+    pub streams: Vec<u32>,
+    /// Fraction of the population participating, in `(0, 1]`.
+    pub frac: f64,
+}
+
+impl FlashEvent {
+    /// Does `user` join event number `idx`?  Seedless hash of
+    /// `(event index, user id)` against `frac`, so participation is
+    /// independent of population size and run seed: growing the
+    /// population never flips an existing user's decision.
+    pub fn participates(&self, idx: usize, user: u32) -> bool {
+        let h = mix(((idx as u64) << 32) ^ (user as u64) ^ 0xF1A5_C0DE);
+        unit(h) < self.frac
+    }
+
+    /// The one request `user` contributes to event `idx`: a recent
+    /// 30-minute slice of a hot stream, submitted at a hashed offset
+    /// inside the window (so participants do not all arrive in the
+    /// same instant).  Pure function of `(idx, user)` — no RNG draws,
+    /// hence no perturbation of any generator's substream.
+    pub fn request_for(&self, idx: usize, user: u32, duration: f64) -> Request {
+        let h1 = mix(((idx as u64) << 32) ^ ((user as u64) << 1) ^ 0x0FF5_E701);
+        let h2 = mix(((idx as u64) << 32) ^ ((user as u64) << 1) ^ 0x0FF5_E702);
+        let stream = self.streams[(h1 % self.streams.len() as u64) as usize];
+        let ts = (self.at + unit(h2) * (self.until - self.at)).min(duration);
+        // Everyone wants the same fresh data: the slice ending at the
+        // event onset (cacheable across participants by construction).
+        let end = self.at.max(60.0);
+        let start = (end - 1_800.0).max(0.0);
+        Request {
+            user: UserId(user),
+            ts,
+            stream: StreamId(stream),
+            range: TimeRange::new(start, end),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WEEK: f64 = 7.0 * 86_400.0;
+
+    #[test]
+    fn defaults_are_inert() {
+        assert!(RhythmSpec::default().is_flat());
+        assert!(CohortSpec::default().is_uniform());
+        assert!(FlashCrowdSpec::default().is_none());
+        assert_eq!(RhythmSpec::flat().intensity(12_345.0), 1.0);
+        assert!(FlashCrowdSpec::none().schedule(100, WEEK, 42).is_empty());
+        // Non-none profiles with a degenerate window also schedule
+        // nothing (no stray draws, no divisions by zero).
+        assert!(FlashCrowdSpec::preset(FlashProfile::Surge).schedule(100, 0.0, 42).is_empty());
+        assert!(FlashCrowdSpec::preset(FlashProfile::Surge).schedule(0, WEEK, 42).is_empty());
+    }
+
+    #[test]
+    fn intensity_is_a_valid_keep_probability() {
+        for spec in RhythmProfile::ALL.map(RhythmSpec::preset) {
+            for i in 0..(14 * 24) {
+                let t = i as f64 * 3600.0 + 17.0;
+                let p = spec.intensity(t);
+                assert!(p > 0.0 && p <= 1.0, "{}: intensity({t}) = {p}", spec.name());
+            }
+        }
+        // Diurnal peaks mid-afternoon and bottoms out at night.
+        let d = RhythmSpec::preset(RhythmProfile::Diurnal);
+        assert!(d.intensity(15.0 * 3600.0) > 0.99);
+        assert!(d.intensity(3.0 * 3600.0) < 0.16);
+        // Weekly damps days 5 and 6.
+        let w = RhythmSpec::preset(RhythmProfile::Weekly);
+        let weekday = w.intensity(2.0 * 86_400.0 + 15.0 * 3600.0);
+        let weekend = w.intensity(5.0 * 86_400.0 + 15.0 * 3600.0);
+        assert!(weekend < weekday * 0.5);
+    }
+
+    #[test]
+    fn cohort_assignment_is_stable_and_mixed() {
+        let mut counts = [0usize; 3];
+        for u in 0..10_000u32 {
+            let c = CohortSpec::cohort_of(u);
+            assert_eq!(c, CohortSpec::cohort_of(u), "assignment must be pure");
+            counts[c.index()] += 1;
+        }
+        // 60/30/10 mix within loose tolerance.
+        assert!((5_400..=6_600).contains(&counts[0]), "interactive {counts:?}");
+        assert!((2_400..=3_600).contains(&counts[1]), "bulk {counts:?}");
+        assert!((600..=1_400).contains(&counts[2]), "campaign {counts:?}");
+    }
+
+    #[test]
+    fn schedules_are_deterministic_per_seed() {
+        let spec = FlashCrowdSpec::preset(FlashProfile::Surge);
+        let a = spec.schedule(200, WEEK, 7);
+        let b = spec.schedule(200, WEEK, 7);
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+        let c = spec.schedule(200, WEEK, 8);
+        assert_ne!(a, c, "different seeds must produce different events");
+    }
+
+    #[test]
+    fn events_sorted_inside_window_with_distinct_streams() {
+        for profile in [FlashProfile::Spike, FlashProfile::Surge] {
+            let ev = FlashCrowdSpec::preset(profile).schedule(50, WEEK, 11);
+            assert!(!ev.is_empty(), "{profile:?} scheduled nothing over a week");
+            for w in ev.windows(2) {
+                assert!(w[0].at <= w[1].at, "{profile:?} schedule out of order");
+            }
+            for e in &ev {
+                assert!(e.at >= 0.0 && e.at < WEEK);
+                assert!(e.until > e.at);
+                assert!(!e.streams.is_empty());
+                assert!(e.frac > 0.0 && e.frac <= 1.0);
+                let mut s = e.streams.clone();
+                s.sort_unstable();
+                s.dedup();
+                assert_eq!(s.len(), e.streams.len(), "hot streams must be distinct");
+                assert!(e.streams.iter().all(|&x| (x as usize) < 50));
+            }
+        }
+    }
+
+    #[test]
+    fn participation_tracks_fraction_and_population_scale() {
+        let ev = FlashEvent { at: 1_000.0, until: 4_000.0, streams: vec![3, 7], frac: 0.25 };
+        let small: Vec<u32> = (0..1_000).filter(|&u| ev.participates(0, u)).collect();
+        let big: Vec<u32> = (0..100_000).filter(|&u| ev.participates(0, u)).collect();
+        // Roughly frac of the population joins...
+        let rate = big.len() as f64 / 100_000.0;
+        assert!((0.2..=0.3).contains(&rate), "participation rate {rate}");
+        // ...and growing the population never flips an existing user.
+        assert_eq!(&big[..small.len()], &small[..], "participation must scale-extend");
+        // Different events recruit different users.
+        let other: Vec<u32> = (0..1_000).filter(|&u| ev.participates(1, u)).collect();
+        assert_ne!(small, other);
+    }
+
+    #[test]
+    fn flash_requests_are_pure_and_inside_the_window() {
+        let ev = FlashEvent { at: 10_000.0, until: 13_000.0, streams: vec![3, 7], frac: 0.5 };
+        for u in 0..200u32 {
+            let r = ev.request_for(2, u, WEEK);
+            assert_eq!(r, ev.request_for(2, u, WEEK), "must be pure");
+            assert_eq!(r.user, UserId(u));
+            assert!(r.ts >= ev.at && r.ts <= ev.until);
+            assert!(ev.streams.contains(&r.stream.0));
+            assert!(r.range.duration() > 0.0);
+            assert!(r.range.end <= ev.at, "participants pull the pre-onset slice");
+        }
+    }
+
+    #[test]
+    fn spec_json_names_round_trip() {
+        assert_eq!("weekly".parse::<RhythmSpec>().unwrap().name(), "weekly");
+        assert_eq!("mixed".parse::<CohortSpec>().unwrap().name(), "mixed");
+        assert_eq!("spike".parse::<FlashCrowdSpec>().unwrap().name(), "spike");
+        assert!("purple".parse::<RhythmSpec>().is_err());
+    }
+}

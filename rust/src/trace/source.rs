@@ -30,6 +30,7 @@ use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
 use crate::trace::presets::PresetConfig;
+use crate::trace::realism::{CohortSpec, FlashEvent};
 use crate::trace::{
     Continent, Request, Site, SiteId, Stream, StreamId, TimeRange, Trace, User, UserId, UserKind,
 };
@@ -74,6 +75,10 @@ pub struct StreamingTrace {
     /// volume share matches Table I (requires the total program volume,
     /// obtained by a request-free dry run over the program substreams).
     human_range_secs: f64,
+    /// Flash-crowd event schedule (empty unless `cfg.flash` is a
+    /// non-none profile), forked off its own RNG stream tag so it never
+    /// perturbs the generators above (DESIGN.md §14).
+    flash_events: Vec<FlashEvent>,
 }
 
 impl StreamingTrace {
@@ -165,6 +170,11 @@ impl StreamingTrace {
         let human_range_secs = (hu_volume_target / (expected_hu_reqs.max(1.0) * mean_rate))
             .clamp(60.0, 14.0 * 86_400.0);
 
+        // ---- Flash-crowd schedule (DESIGN.md §14) ----------------------
+        // Its own stream tag, like the fault schedule: the default
+        // (`none`) takes zero draws and leaves the windows empty.
+        let flash_events = cfg.flash.schedule(streams.len(), duration, cfg.seed);
+
         StreamingTrace {
             world: Trace {
                 observatory: cfg.name.to_string(),
@@ -174,12 +184,14 @@ impl StreamingTrace {
                 streams,
                 users,
                 requests: Vec::new(),
+                flash_windows: flash_events.iter().map(|e| (e.at, e.until)).collect(),
             },
             cfg: cfg.clone(),
             topics,
             by_site,
             user_rngs,
             human_range_secs,
+            flash_events,
         }
     }
 
@@ -188,6 +200,7 @@ impl StreamingTrace {
     /// so two sources over the same `StreamingTrace` yield identical
     /// sequences.
     pub fn source(&self) -> ArrivalSource<'_> {
+        let uniform = self.cfg.cohorts.is_uniform();
         let gens: Vec<UserGen> = self
             .world
             .users
@@ -204,20 +217,56 @@ impl StreamingTrace {
                         rng,
                     )))
                 } else {
+                    // Cohorts reshape human session geometry; the
+                    // uniform default passes the historical rate and a
+                    // 1.0 range multiplier (multiplying by 1.0 is a
+                    // bitwise identity on finite f64s).
+                    let (rate, range_mul) = if uniform {
+                        (self.session_rate(), 1.0)
+                    } else {
+                        let c = CohortSpec::cohort_of(user.id.0);
+                        (self.session_rate() * c.session_rate_mul(), c.range_mul())
+                    };
                     UserGen::Human(Box::new(HumanGen::new(
                         user.id,
                         rng,
                         self.topics.len(),
-                        self.session_rate(),
+                        rate,
+                        range_mul,
                     )))
                 }
             })
             .collect();
+        // Flash-crowd queues: per-user time-sorted request lists (empty
+        // vectors when the axis is off — the `flash.is_empty()` fast
+        // path in `step_one` then skips all merge bookkeeping).
+        let n_users = self.world.users.len();
+        let (flash, organic) = if self.flash_events.is_empty() {
+            (Vec::new(), Vec::new())
+        } else {
+            let duration = self.world.duration;
+            let mut flash: Vec<VecDeque<Request>> = vec![VecDeque::new(); n_users];
+            for (u, q) in flash.iter_mut().enumerate() {
+                let mut reqs: Vec<Request> = self
+                    .flash_events
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, e)| e.participates(*i, u as u32))
+                    .map(|(i, e)| e.request_for(i, u as u32, duration))
+                    .collect();
+                // Stable: equal timestamps keep event order.
+                reqs.sort_by(|a, b| a.ts.total_cmp(&b.ts));
+                *q = reqs.into();
+            }
+            (flash, vec![None; n_users])
+        };
         let mut src = ArrivalSource {
             st: self,
             gens,
-            heap: BinaryHeap::with_capacity(self.world.users.len()),
+            heap: BinaryHeap::with_capacity(n_users),
             emitted: 0,
+            flash,
+            organic,
         };
         for u in 0..src.gens.len() {
             if let Some(req) = src.step_user(u) {
@@ -294,6 +343,13 @@ pub struct ArrivalSource<'w> {
     gens: Vec<UserGen>,
     heap: BinaryHeap<MinEntry>,
     emitted: u64,
+    /// Per-user flash-crowd requests, time-sorted (empty unless the
+    /// flash axis is on — the fast-path gate of [`step_one`]).
+    flash: Vec<VecDeque<Request>>,
+    /// One-request organic lookahead per user, used to merge each
+    /// user's generator output with their flash queue in time order
+    /// (empty unless the flash axis is on).
+    organic: Vec<Option<Request>>,
 }
 
 impl ArrivalSource<'_> {
@@ -310,21 +366,13 @@ impl ArrivalSource<'_> {
     /// keys are unique (one heap entry per user), so the emitted
     /// sequence is observably identical either way.
     pub fn next_request(&mut self) -> Option<Request> {
-        let Self { st, gens, heap, emitted } = self;
+        let Self { st, gens, heap, emitted, flash, organic } = self;
         let mut top = heap.peek_mut()?;
         let u = top.req.user.0 as usize;
-        let next = match &mut gens[u] {
-            UserGen::Program(g) => g.step(&st.cfg),
-            UserGen::Human(g) => g.step(st),
-            UserGen::Done => None,
-        };
+        let next = step_one(st, gens, flash, organic, u);
         let req = match next {
             Some(n) => std::mem::replace(&mut *top, MinEntry::by_user(n)).req,
-            None => {
-                // Drop the generator state: finished users cost nothing.
-                gens[u] = UserGen::Done;
-                std::collections::binary_heap::PeekMut::pop(top).req
-            }
+            None => std::collections::binary_heap::PeekMut::pop(top).req,
         };
         *emitted += 1;
         Some(req)
@@ -341,17 +389,53 @@ impl ArrivalSource<'_> {
     }
 
     fn step_user(&mut self, u: usize) -> Option<Request> {
-        let st = self.st;
-        let next = match &mut self.gens[u] {
+        step_one(self.st, &mut self.gens, &mut self.flash, &mut self.organic, u)
+    }
+}
+
+/// Advance user `u`'s merged substream by one request.
+///
+/// With the flash axis off (`flash` empty) this is exactly the
+/// historical generator step.  With it on, the user's organic stream
+/// and their time-sorted flash queue merge in `ts` order through a
+/// one-request organic lookahead; organic wins ties, so a flash
+/// request never delays the request it collided with.  Both inputs are
+/// per-user monotone in `ts`, so the merged output is too — the merge
+/// heap's per-user invariant is preserved.
+fn step_one(
+    st: &StreamingTrace,
+    gens: &mut [UserGen],
+    flash: &mut [VecDeque<Request>],
+    organic: &mut [Option<Request>],
+    u: usize,
+) -> Option<Request> {
+    if flash.is_empty() {
+        let next = match &mut gens[u] {
             UserGen::Program(g) => g.step(&st.cfg),
             UserGen::Human(g) => g.step(st),
             UserGen::Done => None,
         };
         if next.is_none() {
             // Drop the generator state: finished users cost nothing.
-            self.gens[u] = UserGen::Done;
+            gens[u] = UserGen::Done;
         }
-        next
+        return next;
+    }
+    if organic[u].is_none() {
+        organic[u] = match &mut gens[u] {
+            UserGen::Program(g) => g.step(&st.cfg),
+            UserGen::Human(g) => g.step(st),
+            UserGen::Done => None,
+        };
+        if organic[u].is_none() {
+            gens[u] = UserGen::Done;
+        }
+    }
+    match (&organic[u], flash[u].front()) {
+        (Some(o), Some(f)) if f.ts.total_cmp(&o.ts) == Ordering::Less => flash[u].pop_front(),
+        (Some(_), _) => organic[u].take(),
+        (None, Some(_)) => flash[u].pop_front(),
+        (None, None) => None,
     }
 }
 
@@ -394,7 +478,16 @@ impl ProgramGen {
         user: UserId,
         mut rng: Rng,
     ) -> Self {
-        let profile = gen_program_profile(cfg, kind, streams, &mut rng);
+        let mut profile = gen_program_profile(cfg, kind, streams, &mut rng);
+        // Cohort geometry (DESIGN.md §14): applied after the profile
+        // draws, so the mixed profile changes no draw and the uniform
+        // default touches nothing at all.  The drawn phase may exceed a
+        // shrunken period — harmless, the first tick just lands later.
+        if !cfg.cohorts.is_uniform() {
+            let c = CohortSpec::cohort_of(user.0);
+            profile.period *= c.period_mul();
+            profile.window *= c.window_mul();
+        }
         ProgramGen {
             rng,
             user,
@@ -414,6 +507,14 @@ impl ProgramGen {
             let duration = cfg.duration_secs();
             if self.next_tick >= duration {
                 return None;
+            }
+            // Rhythm thinning (DESIGN.md §14): a candidate tick survives
+            // with the rhythm's intensity at its nominal time.  The draw
+            // comes from this user's own substream (per-user replay
+            // holds) and the flat default takes no draw at all.
+            if !cfg.rhythm.is_flat() && self.rng.f64() >= cfg.rhythm.intensity(self.next_tick) {
+                self.next_tick += self.profile.period;
+                continue;
             }
             // Small submission jitter (cron drift, network delay) — this
             // is exactly what the ARIMA predictor has to absorb (§IV-A2).
@@ -467,6 +568,12 @@ struct HumanGen {
     favs: Vec<usize>,
     /// Start time of the next session to synthesize.
     next_session: f64,
+    /// Effective session rate (cohort-adjusted; equals the preset rate
+    /// under the uniform default, so the draws are bit-identical).
+    rate: f64,
+    /// Cohort multiplier on per-request observation ranges (1.0 under
+    /// the uniform default — a bitwise identity on finite f64s).
+    range_mul: f64,
     /// Emission counter: the session buffer's `(ts, seq)` min-order
     /// replays the materialized generator's exact emission order for
     /// equal timestamps.
@@ -475,16 +582,18 @@ struct HumanGen {
 }
 
 impl HumanGen {
-    fn new(user: UserId, mut rng: Rng, n_topics: usize, session_rate: f64) -> Self {
+    fn new(user: UserId, mut rng: Rng, n_topics: usize, rate: f64, range_mul: f64) -> Self {
         // Each user sticks to 1-2 preferred topics.
         let n_fav = rng.int_range(1, 3);
         let favs = rng.sample_indices(n_topics, n_fav);
-        let next_session = rng.exp(session_rate);
+        let next_session = rng.exp(rate);
         HumanGen {
             rng,
             user,
             favs,
             next_session,
+            rate,
+            range_mul,
             seq: 0,
             buf: BinaryHeap::new(),
         }
@@ -514,6 +623,14 @@ impl HumanGen {
     fn gen_session(&mut self, st: &StreamingTrace) {
         let duration = st.cfg.duration_secs();
         let t = self.next_session;
+        // Rhythm thinning (DESIGN.md §14): the candidate session
+        // survives with the rhythm's intensity at its start time; a
+        // thinned session costs one uniform plus the next-session draw,
+        // and the flat default takes no extra draw at all.
+        if !st.cfg.rhythm.is_flat() && self.rng.f64() >= st.cfg.rhythm.intensity(t) {
+            self.next_session = t + self.rng.exp(self.rate);
+            return;
+        }
         let topic = &st.topics[self.favs[self.rng.below(self.favs.len())]];
         let center = &st.world.sites[topic.center_site];
         // Sites within the topic radius — the "horizontal" correlation
@@ -558,7 +675,7 @@ impl HumanGen {
             // Humans browse *recent* data most of the time.
             let lookback = self.rng.exp(1.0 / (3.0 * 86_400.0)).min(session_t.max(60.0));
             let end = (session_t - lookback).max(st.human_range_secs.min(session_t.max(60.0)));
-            let dur = (st.human_range_secs * self.rng.range(0.3, 2.0)).max(60.0);
+            let dur = (st.human_range_secs * self.rng.range(0.3, 2.0)).max(60.0) * self.range_mul;
             let start = (end - dur).max(0.0);
             if end <= start {
                 continue;
@@ -580,7 +697,7 @@ impl HumanGen {
                 break;
             }
         }
-        self.next_session = t + self.rng.exp(st.session_rate());
+        self.next_session = t + self.rng.exp(self.rate);
     }
 }
 
@@ -792,6 +909,42 @@ mod tests {
         assert!(n > 100, "too few requests: {n}");
         assert_eq!(src.emitted() as usize, n);
         assert_eq!(src.active_users(), 0);
+    }
+
+    #[test]
+    fn realism_axes_keep_streaming_materialized_parity() {
+        use crate::trace::realism::{
+            CohortProfile, CohortSpec, FlashCrowdSpec, FlashProfile, RhythmProfile, RhythmSpec,
+        };
+        let mut cfg = presets::tiny();
+        cfg.duration_days = 2.0;
+        let flat_n = generator::generate(&cfg).requests.len();
+        cfg.rhythm = RhythmSpec::preset(RhythmProfile::Weekly);
+        cfg.cohorts = CohortSpec::preset(CohortProfile::Mixed);
+        cfg.flash = FlashCrowdSpec::preset(FlashProfile::Surge);
+        // `generate` re-validates the merged order, so a flash-merge
+        // ordering bug panics inside this call.
+        let trace = generator::generate(&cfg);
+        let st = StreamingTrace::new(&cfg);
+        let streamed: Vec<Request> = st.source().collect();
+        assert_eq!(trace.requests.len(), streamed.len(), "realism-on parity");
+        for (i, (a, b)) in trace.requests.iter().zip(&streamed).enumerate() {
+            assert_request_eq(a, b, i);
+        }
+        // Weekly thinning must strictly reduce organic arrivals; the
+        // surge adds flash requests inside the scheduled windows.
+        let windows = &st.world.flash_windows;
+        let in_window = |ts: f64| windows.iter().any(|&(a, b)| ts >= a && ts <= b);
+        let flash_n = trace.requests.iter().filter(|r| in_window(r.ts)).count();
+        assert!(
+            trace.requests.len() - flash_n.min(trace.requests.len()) < flat_n,
+            "thinning did not reduce organic volume: {} vs {}",
+            trace.requests.len(),
+            flat_n
+        );
+        if !windows.is_empty() {
+            assert!(flash_n > 0, "no requests landed inside flash windows");
+        }
     }
 
     #[test]

@@ -71,7 +71,9 @@ fn check_golden(strategy: Strategy, slug: &str) {
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(&path, report.to_json().to_string_pretty()).unwrap();
         eprintln!(
-            "golden: wrote {} ({})",
+            "golden: wrote {} ({})\n\
+             golden: to commit: `git add rust/tests/fixtures/*.report.json`; \
+             refresh the perf baselines alongside with `make bench-snapshot`",
             path.display(),
             if update {
                 "UPDATE_GOLDEN set — commit the refreshed fixture"

@@ -1,0 +1,199 @@
+//! Workload-realism axes (DESIGN.md §14), end to end through the
+//! public scenario API:
+//!
+//! * **off-parity** — a scenario carrying the explicit
+//!   flat/uniform/none axis values is bit-identical to the legacy
+//!   entry points across the five presets, both topologies and both
+//!   arrival modes (the realism axes must be invisible when off);
+//! * **jobs-parity** — the full rhythm × cohort × flash grid replays
+//!   bitwise identically at every worker count;
+//! * **scale independence** — the flash schedule and the per-user
+//!   cohort assignment are pure functions of (spec, seed) and user id
+//!   respectively: growing the population or reordering the sweep
+//!   never shifts an existing user's behavior.
+
+use obsd::coordinator::{run, run_streaming, SimConfig};
+use obsd::prefetch::Strategy;
+use obsd::scenario::{
+    ArrivalMode, CohortProfile, CohortSpec, FlashCrowdSpec, FlashProfile, RhythmProfile,
+    RhythmSpec, Runner, Scenario, WorkloadSpec,
+};
+use obsd::simnet::TopologyKind;
+use obsd::trace::realism::Cohort;
+use obsd::trace::{generator, presets};
+
+/// (preset, scale, days_factor): shrunk so 5 × 2 × 2 runs stay quick.
+const PRESET_GRID: [(&str, f64, f64); 5] = [
+    ("ooi", 0.05, 0.3),
+    ("gage", 0.05, 0.3),
+    ("heavy", 0.01, 0.3),
+    ("federation", 0.05, 0.3),
+    ("tiny", 1.0, 1.0),
+];
+
+#[test]
+fn realism_off_is_bit_identical_to_legacy_across_the_grid() {
+    let runner = Runner::new();
+    for (obs, scale, days) in PRESET_GRID {
+        let mut cfg = presets::by_name(obs).unwrap();
+        cfg.scale *= scale;
+        cfg.duration_days *= days;
+        let trace = generator::generate(&cfg);
+        for topology in [TopologyKind::VdcStar, TopologyKind::federation_default()] {
+            let legacy_cfg = SimConfig {
+                strategy: Strategy::Hpm,
+                cache_bytes: 4 << 30,
+                topology,
+                ..Default::default()
+            };
+            let mut sc = Scenario::preset(Strategy::Hpm);
+            sc.cache_bytes = 4 << 30;
+            sc.topology = topology;
+            // Explicitly spelled-out "off" values, not just defaults:
+            // the axes must be invisible either way.
+            sc.workload.rhythm = RhythmSpec::flat();
+            sc.workload.cohorts = CohortSpec::uniform();
+            sc.workload.flash = FlashCrowdSpec::none();
+
+            let legacy = run(&trace, &legacy_cfg);
+            let new = runner.run_trace(&trace, &sc);
+            let diffs = legacy.diff_bits(&new.metrics);
+            assert!(
+                diffs.is_empty(),
+                "{obs} on {} (materialized): {diffs:?}",
+                topology.name()
+            );
+            assert!(new.metrics.cohort_stats.is_empty(), "{obs}");
+            assert_eq!(new.metrics.flash_origin_bytes, 0.0, "{obs}");
+
+            let legacy_stream = run_streaming(&cfg, &legacy_cfg);
+            sc.arrival = ArrivalMode::Streaming;
+            sc.workload = WorkloadSpec {
+                observatory: obs.to_string(),
+                scale,
+                days_factor: days,
+                ..WorkloadSpec::default()
+            };
+            let new_stream = runner.run(&sc).unwrap();
+            let diffs = legacy_stream.diff_bits(&new_stream.metrics);
+            assert!(
+                diffs.is_empty(),
+                "{obs} on {} (streaming): {diffs:?}",
+                topology.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn realism_grid_replays_bitwise_across_worker_counts() {
+    // The acceptance gap: the 2 × 2 × 2 realism cube — including the
+    // flash schedule's forked RNG stream and the per-user cohort
+    // hash — must come back bit-identical from the worker pool at
+    // every --jobs value, in serial cell order.
+    let runner = Runner::new();
+    let mut cells = Vec::new();
+    for rhythm in [RhythmSpec::flat(), RhythmSpec::preset(RhythmProfile::Weekly)] {
+        for cohorts in [CohortSpec::uniform(), CohortSpec::preset(CohortProfile::Mixed)] {
+            for flash in [FlashCrowdSpec::none(), FlashCrowdSpec::preset(FlashProfile::Spike)] {
+                let sc = Scenario::builder()
+                    .observatory("tiny")
+                    .days_factor(2.0)
+                    .rhythm(rhythm)
+                    .cohorts(cohorts)
+                    .flash_crowd(flash)
+                    .build()
+                    .unwrap();
+                cells.push(sc);
+            }
+        }
+    }
+    let serial = runner.run_grid(&cells, 1).unwrap();
+    let pooled = runner.run_grid(&cells, 4).unwrap();
+    assert_eq!(serial.len(), 8);
+    for (i, (s, p)) in serial.iter().zip(&pooled).enumerate() {
+        let diffs = s.metrics.diff_bits(&p.metrics);
+        assert!(diffs.is_empty(), "cell {i}: {diffs:?}");
+    }
+    // The all-on cell engages every axis: per-cohort stats conserve
+    // the request total, and the arrival-rate observable is live.
+    let full = &serial[7].metrics;
+    assert_eq!(full.cohort_stats.len(), Cohort::ALL.len());
+    let sum: u64 = full.cohort_stats.iter().map(|c| c.requests).sum();
+    assert_eq!(sum, full.requests_total);
+    assert!(full.peak_minute_arrivals >= 1);
+    // Off cells never carry realism residue.
+    assert!(serial[0].metrics.cohort_stats.is_empty());
+    assert_eq!(serial[0].metrics.flash_origin_bytes, 0.0);
+}
+
+#[test]
+fn flash_schedule_is_independent_of_population_scale() {
+    // The schedule forks its own RNG stream off (seed, tag): replaying
+    // it, or regenerating the trace with 10× the users, must reproduce
+    // the same events in the same order.
+    let spec = FlashCrowdSpec::preset(FlashProfile::Surge);
+    const WEEK: f64 = 7.0 * 86_400.0;
+    let a = spec.schedule(64, WEEK, 42);
+    let b = spec.schedule(64, WEEK, 42);
+    assert!(!a.is_empty(), "surge over a week must schedule events");
+    assert_eq!(a, b, "schedule must replay bit-identically");
+
+    // End to end: the materialized trace's flash windows do not move
+    // when only the user population grows.
+    let mut small = presets::tiny();
+    small.duration_days = 2.0;
+    small.flash = FlashCrowdSpec::preset(FlashProfile::Spike);
+    let mut large = small.clone();
+    large.n_users = small.n_users * 10;
+    let t_small = generator::generate(&small);
+    let t_large = generator::generate(&large);
+    assert_eq!(
+        t_small.flash_windows, t_large.flash_windows,
+        "flash windows shifted with population size"
+    );
+}
+
+#[test]
+fn cohort_assignment_is_a_pure_user_hash() {
+    // Assignment must not depend on seeds, population size, or the
+    // order users are visited — it is a pure function of the user id.
+    let forward: Vec<Cohort> = (0u32..10_000).map(CohortSpec::cohort_of).collect();
+    let mut backward: Vec<Cohort> = (0u32..10_000).rev().map(CohortSpec::cohort_of).collect();
+    backward.reverse();
+    assert_eq!(forward, backward);
+
+    // The mixed profile's target split is 60/30/10: the hash should
+    // land near it over a large population.
+    let mut counts = [0usize; 3];
+    for c in &forward {
+        counts[c.index()] += 1;
+    }
+    let frac = |i: usize| counts[i] as f64 / forward.len() as f64;
+    assert!((frac(0) - 0.6).abs() < 0.03, "interactive {}", frac(0));
+    assert!((frac(1) - 0.3).abs() < 0.03, "bulk {}", frac(1));
+    assert!((frac(2) - 0.1).abs() < 0.03, "campaign {}", frac(2));
+}
+
+#[test]
+fn explicit_off_specs_match_builder_defaults() {
+    // Builder with explicit flat/uniform/none == builder untouched,
+    // through a full run on both arrival modes.
+    let runner = Runner::new();
+    for streaming in [false, true] {
+        let mut plain = Scenario::builder().observatory("tiny");
+        let mut explicit = Scenario::builder()
+            .observatory("tiny")
+            .rhythm(RhythmSpec::flat())
+            .cohorts(CohortSpec::uniform())
+            .flash_crowd(FlashCrowdSpec::none());
+        if streaming {
+            plain = plain.streaming();
+            explicit = explicit.streaming();
+        }
+        let a = runner.run(&plain.build().unwrap()).unwrap().metrics;
+        let b = runner.run(&explicit.build().unwrap()).unwrap().metrics;
+        let diffs = a.diff_bits(&b);
+        assert!(diffs.is_empty(), "streaming={streaming}: {diffs:?}");
+    }
+}

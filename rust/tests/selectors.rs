@@ -1,7 +1,8 @@
 //! Round-trip tests for every CLI-facing selector that parses through
 //! the shared normalize-and-match helper (`util::parse::lookup`):
 //! Strategy, PolicyKind, NetCondition, TopologyKind, Delivery,
-//! ArrivalMode, ModelSpec, FaultSpec and ExpId.
+//! ArrivalMode, ModelSpec, FaultSpec, RhythmSpec, CohortSpec,
+//! FlashCrowdSpec and ExpId.
 //!
 //! Two properties per selector:
 //!
@@ -15,7 +16,10 @@
 use obsd::cache::policy::PolicyKind;
 use obsd::experiments::{ExpId, ALL_IDS, EXTRA_IDS};
 use obsd::prefetch::Strategy;
-use obsd::scenario::{ArrivalMode, CachePlacementSpec, Delivery, FaultProfile, FaultSpec, ModelSpec};
+use obsd::scenario::{
+    ArrivalMode, CachePlacementSpec, CohortProfile, CohortSpec, Delivery, FaultProfile, FaultSpec,
+    FlashCrowdSpec, FlashProfile, ModelSpec, RhythmProfile, RhythmSpec,
+};
 use obsd::simnet::{NetCondition, TopologyKind};
 use obsd::util::parse::normalize;
 
@@ -144,6 +148,61 @@ fn fault_spec_round_trips() {
         "none", "off", "healthy", "flaky-links", "flaky", "weather", "cache-churn", "churn",
         "storm",
     ] {
+        assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
+    }
+}
+
+#[test]
+fn rhythm_round_trips() {
+    for p in [RhythmProfile::Flat, RhythmProfile::Diurnal, RhythmProfile::Weekly] {
+        let spec = RhythmSpec::preset(p);
+        for sp in spellings(spec.name()) {
+            assert_eq!(sp.parse::<RhythmSpec>(), Ok(spec), "{sp}");
+        }
+    }
+    // Off synonyms resolve to the flat (default-off) spec.
+    assert_eq!("off".parse::<RhythmSpec>(), Ok(RhythmSpec::flat()));
+    assert_eq!("daily".parse::<RhythmSpec>(), Ok(RhythmSpec::preset(RhythmProfile::Diurnal)));
+    let msg = "lunar".parse::<RhythmSpec>().unwrap_err().to_string();
+    for alias in ["flat", "off", "none", "diurnal", "daily", "weekly", "week"] {
+        assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
+    }
+}
+
+#[test]
+fn cohort_mix_round_trips() {
+    for p in [CohortProfile::Uniform, CohortProfile::Mixed] {
+        let spec = CohortSpec::preset(p);
+        for sp in spellings(spec.name()) {
+            assert_eq!(sp.parse::<CohortSpec>(), Ok(spec), "{sp}");
+        }
+    }
+    assert_eq!("off".parse::<CohortSpec>(), Ok(CohortSpec::uniform()));
+    assert_eq!(
+        "heterogeneous".parse::<CohortSpec>(),
+        Ok(CohortSpec::preset(CohortProfile::Mixed))
+    );
+    let msg = "castes".parse::<CohortSpec>().unwrap_err().to_string();
+    for alias in ["uniform", "off", "none", "mixed", "cohorts", "heterogeneous"] {
+        assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
+    }
+}
+
+#[test]
+fn flash_crowd_round_trips() {
+    for p in [FlashProfile::None, FlashProfile::Spike, FlashProfile::Surge] {
+        let spec = FlashCrowdSpec::preset(p);
+        for sp in spellings(spec.name()) {
+            assert_eq!(sp.parse::<FlashCrowdSpec>(), Ok(spec), "{sp}");
+        }
+    }
+    assert_eq!("off".parse::<FlashCrowdSpec>(), Ok(FlashCrowdSpec::none()));
+    assert_eq!(
+        "event".parse::<FlashCrowdSpec>(),
+        Ok(FlashCrowdSpec::preset(FlashProfile::Spike))
+    );
+    let msg = "stampede".parse::<FlashCrowdSpec>().unwrap_err().to_string();
+    for alias in ["none", "off", "spike", "event", "surge", "crowd"] {
         assert!(msg.contains(alias), "missing '{alias}' in: {msg}");
     }
 }

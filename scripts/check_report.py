@@ -38,6 +38,17 @@ def check_report(label: str, doc: dict) -> None:
     for key in ("profile", "retry_budget", "retry_base_secs", "retry_cap_secs"):
         assert key in sc["faults"], f"{label}: faults echo missing '{key}'"
     for key in (
+        "observatory",
+        "scale",
+        "days_factor",
+        "n_users",
+        "trace_seed",
+        "rhythm",
+        "cohorts",
+        "flash_crowd",
+    ):
+        assert key in sc["workload"], f"{label}: workload echo missing '{key}'"
+    for key in (
         "requests_total",
         "requests_to_observatory",
         "origin_bytes",
@@ -62,6 +73,9 @@ def check_report(label: str, doc: dict) -> None:
         "degraded_latency",
         "failure_fraction",
         "degraded_latency_secs",
+        "peak_minute_arrivals",
+        "flash_origin_bytes",
+        "cohort_stats",
     ):
         assert key in m, f"{label}: metrics missing '{key}'"
     assert m["requests_total"] > 0, f"{label}: run served no requests"
@@ -86,6 +100,31 @@ def check_report(label: str, doc: dict) -> None:
     if sc["faults"]["profile"] == "none":
         assert m["faults_injected"] == 0, f"{label}: healthy run injected faults"
         assert m["degraded_secs"] == 0, f"{label}: healthy run reports degradation"
+    # Workload-realism accounting (DESIGN.md §14): per-cohort request
+    # counts conserve the run total (when the cohort axis is on), and
+    # flash-window origin attribution never exceeds total origin bytes.
+    assert m["peak_minute_arrivals"] >= 1, f"{label}: no peak-minute bucket recorded"
+    cohort_total = sum(c["requests"] for c in m["cohort_stats"])
+    if m["cohort_stats"]:
+        assert cohort_total == m["requests_total"], (
+            f"{label}: per-cohort requests {cohort_total}"
+            f" != requests_total {m['requests_total']}"
+        )
+        for c in m["cohort_stats"]:
+            assert c["origin_requests"] <= c["requests"], (
+                f"{label}: cohort {c['cohort']} origin_requests"
+                f" {c['origin_requests']} > requests {c['requests']}"
+            )
+    if sc["workload"]["cohorts"] == "uniform":
+        assert not m["cohort_stats"], f"{label}: uniform run carries cohort stats"
+    assert 0 <= m["flash_origin_bytes"] <= m["origin_bytes"] * (1 + 1e-9) + 1e-6, (
+        f"{label}: flash_origin_bytes {m['flash_origin_bytes']}"
+        f" exceeds origin_bytes {m['origin_bytes']}"
+    )
+    if sc["workload"]["flash_crowd"] == "none":
+        assert m["flash_origin_bytes"] == 0, (
+            f"{label}: flash attribution on an eventless run"
+        )
 
 
 def check(path: str) -> None:
